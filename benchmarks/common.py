@@ -1,0 +1,35 @@
+"""Shared benchmark scaffolding: the paper's experimental setup (Sec. V-A)."""
+from __future__ import annotations
+
+import time
+
+from repro.core import agent, dataset, metrics, platform, routing
+from repro.core.routing import RoutingConfig
+
+SERVERS = dataset.build_server_pool(seed=0)
+QUERIES = dataset.build_query_dataset(n=120, seed=0)
+
+# the paper's #filter_server / #filter_tool grid (Tables II & III)
+FILTER_GRID = [(3, 6), (4, 8), (5, 10), (6, 12)]
+
+
+def run(scenario: str, algo: str, cfg: RoutingConfig = RoutingConfig(), seed: int = 1):
+    plat = platform.NetMCPPlatform(SERVERS, scenario=scenario, seed=seed)
+    router = routing.make_router(algo, SERVERS, cfg)
+    ag = agent.Agent(plat, router)
+    t0 = time.time()
+    recs = ag.run_benchmark(QUERIES, ticks_per_query=60)
+    wall = time.time() - t0
+    rep = metrics.evaluate(recs, SERVERS)
+    return rep, wall
+
+
+def csv_line(name: str, wall_s: float, rep, extra: str = "") -> str:
+    us = 1e6 * wall_s / max(rep.n_tasks, 1)
+    derived = (
+        f"SSR={rep.ssr:.1f}% EE={rep.ee:.1f}% AL={rep.al_ms:.1f}ms "
+        f"SL={rep.sl_ms:.0f}ms FR={rep.fr:.1f}% TSR={rep.tsr:.1f}%"
+    )
+    if extra:
+        derived += " " + extra
+    return f"{name},{us:.1f},{derived}"

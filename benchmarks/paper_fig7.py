@@ -1,0 +1,25 @@
+"""Fig. 7: four routing algorithms under ideal network conditions.
+
+Paper claims reproduced: RAG ~20% SSR (no preprocessing); the three
+prediction-equipped algorithms reach ~90%+; RerankRAG pays >20 s selection
+latency; PRAG/SONAR keep SL low.
+"""
+from benchmarks.common import csv_line, run
+
+
+def main(print_fn=print) -> list:
+    rows = []
+    for algo in ["rag", "rerank_rag", "prag", "sonar"]:
+        rep, wall = run("ideal", algo)
+        rows.append((algo, rep))
+        print_fn(csv_line(f"fig7_ideal_{algo}", wall, rep))
+    # assertions mirroring the figure
+    by = {a: r for a, r in rows}
+    assert by["rag"].ssr < 40.0 < by["prag"].ssr
+    assert by["rerank_rag"].sl_ms > 20_000
+    assert by["prag"].sl_ms < 1_000 and by["sonar"].sl_ms < 1_000
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,30 @@
+"""Table II: PRAG vs SONAR under the hybrid scenario across the
+(#filter_server, #filter_tool) grid, alpha = beta = 0.5.
+
+Paper claims reproduced: PRAG routes to the semantically top-ranked server
+(down ~60% of the time and retried) -> FR ~90%+ and AL ~900 ms; SONAR's
+network term steers to a healthy replica -> FR = 0, AL ~22 ms, at matched
+SSR.
+"""
+from benchmarks.common import FILTER_GRID, csv_line, run
+from repro.core.routing import RoutingConfig
+
+
+def main(print_fn=print) -> list:
+    rows = []
+    for s, t in FILTER_GRID:
+        cfg = RoutingConfig(top_s=s, top_k=t, alpha=0.5, beta=0.5)
+        for algo in ["prag", "sonar"]:
+            rep, wall = run("hybrid", algo, cfg)
+            rows.append(((s, t), algo, rep))
+            print_fn(csv_line(f"table2_hybrid_s{s}t{t}_{algo}", wall, rep))
+    for (s, t), algo, rep in rows:
+        if algo == "sonar":
+            assert rep.fr == 0.0, (s, t, rep.fr)
+        else:
+            assert rep.fr > 50.0, (s, t, rep.fr)
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,65 @@
+"""§Roofline report: aggregate the dry-run JSONs into the per-(arch x shape)
+three-term table and pick the hillclimb cells.
+
+Reads experiments/dryrun/*.json (written by repro.launch.dryrun); emits one
+CSV row per cell:  name, us_per_call(=roofline step time), derived terms.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+
+def load_cells(dryrun_dir: str = "experiments/dryrun_baseline") -> list:
+    cells = []
+    for path in sorted(glob.glob(os.path.join(dryrun_dir, "*.json"))):
+        with open(path) as f:
+            r = json.load(f)
+        if r.get("ok") and "roofline" in r:
+            cells.append(r)
+    return cells
+
+
+def main(print_fn=print, dryrun_dir: str = "experiments/dryrun_baseline") -> list:
+    cells = load_cells(dryrun_dir)
+    if not cells:
+        print_fn("roofline_table,0,no dry-run artifacts found (run repro.launch.dryrun --all)")
+        return []
+    for r in cells:
+        roof = r["roofline"]
+        name = f"roofline_{r['arch']}__{r['shape']}__{r['mesh']}"
+        us = roof["step_time_s"] * 1e6
+        derived = (
+            f"compute={roof['t_compute_s']*1e3:.1f}ms "
+            f"memory={roof['t_memory_s']*1e3:.1f}ms "
+            f"collective={roof['t_collective_s']*1e3:.1f}ms "
+            f"bottleneck={roof['bottleneck']} "
+            f"useful={roof['useful_flops_ratio']:.2f} "
+            f"roofline_frac={roof['roofline_fraction']:.3f}"
+        )
+        print_fn(f"{name},{us:.0f},{derived}")
+    for r in load_cells("experiments/hillclimb"):
+        roof = r["roofline"]
+        name = f"roofline_OPT_{r['arch']}__{r['shape']}__{r['layout']}"
+        us = roof["step_time_s"] * 1e6
+        print_fn(
+            f"{name},{us:.0f},compute={roof['t_compute_s']*1e3:.1f}ms "
+            f"memory={roof['t_memory_s']*1e3:.1f}ms "
+            f"collective={roof['t_collective_s']*1e3:.1f}ms "
+            f"bottleneck={roof['bottleneck']}"
+        )
+    # hillclimb candidates
+    train_cells = [c for c in cells if c["shape"].startswith("train")]
+    if train_cells:
+        worst = min(cells, key=lambda c: c["roofline"]["roofline_fraction"])
+        coll = max(cells, key=lambda c: c["roofline"]["t_collective_s"])
+        print_fn(
+            f"roofline_summary,0,worst_frac={worst['arch']}/{worst['shape']} "
+            f"most_collective_bound={coll['arch']}/{coll['shape']} n_cells={len(cells)}"
+        )
+    return cells
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,26 @@
+"""Benchmark harness — one module per paper table/figure (+ fleet & roofline).
+
+Prints ``name,us_per_call,derived`` CSV rows.
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+
+def main() -> None:
+    from benchmarks import fleet_sim, paper_fig7, paper_fig9, paper_table2, paper_table3, roofline
+
+    print("name,us_per_call,derived")
+    t0 = time.time()
+    paper_fig7.main()
+    paper_table2.main()
+    paper_table3.main()
+    paper_fig9.main()
+    fleet_sim.main()
+    roofline.main()
+    print(f"# total wall {time.time()-t0:.1f}s", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

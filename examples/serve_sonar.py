@@ -1,0 +1,16 @@
+"""Serve a small model behind the SONAR gateway (deliverable (b): serving).
+
+Four replicas of a reduced internlm2 host real ServeEngines (continuous
+batching, prefill + KV-cache decode); the gateway routes each request by
+fused capability-BM25 x network-QoS, under a hybrid network scenario where
+one replica is mostly down and another has 350 ms latency.
+
+Run:  PYTHONPATH=src python examples/serve_sonar.py
+"""
+import sys
+
+from repro.launch.serve import main
+
+if __name__ == "__main__":
+    sys.argv = [sys.argv[0], "--n-requests", "16", "--scenario", "hybrid"]
+    main()

@@ -1,0 +1,32 @@
+"""End-to-end fault-tolerant training (deliverable (b): training driver).
+
+Trains a reduced xLSTM on the synthetic pipeline while a simulated 4-pod
+fleet degrades: pod 1 starts straggling at 1/3 of the run and pod 2 crashes
+at 1/2.  The SONAR QoS scorer (paper Eq. 7, applied to step-time telemetry)
+flags both, the elastic planner shrinks the fleet, training checkpoints and
+resumes.  Loss must decrease end-to-end.
+
+Run:  PYTHONPATH=src python examples/train_fault_tolerant.py
+"""
+import tempfile
+
+from repro import configs
+from repro.launch.train import train_loop
+
+if __name__ == "__main__":
+    cfg = configs.get_reduced("xlstm-125m")
+    with tempfile.TemporaryDirectory() as ckpt_dir:
+        losses = train_loop(
+            cfg,
+            steps=60,
+            global_batch=8,
+            seq_len=64,
+            ckpt_dir=ckpt_dir,
+            ckpt_every=20,
+            n_pods=4,
+            inject_failures=True,
+            grad_compression_bits=8,   # int8 gradient compression enabled
+        )
+    print(f"\nloss: {losses[0]:.3f} -> {losses[-1]:.3f}")
+    assert losses[-1] < losses[0], "training did not make progress"
+    print("fault-tolerant training example: OK")

@@ -1,0 +1,77 @@
+"""Adaptive alpha/beta control (paper Sec. VI "Advanced joint optimization").
+
+The paper fixes alpha/beta per deployment mode and names adaptive trade-off
+learning as future work.  This module implements the minimal production
+version: a feedback controller on the observed outcome stream —
+
+  * every failure (offline pick) is evidence the network term was
+    under-weighted  -> multiplicative beta increase;
+  * long stretches of healthy low-latency picks let semantics recover
+    weight -> slow additive alpha recovery toward the configured target;
+  * latency above `latency_slo_ms` counts as a soft miss (half pressure).
+
+The controller state is a single scalar (beta in [beta_min, beta_max]);
+it wraps any SonarRouter via `AdaptiveSonarRouter`, which re-derives the
+RoutingConfig each decision — the agent/platform loop is unchanged.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence
+
+import numpy as np
+
+from repro.core.routing import Decision, RoutingConfig, SonarRouter
+
+
+@dataclasses.dataclass
+class AdaptiveConfig:
+    target_alpha: float = 0.5        # semantic weight the controller relaxes to
+    beta_min: float = 0.2
+    beta_max: float = 0.9
+    failure_gain: float = 1.5        # multiplicative beta bump on a failure
+    soft_gain: float = 1.2           # on an SLO miss
+    recovery: float = 0.02           # additive beta decay per healthy pick
+    latency_slo_ms: float = 200.0
+
+
+class AdaptiveSonarRouter:
+    """SONAR with outcome-feedback weight adaptation."""
+
+    def __init__(self, servers: Sequence, cfg: RoutingConfig = RoutingConfig(),
+                 adapt: AdaptiveConfig = AdaptiveConfig()):
+        self.adapt = adapt
+        self.base_cfg = cfg
+        self.beta = 1.0 - adapt.target_alpha
+        self._router = SonarRouter(servers, cfg)
+        self.name = "AdaptiveSONAR"
+        self.history: list = []
+
+    # Router protocol -------------------------------------------------------
+    @property
+    def cfg(self) -> RoutingConfig:
+        return dataclasses.replace(
+            self.base_cfg, alpha=1.0 - self.beta, beta=self.beta
+        )
+
+    @property
+    def index(self):
+        return self._router.index
+
+    def select(self, query: str, latency_hist: Optional[np.ndarray] = None) -> Decision:
+        self._router.cfg = self.cfg
+        return self._router.select(query, latency_hist)
+
+    # Feedback --------------------------------------------------------------
+    def observe(self, latency_ms: float, online: bool):
+        a = self.adapt
+        if not online:
+            self.beta = min(self.beta * a.failure_gain, a.beta_max)
+        elif latency_ms > a.latency_slo_ms:
+            self.beta = min(self.beta * a.soft_gain, a.beta_max)
+        else:
+            target_beta = 1.0 - a.target_alpha
+            self.beta = max(self.beta - a.recovery, min(a.beta_min, target_beta))
+            if self.beta < target_beta:
+                self.beta = min(self.beta + 2 * a.recovery, target_beta)
+        self.history.append(self.beta)

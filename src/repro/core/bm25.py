@@ -1,0 +1,102 @@
+"""Vectorized BM25 (Okapi) retrieval (paper Eq. 1-5).
+
+The corpus (server or tool descriptions) is compiled once into a dense
+IDF-weighted term matrix W [n_docs, vocab] such that scoring a query reduces
+to a (sparse-query) matmul:
+
+    score(q, d) = sum_{t in q} IDF(t) * tf(t,d)*(k1+1) / (tf(t,d) + k1*norm_d)
+                = W[d] @ qcount
+
+This makes stage-1 (server-level, Eq. 1-2) and stage-2 (tool-level, Eq. 3-4)
+retrieval MXU-friendly; `repro.kernels.bm25_score` provides the tiled Pallas
+kernel and this module is its oracle.
+
+Softmax normalization of tool scores (Eq. 5) lives here as `softmax_expertise`.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+_TOKEN_RE = re.compile(r"[a-z0-9]+")
+
+K1: float = 1.5
+B: float = 0.75
+
+
+def tokenize(text: str) -> list[str]:
+    return _TOKEN_RE.findall(text.lower())
+
+
+@dataclasses.dataclass
+class Bm25Corpus:
+    """Compiled corpus: vocabulary + IDF-weighted TF matrix."""
+
+    vocab: dict  # token -> id
+    weights: np.ndarray  # [n_docs, vocab] float32, W in the docstring
+    n_docs: int
+
+    def encode_query(self, text: str) -> np.ndarray:
+        """Query -> term-count vector [vocab] (OOV terms are dropped, which
+        matches BM25 semantics: unseen terms contribute zero)."""
+        q = np.zeros((len(self.vocab),), dtype=np.float32)
+        for tok in tokenize(text):
+            j = self.vocab.get(tok)
+            if j is not None:
+                q[j] += 1.0
+        return q
+
+    def encode_queries(self, texts: Sequence[str]) -> np.ndarray:
+        return np.stack([self.encode_query(t) for t in texts], axis=0)
+
+
+def build_corpus(docs: Sequence[str], k1: float = K1, b: float = B) -> Bm25Corpus:
+    """Compile documents into a Bm25Corpus (numpy; called once per pool)."""
+    tokenized = [tokenize(d) for d in docs]
+    vocab: dict = {}
+    for toks in tokenized:
+        for t in toks:
+            if t not in vocab:
+                vocab[t] = len(vocab)
+    n_docs, n_vocab = len(docs), max(len(vocab), 1)
+
+    tf = np.zeros((n_docs, n_vocab), dtype=np.float32)
+    for i, toks in enumerate(tokenized):
+        for t in toks:
+            tf[i, vocab[t]] += 1.0
+
+    doc_len = tf.sum(axis=1)
+    avg_len = max(doc_len.mean(), 1e-6)
+    df = (tf > 0).sum(axis=0).astype(np.float32)
+    idf = np.log((n_docs - df + 0.5) / (df + 0.5) + 1.0)
+
+    norm = k1 * (1.0 - b + b * doc_len / avg_len)  # [n_docs]
+    weights = idf[None, :] * tf * (k1 + 1.0) / (tf + norm[:, None])
+    weights = np.where(tf > 0, weights, 0.0).astype(np.float32)
+    return Bm25Corpus(vocab=vocab, weights=weights, n_docs=n_docs)
+
+
+def bm25_scores(weights: jnp.ndarray, qcounts: jnp.ndarray) -> jnp.ndarray:
+    """Score queries against the corpus: [n_docs, V] x [n_q, V] -> [n_q, n_docs].
+
+    Pure-jnp oracle for kernels/bm25_score.  Query term *counts* saturate via
+    the standard query-side BM25 (count clipped at 1 works for short queries;
+    we keep raw counts to match rank-bm25 behaviour for repeated terms).
+    """
+    return qcounts.astype(jnp.float32) @ weights.astype(jnp.float32).T
+
+
+def topk(scores: jnp.ndarray, k: int):
+    """Top-k along the last axis -> (values, indices), ties broken by index."""
+    k = min(k, scores.shape[-1])
+    return jax.lax.top_k(scores, k)
+
+
+def softmax_expertise(scores: jnp.ndarray, axis: int = -1) -> jnp.ndarray:
+    """Eq. 5: softmax normalization of BM25 scores into expertise C(i)."""
+    return jax.nn.softmax(scores, axis=axis)

@@ -1,0 +1,220 @@
+"""Network-state latency synthesis (NetMCP Module 2).
+
+Generates per-server historical latency traces for the five canonical
+network states of the paper (Sec. III-A, Fig. 4):
+
+  1. fluctuating  — sinusoidal load rhythm (amplitude/period/phase) + noise
+  2. outage       — intermittent downtime intervals (prob/duration/severity)
+  3. high_latency — elevated stable baseline (e.g. 350 ms, low variance)
+  4. high_jitter  — moderate baseline, high Gaussian variance (e.g. 100±70 ms)
+  5. ideal        — low stable baseline (e.g. 30±5 ms)
+
+Everything is pure JAX and vmappable over servers so a fleet of thousands of
+replicas can be synthesized in one call.  Traces are "historical": the
+platform retrieves the prefix up to any time index t (paper: "NetMCP can
+retrieve the latency sequence up to any specified time index").
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# Default simulation tick: one sample per 10 simulated seconds => a 24h trace
+# is 8640 samples.  Matches the paper's "24h" horizon in Fig. 4.
+DEFAULT_DT_S: float = 10.0
+DEFAULT_HORIZON_S: float = 24 * 3600.0
+
+# Latency (ms) above which a server counts as offline (paper Sec. III-A FR
+# metric and Sec. IV-C hard clamp).
+OFFLINE_MS: float = 1000.0
+# Latency above which a sample counts as an outage-risk event (Sec. IV-C).
+OUTAGE_RISK_MS: float = 800.0
+
+
+@dataclasses.dataclass(frozen=True)
+class LatencyProfile:
+    """Configuration of one server's network behaviour (paper Fig. 4)."""
+
+    base_latency_ms: float = 30.0
+    std_dev_ms: float = 5.0
+    # Periodic oscillation (fluctuating state); amplitude 0 disables.
+    amplitude_ms: float = 0.0
+    period_s: float = 3600.0
+    phase_shift: float = 0.0
+    # Intermittent outages; probability 0 disables.  `probability` is the
+    # stationary fraction of time spent in outage; durations are drawn
+    # uniformly from [duration_min_s, duration_max_s]; during an outage the
+    # latency is pinned at `severity_ms` (paper: "latency fixed at 1000 ms
+    # during downtime").
+    outage_probability: float = 0.0
+    outage_duration_min_s: float = 30 * 60.0
+    outage_duration_max_s: float = 100 * 60.0
+    outage_severity_ms: float = 1000.0
+    # Floor so noise never produces negative latency.
+    floor_ms: float = 1.0
+
+    def as_array(self) -> np.ndarray:
+        """Pack into a flat float vector (vmappable batch of profiles)."""
+        return np.array(
+            [
+                self.base_latency_ms,
+                self.std_dev_ms,
+                self.amplitude_ms,
+                self.period_s,
+                self.phase_shift,
+                self.outage_probability,
+                self.outage_duration_min_s,
+                self.outage_duration_max_s,
+                self.outage_severity_ms,
+                self.floor_ms,
+            ],
+            dtype=np.float32,
+        )
+
+
+N_PROFILE_FIELDS = 10
+
+
+# ---------------------------------------------------------------------------
+# Named profile constructors for the five canonical states (paper defaults).
+# ---------------------------------------------------------------------------
+
+def ideal_profile() -> LatencyProfile:
+    return LatencyProfile(base_latency_ms=30.0, std_dev_ms=5.0)
+
+
+def high_latency_profile() -> LatencyProfile:
+    return LatencyProfile(base_latency_ms=350.0, std_dev_ms=20.0)
+
+
+def high_jitter_profile() -> LatencyProfile:
+    return LatencyProfile(base_latency_ms=100.0, std_dev_ms=70.0)
+
+
+def fluctuating_profile(
+    base_ms: float = 150.0,
+    amplitude_ms: float = 200.0,
+    period_s: float = 3600.0,
+    phase: float = 0.0,
+    std_ms: float = 20.0,
+) -> LatencyProfile:
+    return LatencyProfile(
+        base_latency_ms=base_ms,
+        std_dev_ms=std_ms,
+        amplitude_ms=amplitude_ms,
+        period_s=period_s,
+        phase_shift=phase,
+    )
+
+
+def outage_profile(
+    base_ms: float = 30.0,
+    std_ms: float = 5.0,
+    probability: float = 0.5,
+    duration_min_s: float = 30 * 60.0,
+    duration_max_s: float = 100 * 60.0,
+    severity_ms: float = 1000.0,
+) -> LatencyProfile:
+    return LatencyProfile(
+        base_latency_ms=base_ms,
+        std_dev_ms=std_ms,
+        outage_probability=probability,
+        outage_duration_min_s=duration_min_s,
+        outage_duration_max_s=duration_max_s,
+        outage_severity_ms=severity_ms,
+    )
+
+
+STATE_FACTORIES = {
+    "ideal": ideal_profile,
+    "high_latency": high_latency_profile,
+    "high_jitter": high_jitter_profile,
+    "fluctuating": fluctuating_profile,
+    "outage": outage_profile,
+}
+
+
+# ---------------------------------------------------------------------------
+# Trace synthesis
+# ---------------------------------------------------------------------------
+
+def _outage_mask(key: jax.Array, prof: jax.Array, n_steps: int, dt_s: float):
+    """Two-state semi-Markov on/off process with the stationary ON-fraction
+    equal to `probability` and uniform outage durations.
+
+    The per-step hazard of *entering* an outage is chosen so that
+
+        E[outage time] / E[cycle time] == probability.
+    """
+    probability = prof[5]
+    dur_min = jnp.maximum(prof[6] / dt_s, 1.0)
+    dur_max = jnp.maximum(prof[7] / dt_s, dur_min)
+    mean_dur = 0.5 * (dur_min + dur_max)
+    # stationary fraction p = mean_dur / (mean_dur + mean_up)
+    #  => mean_up = mean_dur * (1 - p) / p ;  hazard = 1 / mean_up
+    p = jnp.clip(probability, 1e-6, 1.0 - 1e-6)
+    hazard = p / (mean_dur * (1.0 - p))
+    hazard = jnp.where(probability <= 0.0, 0.0, jnp.clip(hazard, 0.0, 1.0))
+
+    def step(carry, key_t):
+        remaining = carry
+        k_enter, k_dur = jax.random.split(key_t)
+        start = (remaining <= 0.0) & (jax.random.uniform(k_enter) < hazard)
+        new_dur = jax.random.uniform(k_dur, minval=dur_min, maxval=dur_max)
+        remaining = jnp.where(start, new_dur, jnp.maximum(remaining - 1.0, 0.0))
+        return remaining, remaining > 0.0
+
+    keys = jax.random.split(key, n_steps)
+    _, mask = jax.lax.scan(step, jnp.float32(0.0), keys)
+    return mask
+
+
+def generate_trace(
+    key: jax.Array,
+    profile: jax.Array,
+    n_steps: int,
+    dt_s: float = DEFAULT_DT_S,
+) -> jax.Array:
+    """Synthesize one latency trace [n_steps] (ms) from a packed profile."""
+    t = jnp.arange(n_steps, dtype=jnp.float32) * dt_s
+    base, std = profile[0], profile[1]
+    amplitude, period, phase = profile[2], profile[3], profile[4]
+    severity, floor = profile[8], profile[9]
+
+    k_noise, k_outage = jax.random.split(key)
+    seasonal = amplitude * jnp.sin(2.0 * jnp.pi * t / jnp.maximum(period, 1.0) + phase)
+    noise = std * jax.random.normal(k_noise, (n_steps,), dtype=jnp.float32)
+    lat = base + seasonal + noise
+
+    mask = _outage_mask(k_outage, profile, n_steps, dt_s)
+    lat = jnp.where(mask, severity, lat)
+    return jnp.maximum(lat, floor)
+
+
+def generate_traces(
+    key: jax.Array,
+    profiles: jax.Array,
+    n_steps: int,
+    dt_s: float = DEFAULT_DT_S,
+) -> jax.Array:
+    """Synthesize traces for a fleet: profiles [n, N_PROFILE_FIELDS] ->
+    latencies [n, n_steps] in ms."""
+    keys = jax.random.split(key, profiles.shape[0])
+    return jax.vmap(lambda k, p: generate_trace(k, p, n_steps, dt_s))(keys, profiles)
+
+
+generate_traces_jit = jax.jit(generate_traces, static_argnums=(2, 3))
+
+
+def pack_profiles(profiles: list[LatencyProfile]) -> np.ndarray:
+    return np.stack([p.as_array() for p in profiles], axis=0)
+
+
+def trace_horizon_steps(
+    horizon_s: float = DEFAULT_HORIZON_S, dt_s: float = DEFAULT_DT_S
+) -> int:
+    return int(round(horizon_s / dt_s))

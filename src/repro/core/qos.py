@@ -1,0 +1,145 @@
+"""SONAR network-QoS scoring (paper Sec. IV-C, Eq. 6-7).
+
+Maps a latency history L_m = [l_1 .. l_t] to a network score N in [-1, 1]:
+
+    N = base * (1 - w1*P_high) * (1 - w2*P_trend)
+             * (1 - w3*P_outage) * (1 - w4*P_instab)
+    N = -1                       if l_t >= 1000 ms (server treated offline)
+
+with
+    base      — smooth score that is 1.0 inside the ideal band [20, 50] ms
+                (of the EWMA latency) and decays beyond it,
+    P_high    — EWMA-predicted latency's proportional excess over the ideal
+                upper threshold,
+    P_trend   — positive recent latency slope,
+    P_outage  — fraction of recent samples above 800 ms,
+    P_instab  — coefficient of variation of the recent window.
+
+This module is the pure-jnp oracle; `repro.kernels.qos_score` provides the
+fused Pallas TPU kernel with identical semantics (tested allclose).
+
+All functions are vectorized over the leading server axis: L [n, T] -> N [n].
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.latency import OFFLINE_MS, OUTAGE_RISK_MS
+
+
+@dataclasses.dataclass(frozen=True)
+class QosParams:
+    """Weights/thresholds of Eq. 7.  Defaults follow the paper's narrative:
+    ideal band 20-50 ms, 800 ms outage-risk events, 1000 ms offline clamp."""
+
+    ideal_low_ms: float = 20.0
+    ideal_high_ms: float = 50.0
+    # decay scale (ms) of the base score beyond the ideal band
+    base_scale_ms: float = 200.0
+    ewma_alpha: float = 0.3          # EWMA smoothing factor (recent-weighted)
+    window: int = 32                 # "recent" window for trend/outage/CV
+    trend_scale_ms: float = 50.0     # slope (ms per window) mapping to P=1
+    cv_low: float = 0.10             # CV below this is "stable"
+    cv_scale: float = 0.50           # CV excess mapping to P=1
+    w_high: float = 0.6              # w1
+    w_trend: float = 0.3             # w2
+    w_outage: float = 0.8            # w3
+    w_instab: float = 0.3            # w4
+    offline_ms: float = OFFLINE_MS
+    outage_risk_ms: float = OUTAGE_RISK_MS
+
+    def as_array(self) -> jnp.ndarray:
+        return jnp.array(
+            [
+                self.ideal_low_ms, self.ideal_high_ms, self.base_scale_ms,
+                self.ewma_alpha, float(self.window), self.trend_scale_ms,
+                self.cv_low, self.cv_scale,
+                self.w_high, self.w_trend, self.w_outage, self.w_instab,
+                self.offline_ms, self.outage_risk_ms,
+            ],
+            dtype=jnp.float32,
+        )
+
+
+DEFAULT_QOS = QosParams()
+
+
+def ewma(lat: jnp.ndarray, alpha: float) -> jnp.ndarray:
+    """Exponentially weighted moving average along the last axis -> last value.
+
+    Computed in closed form (weights alpha*(1-alpha)^k over reversed time plus
+    the (1-alpha)^T carry of the first sample) so it is O(T) with no scan —
+    this is the formulation the Pallas kernel reuses.
+    """
+    T = lat.shape[-1]
+    k = jnp.arange(T - 1, -1, -1, dtype=jnp.float32)  # age of each sample
+    w = alpha * (1.0 - alpha) ** k
+    w = w.at[0].add((1.0 - alpha) ** T)  # initial-state mass -> oldest sample
+    return jnp.sum(lat * w, axis=-1)
+
+
+def _window_mask(T: int, window: int) -> jnp.ndarray:
+    idx = jnp.arange(T, dtype=jnp.float32)
+    return (idx >= T - window).astype(jnp.float32)
+
+
+def base_score(ewma_ms: jnp.ndarray, p: QosParams = DEFAULT_QOS) -> jnp.ndarray:
+    """1.0 inside [ideal_low, ideal_high]; smooth decay outside ("improved
+    smoothing function that penalizes values beyond the ideal range")."""
+    over = jnp.maximum(ewma_ms - p.ideal_high_ms, 0.0)
+    under = jnp.maximum(p.ideal_low_ms - ewma_ms, 0.0)
+    excess = over + under
+    return 1.0 / (1.0 + excess / p.base_scale_ms)
+
+
+def penalties(lat: jnp.ndarray, p: QosParams = DEFAULT_QOS):
+    """Compute (ewma, P_high, P_trend, P_outage, P_instab) for L [..., T]."""
+    T = lat.shape[-1]
+    m = _window_mask(T, p.window)
+    n_w = jnp.sum(m)
+
+    ew = ewma(lat, p.ewma_alpha)
+
+    # P_high — proportional excess of the EWMA prediction over the ideal top.
+    p_high = jnp.clip((ew - p.ideal_high_ms) / (4.0 * p.ideal_high_ms), 0.0, 1.0)
+
+    # P_trend — least-squares slope over the recent window (ms per window),
+    # positive part only.  Closed-form simple linear regression.
+    idx = jnp.arange(T, dtype=jnp.float32)
+    x = (idx - (T - 1) + (n_w - 1) / 2.0) * m            # centered positions
+    sum_x2 = jnp.sum(x * x)
+    slope = jnp.sum(lat * x, axis=-1) / jnp.maximum(sum_x2, 1e-6)
+    p_trend = jnp.clip(slope * n_w / p.trend_scale_ms, 0.0, 1.0)
+
+    # P_outage — fraction of recent samples above the outage-risk threshold.
+    risky = (lat > p.outage_risk_ms).astype(jnp.float32) * m
+    p_outage = jnp.clip(2.0 * jnp.sum(risky, axis=-1) / jnp.maximum(n_w, 1.0), 0.0, 1.0)
+
+    # P_instab — coefficient of variation of the recent window.
+    mean_w = jnp.sum(lat * m, axis=-1) / jnp.maximum(n_w, 1.0)
+    var_w = jnp.sum((lat - mean_w[..., None]) ** 2 * m, axis=-1) / jnp.maximum(n_w, 1.0)
+    cv = jnp.sqrt(jnp.maximum(var_w, 0.0)) / jnp.maximum(mean_w, 1e-6)
+    p_instab = jnp.clip((cv - p.cv_low) / p.cv_scale, 0.0, 1.0)
+
+    return ew, p_high, p_trend, p_outage, p_instab
+
+
+def network_score(lat: jnp.ndarray, p: QosParams = DEFAULT_QOS) -> jnp.ndarray:
+    """Eq. 7 + offline clamp.  lat [..., T] -> N [...] in [-1, 1]."""
+    ew, p_high, p_trend, p_outage, p_instab = penalties(lat, p)
+    base = base_score(ew, p)
+    score = (
+        base
+        * (1.0 - p.w_high * p_high)
+        * (1.0 - p.w_trend * p_trend)
+        * (1.0 - p.w_outage * p_outage)
+        * (1.0 - p.w_instab * p_instab)
+    )
+    offline = lat[..., -1] >= p.offline_ms
+    return jnp.where(offline, -1.0, score)
+
+
+network_score_jit = jax.jit(network_score, static_argnums=(1,))

@@ -1,0 +1,111 @@
+"""Step-scoped checkpoint/restore for arbitrary pytrees (no orbax offline).
+
+Layout:  <dir>/step_<N>/
+            manifest.json        — step, leaf paths, shapes/dtypes, extras
+            shard_<i>.npz        — leaf arrays, chunked ~512 MB per file
+
+Writes are atomic (tmp dir + rename) so a mid-write failure never corrupts
+the latest checkpoint; `latest_step` skips incomplete directories.  This is
+the restart path of the fault-tolerance story (ft/failure.py injects the
+faults; launch/train.py resumes).
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+from typing import Any, Optional
+
+import jax
+import ml_dtypes
+import numpy as np
+
+_SHARD_BYTES = 512 * 1024 * 1024
+
+# npz cannot hold ml_dtypes (bfloat16 etc.); store them as raw uint16/uint8
+# views and reconstruct from the restore template's dtype.
+_VIEW = {np.dtype(ml_dtypes.bfloat16): np.uint16}
+
+
+def _to_storable(arr: np.ndarray) -> np.ndarray:
+    view = _VIEW.get(arr.dtype)
+    return arr.view(view) if view is not None else arr
+
+
+def _from_storable(arr: np.ndarray, like_dtype) -> np.ndarray:
+    like_dtype = np.dtype(like_dtype)
+    if like_dtype in _VIEW and arr.dtype == _VIEW[like_dtype]:
+        return arr.view(like_dtype)
+    return arr
+
+
+def _flatten(tree) -> list:
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    return [(jax.tree_util.keystr(path), leaf) for path, leaf in flat]
+
+
+def save(ckpt_dir: str, step: int, tree: Any, extras: Optional[dict] = None) -> str:
+    """Serialize `tree` to <ckpt_dir>/step_<step>; returns the final path."""
+    final = os.path.join(ckpt_dir, f"step_{step}")
+    tmp = final + ".tmp"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp, exist_ok=True)
+
+    leaves = _flatten(tree)
+    shards: list = [[]]
+    size = 0
+    for name, leaf in leaves:
+        arr = _to_storable(np.asarray(leaf))
+        if size + arr.nbytes > _SHARD_BYTES and shards[-1]:
+            shards.append([])
+            size = 0
+        shards[-1].append((name, arr))
+        size += arr.nbytes
+
+    manifest = {"step": step, "extras": extras or {}, "shards": []}
+    for i, shard in enumerate(shards):
+        fname = f"shard_{i}.npz"
+        np.savez(os.path.join(tmp, fname), **{n: a for n, a in shard})
+        manifest["shards"].append({"file": fname, "leaves": [n for n, _ in shard]})
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)
+    return final
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    if not os.path.isdir(ckpt_dir):
+        return None
+    steps = []
+    for name in os.listdir(ckpt_dir):
+        if name.startswith("step_") and not name.endswith(".tmp"):
+            if os.path.exists(os.path.join(ckpt_dir, name, "manifest.json")):
+                steps.append(int(name.split("_")[1]))
+    return max(steps) if steps else None
+
+
+def restore(ckpt_dir: str, step: int, like: Any) -> tuple:
+    """Restore into the structure of `like` (shape/dtype template).
+    Returns (tree, extras)."""
+    path = os.path.join(ckpt_dir, f"step_{step}")
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+
+    by_name: dict = {}
+    for shard in manifest["shards"]:
+        data = np.load(os.path.join(path, shard["file"]))
+        for n in shard["leaves"]:
+            by_name[n] = data[n]
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(like)
+    out = []
+    for p, leaf in flat:
+        name = jax.tree_util.keystr(p)
+        arr = _from_storable(by_name[name], leaf.dtype)
+        assert tuple(arr.shape) == tuple(leaf.shape), (name, arr.shape, leaf.shape)
+        out.append(arr)
+    return jax.tree_util.tree_unflatten(treedef, out), manifest["extras"]

@@ -1,0 +1,113 @@
+"""Fault tolerance + straggler mitigation for multi-pod training fleets.
+
+This is the paper's technique applied to the training substrate (DESIGN.md
+§2): a pod's per-step wall-times are a latency sequence exactly like an MCP
+server's request latencies, so SONAR's QoS scorer (EWMA / trend / outage /
+instability, Eq. 7) runs UNCHANGED on fleet telemetry:
+
+  * FleetMonitor keeps a [n_pods, T] step-time ring buffer (feed-forward
+    recording, Sec. III-B) and scores every pod each step;
+  * pods scoring below `exclude_threshold` (persistent stragglers) or
+    clamped offline (crash / hang, score == -1) are excluded;
+  * ElasticPlan rebuilds the data-parallel mesh over the surviving pods
+    and rescales per-pod batch so the global batch is preserved;
+  * the training driver restores from the last checkpoint when the mesh
+    shrinks (launch/train.py wires it together).
+
+FailureInjector provides the controlled chaos for tests/examples: crash,
+straggle (x-factor slowdown), flap.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+from repro.core.qos import QosParams, network_score
+
+
+def step_time_qos(base_step_s: float) -> QosParams:
+    ms = base_step_s * 1000.0
+    return QosParams(
+        ideal_low_ms=0.0,
+        ideal_high_ms=1.5 * ms,
+        base_scale_ms=2.0 * ms,
+        outage_risk_ms=4.0 * ms,
+        offline_ms=10.0 * ms,
+        window=16,
+    )
+
+
+class FleetMonitor:
+    def __init__(self, n_pods: int, base_step_s: float, history: int = 64,
+                 exclude_threshold: float = 0.25):
+        self.n_pods = n_pods
+        self.qos = step_time_qos(base_step_s)
+        self.history = history
+        self.exclude_threshold = exclude_threshold
+        init_ms = base_step_s * 1000.0
+        self.telemetry = np.full((n_pods, history), init_ms, dtype=np.float32)
+
+    def record(self, step_times_s: np.ndarray):
+        """Feed-forward: append one step's per-pod wall time (seconds)."""
+        self.telemetry = np.roll(self.telemetry, -1, axis=1)
+        self.telemetry[:, -1] = np.asarray(step_times_s, np.float32) * 1000.0
+
+    def scores(self) -> np.ndarray:
+        return np.asarray(network_score(self.telemetry, self.qos))
+
+    def healthy_pods(self) -> np.ndarray:
+        s = self.scores()
+        return np.where(s >= self.exclude_threshold)[0]
+
+
+@dataclasses.dataclass
+class ElasticPlan:
+    """Remapping decision after exclusions."""
+    healthy: list
+    n_pods: int
+    per_pod_batch: int
+    changed: bool
+
+
+def plan_elastic(
+    monitor: FleetMonitor, global_batch: int, prev_healthy: Optional[list] = None
+) -> ElasticPlan:
+    healthy = list(monitor.healthy_pods())
+    if not healthy:                       # never kill the whole fleet
+        healthy = [int(np.argmax(monitor.scores()))]
+    n = len(healthy)
+    per_pod = max(global_batch // n, 1)
+    changed = prev_healthy is not None and set(healthy) != set(prev_healthy)
+    return ElasticPlan(healthy=healthy, n_pods=n, per_pod_batch=per_pod, changed=changed)
+
+
+class FailureInjector:
+    """Deterministic chaos for tests: schedules per-pod behaviours."""
+
+    def __init__(self, n_pods: int, base_step_s: float, seed: int = 0):
+        self.n_pods = n_pods
+        self.base = base_step_s
+        self.rng = np.random.default_rng(seed)
+        self.crashed: set = set()
+        self.straggling: dict = {}       # pod -> slowdown factor
+
+    def crash(self, pod: int):
+        self.crashed.add(pod)
+
+    def straggle(self, pod: int, factor: float = 5.0):
+        self.straggling[pod] = factor
+
+    def heal(self, pod: int):
+        self.crashed.discard(pod)
+        self.straggling.pop(pod, None)
+
+    def step_times(self) -> np.ndarray:
+        """Simulated per-pod wall time for one training step (seconds)."""
+        t = self.base * (1.0 + 0.05 * self.rng.standard_normal(self.n_pods))
+        for pod, f in self.straggling.items():
+            t[pod] *= f
+        for pod in self.crashed:
+            t[pod] = self.base * 1000.0   # hang: far beyond offline threshold
+        return np.maximum(t, 1e-4)

@@ -1,0 +1,108 @@
+"""Flash-decode Pallas kernel (TPU target): one new token vs a long KV cache.
+
+    q [B, Hkv, G, D]  (G = Hq/Hkv query heads grouped per kv head)
+    k,v [B, Hkv, S, D]
+    lengths [B, 1] int32 (valid cache length per sequence)
+ ->  out [B, Hkv, G, D]
+
+decode_32k / long_500k lower this op: it is memory-bound (arith intensity
+~1 FLOP/byte on K/V), so the kernel's job is to stream K/V through VMEM in
+BK-row chunks exactly once with online softmax in f32 scratch.  Grouping G
+query heads per kv head turns the per-chunk score into a [G, BK] MXU matmul
+instead of G vector dots (the GQA-native layout — this is the TPU
+adaptation of GPU flash-decode's warp-per-head split).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BK = 512
+NEG_INF = -1e30
+
+
+def _decode_kernel(
+    len_ref, q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref,
+    *, sm_scale: float, bk: int, n_kv: int,
+):
+    ik = pl.program_id(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    valid_len = len_ref[0, 0]
+
+    # Skip chunks entirely beyond the valid cache prefix.
+    @pl.when(ik * bk < valid_len)
+    def _body():
+        q = q_ref[0, 0].astype(jnp.float32)           # [G, D]
+        k = k_ref[0, 0].astype(jnp.float32)           # [bk, D]
+        v = v_ref[0, 0].astype(jnp.float32)           # [bk, D]
+
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        ) * sm_scale                                   # [G, bk]
+
+        col = ik * bk + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        mask = col < valid_len
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_ref[:, 0:1]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.where(mask, jnp.exp(s - m_new), 0.0)
+
+        l_ref[...] = alpha * l_ref[...] + jnp.sum(p, axis=-1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )
+        m_ref[...] = jnp.broadcast_to(m_new, m_ref.shape)
+
+    @pl.when(ik == n_kv - 1)
+    def _store():
+        l = l_ref[:, 0:1]
+        o_ref[0, 0] = (acc_ref[...] / jnp.maximum(l, 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("sm_scale", "bk", "interpret"))
+def decode_attention_pallas(
+    q: jax.Array,        # [B, Hkv, G, D]
+    k: jax.Array,        # [B, Hkv, S_pad, D]
+    v: jax.Array,        # [B, Hkv, S_pad, D]
+    lengths: jax.Array,  # [B, 1] int32
+    *,
+    sm_scale: float,
+    bk: int = DEFAULT_BK,
+    interpret: bool = False,
+) -> jax.Array:
+    B, Hkv, G, D = q.shape
+    _, _, S, _ = k.shape
+    assert S % bk == 0
+    grid = (B, Hkv, S // bk)
+
+    kernel = functools.partial(_decode_kernel, sm_scale=sm_scale, bk=bk, n_kv=grid[2])
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda b, h, j: (b, 0)),
+            pl.BlockSpec((1, 1, G, D), lambda b, h, j: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, bk, D), lambda b, h, j: (b, h, j, 0)),
+            pl.BlockSpec((1, 1, bk, D), lambda b, h, j: (b, h, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, D), lambda b, h, j: (b, h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((G, D), jnp.float32),
+            pltpu.VMEM((G, 128), jnp.float32),
+            pltpu.VMEM((G, 128), jnp.float32),
+        ],
+        interpret=interpret,
+    )(lengths, q, k, v)

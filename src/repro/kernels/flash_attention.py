@@ -1,0 +1,132 @@
+"""Causal/GQA flash attention Pallas kernel (TPU target).
+
+Online-softmax tiled attention for the prefill/train hot spot:
+
+    q [B, Hq, S, D], k/v [B, Hkv, S, D]  ->  out [B, Hq, S, D]
+
+Grid (B, Hq, n_q_blocks, n_kv_blocks); the kv axis is the innermost
+(sequential on TPU) so VMEM scratch (acc/m/l) carries the running softmax
+state across kv blocks.  Causal blocks strictly above the diagonal are
+skipped via pl.when (on TPU this prunes ~half the MXU work; the roofline
+compute term of the jnp fallback counts the full square, see DESIGN.md).
+
+Block shapes: BQ=256 q rows x BK=512 kv rows x D=head_dim lanes.  With
+D=128: q-block 128 KB + k/v blocks 2x256 KB + acc 128 KB (f32) ~ 1 MB of
+VMEM — comfortably inside v5e's ~16 MB with double buffering.
+
+GQA is expressed in the k/v index_map (h -> h * Hkv // Hq) so no KV
+replication is materialized.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BQ = 256
+DEFAULT_BK = 512
+NEG_INF = -1e30
+
+
+def _flash_kernel(
+    q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref,
+    *, sm_scale: float, causal: bool, bq: int, bk: int, n_kv: int, seq_len: int,
+):
+    iq, ik = pl.program_id(2), pl.program_id(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    def _body():
+        q = q_ref[0, 0].astype(jnp.float32)          # [bq, D]
+        k = k_ref[0, 0].astype(jnp.float32)          # [bk, D]
+        v = v_ref[0, 0].astype(jnp.float32)          # [bk, D]
+
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        ) * sm_scale                                  # [bq, bk]
+
+        col = ik * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        mask = col < seq_len                          # kv padding mask
+        if causal:
+            row = iq * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+            mask = mask & (col <= row)
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_ref[:, 0:1]                        # [bq, 1]
+        m_cur = jnp.max(s, axis=-1, keepdims=True)    # [bq, 1]
+        m_new = jnp.maximum(m_prev, m_cur)
+        alpha = jnp.exp(m_prev - m_new)               # [bq, 1]
+        p = jnp.exp(s - m_new)                        # [bq, bk]
+        # fully-masked rows (none for causal w/ aligned blocks) stay zero:
+        p = jnp.where(mask, p, 0.0)
+
+        l_ref[...] = alpha * l_ref[...] + jnp.sum(p, axis=-1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )
+        m_ref[...] = jnp.broadcast_to(m_new, m_ref.shape)
+
+    if causal:
+        # skip blocks strictly above the diagonal
+        pl.when((ik * bk) <= (iq * bq + bq - 1))(_body)
+    else:
+        _body()
+
+    @pl.when(ik == n_kv - 1)
+    def _store():
+        l = l_ref[:, 0:1]
+        o_ref[0, 0] = (acc_ref[...] / jnp.maximum(l, 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("sm_scale", "causal", "bq", "bk", "seq_len", "interpret"),
+)
+def flash_attention_pallas(
+    q: jax.Array,  # [B, Hq, S_pad, D]
+    k: jax.Array,  # [B, Hkv, S_pad, D]
+    v: jax.Array,  # [B, Hkv, S_pad, D]
+    *,
+    sm_scale: float,
+    causal: bool = True,
+    bq: int = DEFAULT_BQ,
+    bk: int = DEFAULT_BK,
+    seq_len: int | None = None,   # true kv length (<= S_pad)
+    interpret: bool = False,
+) -> jax.Array:
+    B, Hq, S, D = q.shape
+    _, Hkv, Sk, _ = k.shape
+    assert S % bq == 0 and Sk % bk == 0 and Hq % Hkv == 0
+    seq_len = Sk if seq_len is None else seq_len
+    grid = (B, Hq, S // bq, Sk // bk)
+    group = Hq // Hkv
+
+    kernel = functools.partial(
+        _flash_kernel,
+        sm_scale=sm_scale, causal=causal, bq=bq, bk=bk,
+        n_kv=grid[3], seq_len=seq_len,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, D), lambda b, h, i, j: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, bk, D), lambda b, h, i, j: (b, h // group, j, 0)),
+            pl.BlockSpec((1, 1, bk, D), lambda b, h, i, j: (b, h // group, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, D), lambda b, h, i, j: (b, h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, D), jnp.float32),
+            pltpu.VMEM((bq, 128), jnp.float32),
+            pltpu.VMEM((bq, 128), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

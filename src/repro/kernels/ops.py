@@ -1,0 +1,140 @@
+"""Public jit'd entry points for the Pallas kernels.
+
+These wrappers own all padding/alignment bookkeeping so callers (the SONAR
+router, the serving attention layers) use natural shapes.  On CPU (this
+container) the kernels execute in interpret mode; on TPU they compile to
+Mosaic.  `interpret=None` auto-selects by backend.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.qos import DEFAULT_QOS, QosParams
+from repro.kernels import bm25_score as _bm25
+from repro.kernels import decode_attention as _dec
+from repro.kernels import flash_attention as _fa
+from repro.kernels import qos_score as _qos
+
+
+def _auto_interpret(interpret: Optional[bool]) -> bool:
+    if interpret is None:
+        return jax.default_backend() != "tpu"
+    return interpret
+
+
+def _pad_to(x: np.ndarray | jax.Array, axis: int, mult: int, value=0.0):
+    size = x.shape[axis]
+    pad = (-size) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths, constant_values=value)
+
+
+# ---------------------------------------------------------------------------
+# QoS
+# ---------------------------------------------------------------------------
+
+def qos_scores(
+    lat: jax.Array,                    # [n_servers, T] ms
+    params: QosParams = DEFAULT_QOS,
+    *,
+    interpret: Optional[bool] = None,
+) -> jax.Array:
+    """Fleet QoS scores N [n_servers]; exact match of core.qos.network_score."""
+    n, T = lat.shape
+    lat = jnp.asarray(lat, jnp.float32)
+    # left-pad time to the 128-lane boundary with copies of the oldest sample
+    T_pad = int(np.ceil(T / 128) * 128)
+    if T_pad != T:
+        lat = jnp.concatenate(
+            [jnp.repeat(lat[:, :1], T_pad - T, axis=1), lat], axis=1
+        )
+    # pad servers to the tile boundary (pad rows score garbage; sliced off)
+    lat = _pad_to(lat, 0, _qos.SERVER_TILE, value=30.0)
+    out = _qos.qos_score_pallas(
+        lat, p=params, T=T, interpret=_auto_interpret(interpret)
+    )
+    return out[:n]
+
+
+# ---------------------------------------------------------------------------
+# BM25
+# ---------------------------------------------------------------------------
+
+def bm25_scores(
+    qcounts: jax.Array,  # [n_q, V]
+    weights: jax.Array,  # [n_docs, V]
+    *,
+    interpret: Optional[bool] = None,
+) -> jax.Array:
+    """scores [n_q, n_docs]; exact match of core.bm25.bm25_scores.
+    Zero padding is exact for BM25 (absent terms contribute zero)."""
+    n_q, V = qcounts.shape
+    n_d = weights.shape[0]
+    q = _pad_to(_pad_to(jnp.asarray(qcounts, jnp.float32), 1, _bm25.BV), 0, _bm25.BQ)
+    w = _pad_to(_pad_to(jnp.asarray(weights, jnp.float32), 1, _bm25.BV), 0, _bm25.BD)
+    out = _bm25.bm25_scores_pallas(q, w, interpret=_auto_interpret(interpret))
+    return out[:n_q, :n_d]
+
+
+# ---------------------------------------------------------------------------
+# Attention
+# ---------------------------------------------------------------------------
+
+def flash_attention(
+    q: jax.Array,  # [B, Hq, S, D]
+    k: jax.Array,  # [B, Hkv, Sk, D]
+    v: jax.Array,
+    *,
+    sm_scale: Optional[float] = None,
+    causal: bool = True,
+    bq: int = _fa.DEFAULT_BQ,
+    bk: int = _fa.DEFAULT_BK,
+    interpret: Optional[bool] = None,
+) -> jax.Array:
+    B, Hq, S, D = q.shape
+    Sk = k.shape[2]
+    sm_scale = sm_scale if sm_scale is not None else 1.0 / float(np.sqrt(D))
+    bq = min(bq, int(np.ceil(S / 8) * 8))
+    bk = min(bk, int(np.ceil(Sk / 8) * 8))
+    qp = _pad_to(q, 2, bq)
+    kp = _pad_to(k, 2, bk)
+    vp = _pad_to(v, 2, bk)
+    out = _fa.flash_attention_pallas(
+        qp, kp, vp,
+        sm_scale=sm_scale, causal=causal, bq=bq, bk=bk, seq_len=Sk,
+        interpret=_auto_interpret(interpret),
+    )
+    return out[:, :, :S]
+
+
+def decode_attention(
+    q: jax.Array,        # [B, Hq, D] — one new token per sequence
+    k: jax.Array,        # [B, Hkv, S, D]
+    v: jax.Array,
+    lengths: jax.Array,  # [B] int32 valid cache lengths
+    *,
+    sm_scale: Optional[float] = None,
+    bk: int = _dec.DEFAULT_BK,
+    interpret: Optional[bool] = None,
+) -> jax.Array:
+    B, Hq, D = q.shape
+    Hkv, S = k.shape[1], k.shape[2]
+    G = Hq // Hkv
+    sm_scale = sm_scale if sm_scale is not None else 1.0 / float(np.sqrt(D))
+    bk = min(bk, int(np.ceil(S / 8) * 8))
+    qg = q.reshape(B, Hkv, G, D)
+    kp = _pad_to(k, 2, bk)
+    vp = _pad_to(v, 2, bk)
+    out = _dec.decode_attention_pallas(
+        qg, kp, vp, lengths.reshape(B, 1).astype(jnp.int32),
+        sm_scale=sm_scale, bk=bk, interpret=_auto_interpret(interpret),
+    )
+    return out.reshape(B, Hq, D)

@@ -1,0 +1,71 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each function is the semantic ground truth; kernel tests sweep shapes and
+dtypes and assert allclose against these (see tests/test_kernels.py).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.bm25 import bm25_scores as bm25_ref          # noqa: F401
+from repro.core.qos import QosParams, network_score as qos_ref  # noqa: F401
+
+
+def repeat_kv(k: jax.Array, n_rep: int) -> jax.Array:
+    """[B, Hkv, S, D] -> [B, Hkv*n_rep, S, D] (GQA expansion)."""
+    if n_rep == 1:
+        return k
+    B, H, S, D = k.shape
+    return jnp.broadcast_to(k[:, :, None], (B, H, n_rep, S, D)).reshape(
+        B, H * n_rep, S, D
+    )
+
+
+def mha_ref(
+    q: jax.Array,  # [B, Hq, S, D]
+    k: jax.Array,  # [B, Hkv, Sk, D]
+    v: jax.Array,  # [B, Hkv, Sk, D]
+    *,
+    sm_scale: float,
+    causal: bool = True,
+    seq_len: int | None = None,
+) -> jax.Array:
+    """Naive full-softmax GQA attention (f32 math)."""
+    B, Hq, S, D = q.shape
+    Hkv, Sk = k.shape[1], k.shape[2]
+    k = repeat_kv(k, Hq // Hkv)
+    v = repeat_kv(v, Hq // Hkv)
+    s = jnp.einsum(
+        "bhqd,bhkd->bhqk", q.astype(jnp.float32), k.astype(jnp.float32)
+    ) * sm_scale
+    mask = jnp.ones((S, Sk), dtype=bool)
+    if causal:
+        mask &= jnp.tril(jnp.ones((S, Sk), dtype=bool), k=Sk - S)
+    if seq_len is not None:
+        mask &= (jnp.arange(Sk) < seq_len)[None, :]
+    s = jnp.where(mask[None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhqk,bhkd->bhqd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def decode_ref(
+    q: jax.Array,        # [B, Hkv, G, D]
+    k: jax.Array,        # [B, Hkv, S, D]
+    v: jax.Array,        # [B, Hkv, S, D]
+    lengths: jax.Array,  # [B, 1] int32
+    *,
+    sm_scale: float,
+) -> jax.Array:
+    """Naive single-token GQA attention over a variable-length cache."""
+    s = jnp.einsum(
+        "bhgd,bhkd->bhgk", q.astype(jnp.float32), k.astype(jnp.float32)
+    ) * sm_scale
+    S = k.shape[2]
+    mask = jnp.arange(S)[None, :] < lengths  # [B, S]
+    s = jnp.where(mask[:, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgk,bhkd->bhgd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)

@@ -1,0 +1,304 @@
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", "")
+)
+
+"""Multi-pod dry-run: prove the distribution config is coherent.
+
+For every (architecture x input-shape x mesh) cell:
+  jax.jit(step).lower(**ShapeDtypeStruct inputs).compile()
+must succeed on the 16x16 single-pod mesh AND the 2x16x16 multi-pod mesh,
+and we record memory_analysis / cost_analysis / collective schedule for
+EXPERIMENTS.md §Dry-run and §Roofline.
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen2-7b --shape train_4k
+  python -m repro.launch.dryrun --all [--multi-pod] [--out experiments/dryrun]
+"""
+import argparse
+import json
+import time
+import traceback
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import configs
+from repro.configs import SHAPES, get_config, shape_supported
+from repro.launch import hlo_analysis, specs
+from repro.launch.mesh import make_production_mesh, mesh_chips
+from repro.models.api import get_model
+from repro.models.config import ModelConfig
+from repro.nn.sharding import LAYOUTS, LayoutReport, logical_to_spec, tree_shardings
+from repro.training.optimizer import AdamW, Adafactor
+from repro.training.train_step import make_train_step
+
+BIG_MODEL_PARAMS = 20e9     # above this, dry-run trains with Adafactor
+
+
+def pick_layout(shape_name: str, override: Optional[str] = None) -> str:
+    if override:
+        return override
+    kind = SHAPES[shape_name].kind
+    if kind == "train":
+        return "train"
+    if shape_name.startswith("long"):
+        return "long"
+    return "serve"
+
+
+def _axes_is_leaf(x):
+    return isinstance(x, tuple) and all(isinstance(i, (str, type(None))) for i in x)
+
+
+def _batch_shardings(batch_specs: dict, mesh, rules, report):
+    out = {}
+    for k, v in batch_specs.items():
+        names = specs.BATCH_AXES[k]
+        out[k] = jax.sharding.NamedSharding(
+            mesh, logical_to_spec(names, v.shape, mesh, rules, report, k)
+        )
+    return out
+
+
+def analysis_cfg(cfg: ModelConfig, n_periods: int) -> ModelConfig:
+    """Depth-reduced, fully-unrolled variant for FLOP/byte/collective
+    accounting (cost_analysis counts while-loop bodies once — measured;
+    see ModelConfig.analysis_unroll)."""
+    import dataclasses as dc
+
+    repl = dict(
+        analysis_unroll=True,
+        scan_layers=False,
+        n_layers=cfg.first_k_dense + n_periods * len(cfg.block_pattern),
+    )
+    if cfg.is_encoder_decoder:
+        repl["n_encoder_layers"] = n_periods
+    return dc.replace(cfg, **repl)
+
+
+def build_lowerable(cfg: ModelConfig, shape_name: str, mesh, layout: str,
+                    report: LayoutReport, opt_params_total: Optional[float] = None):
+    """Returns (fn, args, in_shardings, donate) ready for jit().lower()."""
+    shape = SHAPES[shape_name]
+    model = get_model(cfg)
+    params_abs, axes = model.init_params(jax.random.PRNGKey(0), abstract=True)
+    rules = LAYOUTS[layout]()
+    p_shard = tree_shardings(axes, params_abs, mesh, rules, report)
+
+    if shape.kind == "train":
+        total = opt_params_total or cfg.param_counts()["total"]
+        opt = Adafactor() if total > BIG_MODEL_PARAMS else AdamW()
+        if isinstance(opt, AdamW):
+            opt_state = opt.init_abstract(params_abs)
+            o_shard = type(opt_state)(
+                step=jax.sharding.NamedSharding(mesh, jax.sharding.PartitionSpec()),
+                m=p_shard, v=p_shard,
+            )
+        else:
+            opt_state = jax.eval_shape(lambda p: opt.init(p), params_abs)
+            # factored moments: replicate (tiny) — vr/vc are O(n+m)
+            rep = jax.sharding.NamedSharding(mesh, jax.sharding.PartitionSpec())
+            o_shard = jax.tree.map(lambda _: rep, opt_state)
+        step_fn = make_train_step(model, opt)
+        batch = specs.train_specs(cfg, shape)
+        b_shard = _batch_shardings(batch, mesh, rules, report)
+        return (
+            step_fn,
+            (params_abs, opt_state, batch),
+            (p_shard, o_shard, b_shard),
+            (0, 1),
+        )
+
+    if shape.kind == "prefill":
+        batch = specs.prefill_specs(cfg, shape)
+        b_shard = _batch_shardings(batch, mesh, rules, report)
+        return (model.prefill, (params_abs, batch), (p_shard, b_shard), ())
+
+    # decode
+    d = specs.decode_specs(cfg, shape)
+    cache_axes = model.cache_axes()
+    c_shard = tree_shardings(cache_axes, d["cache"], mesh, rules, report)
+    tok_shard = jax.sharding.NamedSharding(
+        mesh, logical_to_spec(("batch", None), d["tokens"].shape, mesh, rules, report, "tokens")
+    )
+    len_shard = jax.sharding.NamedSharding(mesh, jax.sharding.PartitionSpec())
+    fn = model.decode_step
+    return (
+        fn,
+        (params_abs, d["cache"], d["tokens"], d["cache_len"]),
+        (p_shard, c_shard, tok_shard, len_shard),
+        (1,),
+    )
+
+
+def _compile(cfg, shape_name, mesh, layout, report, opt_total=None):
+    from repro.nn.sharding import activation_sharding
+
+    fn, args, in_shardings, donate = build_lowerable(
+        cfg, shape_name, mesh, layout, report, opt_params_total=opt_total
+    )
+    with mesh, activation_sharding(mesh, LAYOUTS[layout]()):
+        jitted = jax.jit(fn, in_shardings=in_shardings, donate_argnums=donate)
+        compiled = jitted.lower(*args).compile()
+    return compiled
+
+
+def _measure_terms(cfg_a, shape_name, mesh, layout, chips, opt_total):
+    """One depth-reduced unrolled compile -> (flops, hbm_bytes, coll_bytes)
+    per device, with the sLSTM sequential correction applied."""
+    rep = LayoutReport()
+    compiled = _compile(cfg_a, shape_name, mesh, layout, rep, opt_total)
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):
+        cost = cost[0]
+    coll = hlo_analysis.parse_collectives(compiled.as_text())
+    cf, cb = hlo_analysis.slstm_correction(cfg_a, SHAPES[shape_name], chips)
+    return (
+        float(cost.get("flops", 0.0)) + cf,
+        float(cost.get("bytes accessed", 0.0)) + cb,
+        coll.total_bytes,
+        coll,
+    )
+
+
+def roofline_terms(cfg, shape_name, mesh, layout, chips, verbose=True):
+    """Depth-1/depth-2 measurement + linear-in-depth extrapolation.
+
+    Per-layer costs (FLOPs, bytes, collectives, optimizer, grads) are
+    exactly linear in the number of layer groups; embed/head/loss are the
+    intercept.  full = d1 + (nG - 1) * (d2 - d1)."""
+    from repro.models.lm import _n_groups
+
+    total = cfg.param_counts()["total"]
+    nG = _n_groups(cfg)
+    c1 = analysis_cfg(cfg, 1)
+    c2 = analysis_cfg(cfg, 2)
+    f1 = _measure_terms(c1, shape_name, mesh, layout, chips, total)
+    f2 = _measure_terms(c2, shape_name, mesh, layout, chips, total)
+    flops = f1[0] + (nG - 1) * (f2[0] - f1[0])
+    hbm = f1[1] + (nG - 1) * (f2[1] - f1[1])
+    coll = f1[2] + (nG - 1) * (f2[2] - f1[2])
+    by_kind = {
+        k: f1[3].bytes_by_kind.get(k, 0.0)
+        + (nG - 1) * (f2[3].bytes_by_kind.get(k, 0.0) - f1[3].bytes_by_kind.get(k, 0.0))
+        for k in set(f1[3].bytes_by_kind) | set(f2[3].bytes_by_kind)
+    }
+    counts = {
+        k: f1[3].count_by_kind.get(k, 0)
+        + (nG - 1) * (f2[3].count_by_kind.get(k, 0) - f1[3].count_by_kind.get(k, 0))
+        for k in set(f1[3].count_by_kind) | set(f2[3].count_by_kind)
+    }
+    stats = hlo_analysis.CollectiveStats(bytes_by_kind=by_kind, count_by_kind=counts)
+    return hlo_analysis.Roofline(
+        flops=max(flops, 0.0),
+        hbm_bytes=max(hbm, 0.0),
+        collective_bytes=max(coll, 0.0),
+        chips=chips,
+        collectives=stats,
+        model_flops=hlo_analysis.model_flops(cfg, SHAPES[shape_name]),
+    )
+
+
+def run_cell(
+    arch: str,
+    shape_name: str,
+    multi_pod: bool = False,
+    layout: Optional[str] = None,
+    cfg: Optional[ModelConfig] = None,
+    save_dir: Optional[str] = None,
+    verbose: bool = True,
+    with_roofline: bool = True,
+) -> dict:
+    cfg = cfg or get_config(arch)
+    layout = pick_layout(shape_name, layout)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh_chips(mesh)
+    report = LayoutReport()
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    tag = f"{arch}__{shape_name}__{mesh_name}__{layout}"
+    result: dict = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_name,
+        "layout": layout, "chips": chips, "ok": False,
+    }
+    t0 = time.time()
+    try:
+        # 1) full scanned model: the lower+compile gate + memory analysis
+        compiled = _compile(cfg, shape_name, mesh, layout, report)
+        t_compile = time.time() - t0
+        try:
+            mem_str = str(compiled.memory_analysis())
+        except Exception as e:  # pragma: no cover
+            mem_str = f"unavailable: {e}"
+        result.update(ok=True, t_compile_s=t_compile, memory_analysis=mem_str,
+                      layout_drops=report.dropped[:50],
+                      n_layout_drops=len(report.dropped))
+
+        # 2) roofline terms via depth-extrapolated unrolled measurement
+        if with_roofline:
+            roof = roofline_terms(cfg, shape_name, mesh, layout, chips)
+            result["roofline"] = roof.to_dict()
+            if verbose:
+                r = roof
+                print(
+                    f"[OK] {tag}: compute={r.t_compute*1e3:.2f}ms memory={r.t_memory*1e3:.2f}ms "
+                    f"collective={r.t_collective*1e3:.2f}ms bottleneck={r.bottleneck} "
+                    f"useful={r.useful_flops_ratio:.2f} roofline_frac={r.roofline_fraction:.3f} "
+                    f"(compile {t_compile:.0f}s, total {time.time()-t0:.0f}s)"
+                )
+                print(f"     memory_analysis: {mem_str}")
+        elif verbose:
+            print(f"[OK] {tag}: compiled in {t_compile:.0f}s; {mem_str}")
+    except Exception as e:
+        result["error"] = f"{type(e).__name__}: {e}"
+        result["traceback"] = traceback.format_exc()[-2000:]
+        if verbose:
+            print(f"[FAIL] {tag}: {result['error']}")
+    if save_dir:
+        os.makedirs(save_dir, exist_ok=True)
+        with open(os.path.join(save_dir, tag + ".json"), "w") as f:
+            json.dump(result, f, indent=1)
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", type=str, default=None)
+    ap.add_argument("--shape", type=str, default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--layout", type=str, default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", type=str, default="experiments/dryrun")
+    ap.add_argument("--include-skipped", action="store_true")
+    ap.add_argument("--no-roofline", action="store_true",
+                    help="compile-gate only (used for the multi-pod pass)")
+    args = ap.parse_args()
+
+    if args.all:
+        cells = configs.cells()
+        results = []
+        for arch, shape in cells:
+            results.append(
+                run_cell(arch, shape, multi_pod=args.multi_pod, layout=args.layout,
+                         save_dir=args.out, with_roofline=not args.no_roofline)
+            )
+        n_ok = sum(r["ok"] for r in results)
+        print(f"\n{n_ok}/{len(results)} cells OK")
+        raise SystemExit(0 if n_ok == len(results) else 1)
+
+    assert args.arch and args.shape, "--arch and --shape (or --all)"
+    if not shape_supported(args.arch, args.shape):
+        print(f"[SKIP] {args.arch} x {args.shape}: unsupported per DESIGN.md §6")
+        raise SystemExit(0)
+    r = run_cell(args.arch, args.shape, multi_pod=args.multi_pod,
+                 layout=args.layout, save_dir=args.out,
+                 with_roofline=not args.no_roofline)
+    raise SystemExit(0 if r["ok"] else 1)
+
+
+if __name__ == "__main__":
+    main()

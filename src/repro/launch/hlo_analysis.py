@@ -1,0 +1,234 @@
+"""Roofline-term extraction from compiled dry-run artifacts.
+
+compute  = HLO_FLOPs / (chips * PEAK_FLOPS)
+memory   = HLO_bytes / (chips * HBM_BW)
+collective = collective_bytes / (chips * LINK_BW)
+
+HLO_FLOPs / HLO_bytes come from compiled.cost_analysis() (XLA reports the
+whole-module totals of the SPMD-partitioned per-device program; we treat
+them as per-device and multiply by `chips` for the global numerator, which
+cancels in the per-chip time).  Collective bytes are parsed from the HLO
+text with ring-model weights (per-device bytes moved):
+
+    all-gather       : result bytes  x 1      ((g-1)/g ~ 1)
+    all-reduce       : result bytes  x 2      (reduce-scatter + all-gather)
+    reduce-scatter   : operand bytes x 1
+    all-to-all       : operand bytes x 1
+    collective-permute: operand bytes x 1
+
+Hardware constants (TPU v5e, per brief): 197 TFLOP/s bf16, 819 GB/s HBM,
+~50 GB/s/link ICI.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Optional
+
+PEAK_FLOPS = 197e12        # bf16 / chip
+HBM_BW = 819e9             # bytes/s / chip
+LINK_BW = 50e9             # bytes/s / link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COLLECTIVE_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(.*?)\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\((.*?)\)",
+)
+
+_WEIGHT = {
+    "all-gather": ("result", 1.0),
+    "all-reduce": ("result", 2.0),
+    "reduce-scatter": ("operand", 1.0),
+    "all-to-all": ("operand", 1.0),
+    "collective-permute": ("operand", 1.0),
+}
+
+
+def _shapes_bytes(text: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(text):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    bytes_by_kind: dict
+    count_by_kind: dict
+
+    @property
+    def total_bytes(self) -> float:
+        return float(sum(self.bytes_by_kind.values()))
+
+
+def parse_collectives(hlo_text: str) -> CollectiveStats:
+    by_kind: dict = {}
+    counts: dict = {}
+    seen_done = set()
+    for line in hlo_text.splitlines():
+        m = _COLLECTIVE_RE.match(line)
+        if not m:
+            continue
+        result_part, kind, operand_part = m.groups()
+        # async pairs: count -start, skip -done (same transfer)
+        if "-done(" in line:
+            continue
+        side, w = _WEIGHT[kind]
+        nbytes = _shapes_bytes(result_part if side == "result" else operand_part)
+        by_kind[kind] = by_kind.get(kind, 0.0) + w * nbytes
+        counts[kind] = counts.get(kind, 0) + 1
+    return CollectiveStats(bytes_by_kind=by_kind, count_by_kind=counts)
+
+
+@dataclasses.dataclass
+class Roofline:
+    flops: float               # per-device HLO flops
+    hbm_bytes: float           # per-device bytes accessed
+    collective_bytes: float    # per-device bytes moved on ICI
+    chips: int
+    collectives: CollectiveStats
+    model_flops: float = 0.0   # 6*N*D (global, useful flops)
+    per_device_peak_bytes: float = 0.0
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops / PEAK_FLOPS
+
+    @property
+    def t_memory(self) -> float:
+        return self.hbm_bytes / HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return self.collective_bytes / LINK_BW
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {
+            "compute": self.t_compute,
+            "memory": self.t_memory,
+            "collective": self.t_collective,
+        }
+        return max(terms, key=terms.get)
+
+    @property
+    def step_time_s(self) -> float:
+        """Roofline step-time model: overlapped max of the three terms."""
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        if self.flops <= 0:
+            return 0.0
+        return self.model_flops / (self.flops * self.chips)
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Fraction of the per-chip peak the *useful* model flops achieve at
+        the roofline step time — the §Perf score."""
+        if self.step_time_s <= 0:
+            return 0.0
+        useful_per_chip = self.model_flops / self.chips
+        return useful_per_chip / (self.step_time_s * PEAK_FLOPS)
+
+    def to_dict(self) -> dict:
+        return {
+            "flops_per_device": self.flops,
+            "hbm_bytes_per_device": self.hbm_bytes,
+            "collective_bytes_per_device": self.collective_bytes,
+            "chips": self.chips,
+            "t_compute_s": self.t_compute,
+            "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "bottleneck": self.bottleneck,
+            "step_time_s": self.step_time_s,
+            "model_flops": self.model_flops,
+            "useful_flops_ratio": self.useful_flops_ratio,
+            "roofline_fraction": self.roofline_fraction,
+            "collective_bytes_by_kind": self.collectives.bytes_by_kind,
+            "collective_count_by_kind": self.collectives.count_by_kind,
+            "per_device_peak_bytes": self.per_device_peak_bytes,
+        }
+
+
+def slstm_correction(cfg, shape, chips: int) -> tuple:
+    """Analytic (flops, bytes) per device for sLSTM time-scan bodies, which
+    stay while-loops even in analysis_unroll mode (one step per token is
+    not unrollable at L=4k).  cost_analysis counts the body once; we add
+    (L-1) x body.  Train counts forward + remat recompute + backward ~ 3x.
+    Applies per sLSTM layer in the depth-reduced analysis model (callers
+    pass the analysis cfg, so extrapolation scales it with depth)."""
+    n_slstm = sum(1 for k in cfg.layer_kinds() if k == "slstm")
+    if n_slstm == 0:
+        return 0.0, 0.0
+    d = cfg.d_model
+    nH = cfg.n_heads
+    dh = d // nH
+    if shape.kind == "decode":
+        return 0.0, 0.0                      # single step: counted exactly
+    B_loc = max(shape.global_batch // chips * max(chips // 16, 1), 1)
+    # per-device batch under batch->(pod,data) sharding on a 16(x16) mesh:
+    B_loc = max(shape.global_batch // 16, 1) if chips == 256 else max(shape.global_batch // 32, 1)
+    L = shape.seq_len
+    mult = 3.0 if shape.kind == "train" else 1.0
+    flops_step = 2.0 * B_loc * nH * dh * 4 * dh + 25.0 * B_loc * d
+    bytes_step = (8.0 * B_loc * d) * 4.0 + nH * dh * 4 * dh * 4.0
+    return (
+        mult * n_slstm * (L - 1) * flops_step,
+        mult * n_slstm * (L - 1) * bytes_step,
+    )
+
+
+def model_flops(cfg, shape) -> float:
+    """6*N*D (dense) / 6*N_active*D (MoE); decode: D = batch tokens."""
+    counts = cfg.param_counts()
+    n = counts["active"]
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n * tokens          # forward only
+    return 2.0 * n * shape.global_batch  # decode: one token per sequence
+
+
+def analyze(compiled, lowered_text: Optional[str], chips: int, mflops: float) -> Roofline:
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):           # older jax returns [dict]
+        cost = cost[0]
+    flops = float(cost.get("flops", 0.0))
+    hbm = float(cost.get("bytes accessed", 0.0))
+    text = lowered_text if lowered_text is not None else compiled.as_text()
+    coll = parse_collectives(text)
+    try:
+        mem = compiled.memory_analysis()
+        peak = float(
+            getattr(mem, "temp_size_in_bytes", 0)
+            + getattr(mem, "argument_size_in_bytes", 0)
+            + getattr(mem, "output_size_in_bytes", 0)
+            - getattr(mem, "alias_size_in_bytes", 0)
+        )
+    except Exception:
+        peak = 0.0
+    return Roofline(
+        flops=flops,
+        hbm_bytes=hbm,
+        collective_bytes=coll.total_bytes,
+        chips=chips,
+        collectives=coll,
+        model_flops=mflops,
+        per_device_peak_bytes=peak,
+    )

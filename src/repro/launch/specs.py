@@ -1,0 +1,81 @@
+"""ShapeDtypeStruct input stand-ins for every (arch x shape) cell.
+
+Weak-type-correct, shardable, zero device allocation — the dry-run lowers
+against these.  For decode shapes the KV/state cache itself is part of the
+input signature (abstract init), matching the brief: decode lowers
+`serve_step` (one new token against a seq_len cache), not `train_step`.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import SHAPES, Shape, get_config
+from repro.models.api import Model, get_model
+from repro.models.config import ModelConfig
+
+# logical axes of each batch field (for in_shardings)
+BATCH_AXES = {
+    "tokens": ("batch", "seq"),
+    "labels": ("batch", "seq"),
+    "patches": ("batch", "seq", "embed"),
+    "frames": ("batch", "frames", "embed"),
+}
+
+
+def _extras(cfg: ModelConfig, B: int) -> dict:
+    out = {}
+    if cfg.n_vision_tokens:
+        out["patches"] = jax.ShapeDtypeStruct(
+            (B, cfg.n_vision_tokens, cfg.d_model), jnp.float32
+        )
+    if cfg.is_encoder_decoder:
+        out["frames"] = jax.ShapeDtypeStruct(
+            (B, cfg.n_audio_frames, cfg.d_model), jnp.float32
+        )
+    return out
+
+
+def train_specs(cfg: ModelConfig, shape: Shape) -> dict:
+    B, S = shape.global_batch, shape.seq_len
+    if cfg.n_vision_tokens:
+        S = S - cfg.n_vision_tokens            # total positions == seq_len
+    batch = {
+        "tokens": jax.ShapeDtypeStruct((B, S), jnp.int32),
+        "labels": jax.ShapeDtypeStruct((B, S), jnp.int32),
+    }
+    batch.update(_extras(cfg, B))
+    return batch
+
+
+def prefill_specs(cfg: ModelConfig, shape: Shape) -> dict:
+    B, S = shape.global_batch, shape.seq_len
+    if cfg.n_vision_tokens:
+        S = S - cfg.n_vision_tokens
+    batch = {"tokens": jax.ShapeDtypeStruct((B, S), jnp.int32)}
+    batch.update(_extras(cfg, B))
+    return batch
+
+
+def decode_specs(cfg: ModelConfig, shape: Shape) -> dict:
+    """Returns {cache, tokens, cache_len} stand-ins."""
+    model = get_model(cfg)
+    B, S = shape.global_batch, shape.seq_len
+    cache = model.init_cache(B, S, abstract=True)
+    return {
+        "cache": cache,
+        "tokens": jax.ShapeDtypeStruct((B, 1), jnp.int32),
+        "cache_len": jax.ShapeDtypeStruct((), jnp.int32),
+    }
+
+
+def input_specs(arch_or_cfg, shape_name: str) -> dict:
+    cfg = arch_or_cfg if isinstance(arch_or_cfg, ModelConfig) else get_config(arch_or_cfg)
+    shape = SHAPES[shape_name]
+    if shape.kind == "train":
+        return train_specs(cfg, shape)
+    if shape.kind == "prefill":
+        return prefill_specs(cfg, shape)
+    return decode_specs(cfg, shape)

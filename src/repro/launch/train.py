@@ -1,0 +1,158 @@
+"""Fault-tolerant training driver.
+
+Wires together: data pipeline -> jit train_step -> checkpoint/restart ->
+SONAR fleet monitoring (straggler/crash detection on per-pod step-time
+telemetry) -> elastic re-mesh.  On this CPU container it runs reduced
+configs on a 1-device mesh with *simulated* pods (FailureInjector supplies
+per-pod step times); on a real fleet the same loop runs per-host with the
+production mesh and real step times.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.train --arch xlstm-125m --reduced \
+      --steps 50 --batch 8 --seq 128 [--inject-failures]
+"""
+from __future__ import annotations
+
+import argparse
+import time
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import configs
+from repro.data.pipeline import DataConfig, make_batch
+from repro.ft import checkpoint as ckpt
+from repro.ft.failure import FailureInjector, FleetMonitor, plan_elastic
+from repro.models.api import get_model
+from repro.training.optimizer import AdamW
+from repro.training.train_step import make_train_step
+
+
+def add_batch_extras(batch, cfg, B, rng):
+    if cfg.n_vision_tokens:
+        batch["patches"] = jnp.asarray(
+            rng.standard_normal((B, cfg.n_vision_tokens, cfg.d_model)), jnp.float32
+        )
+    if cfg.is_encoder_decoder:
+        batch["frames"] = jnp.asarray(
+            rng.standard_normal((B, cfg.n_audio_frames, cfg.d_model)), jnp.float32
+        )
+    return batch
+
+
+def train_loop(
+    cfg,
+    steps: int = 50,
+    global_batch: int = 8,
+    seq_len: int = 128,
+    ckpt_dir: Optional[str] = None,
+    ckpt_every: int = 20,
+    n_pods: int = 4,
+    inject_failures: bool = False,
+    grad_compression_bits: Optional[int] = None,
+    log_every: int = 10,
+    seed: int = 0,
+):
+    model = get_model(cfg)
+    opt = AdamW(lr=1e-3, warmup_steps=20)
+    params, _axes = model.init_params(jax.random.PRNGKey(seed))
+    opt_state = opt.init(params)
+    step_fn = jax.jit(make_train_step(model, opt, grad_compression_bits))
+
+    data_cfg = DataConfig(
+        vocab_size=cfg.vocab_size, seq_len=seq_len, global_batch=global_batch, seed=seed
+    )
+    rng = np.random.default_rng(seed)
+
+    start = 0
+    if ckpt_dir:
+        last = ckpt.latest_step(ckpt_dir)
+        if last is not None:
+            (params, opt_state), extras = ckpt.restore(
+                ckpt_dir, last, (params, opt_state)
+            )
+            start = extras["next_step"]
+            print(f"[restore] resumed from step {last}")
+
+    # fleet telemetry: per-pod step times scored with the paper's QoS (Eq. 7)
+    injector = FailureInjector(n_pods, base_step_s=1.0, seed=seed)
+    monitor = FleetMonitor(n_pods, base_step_s=1.0)
+    healthy = list(range(n_pods))
+    losses = []
+
+    for step in range(start, steps):
+        if inject_failures:
+            if step == steps // 3:
+                injector.straggle(1, factor=8.0)
+                print(f"[inject] pod 1 straggling at step {step}")
+            if step == steps // 2:
+                injector.crash(2)
+                print(f"[inject] pod 2 crashed at step {step}")
+
+        batch = make_batch(data_cfg, step)
+        batch = add_batch_extras(dict(batch), cfg, global_batch, rng)
+        t0 = time.time()
+        params, opt_state, metrics = step_fn(params, opt_state, batch)
+        loss = float(metrics["loss"])
+        losses.append(loss)
+
+        # fleet step: healthy pods take the real step time; injected pods
+        # report their simulated (straggling / hung) times
+        times = injector.step_times()
+        times[healthy] = np.maximum(times[healthy], time.time() - t0)
+        monitor.record(times)
+        plan = plan_elastic(monitor, global_batch, healthy)
+        if plan.changed:
+            excluded = sorted(set(healthy) - set(plan.healthy))
+            print(
+                f"[elastic] step {step}: excluding pods {excluded} "
+                f"(QoS scores {np.round(monitor.scores(), 2)}); "
+                f"{plan.n_pods} pods remain, per-pod batch -> {plan.per_pod_batch}"
+            )
+            healthy = plan.healthy
+            if ckpt_dir:
+                # restart path: persist, rebuild mesh over survivors, resume
+                ckpt.save(ckpt_dir, step, (params, opt_state), {"next_step": step + 1})
+                print(f"[elastic] checkpointed at step {step}; resuming on shrunk fleet")
+
+        if ckpt_dir and (step + 1) % ckpt_every == 0:
+            ckpt.save(ckpt_dir, step + 1, (params, opt_state), {"next_step": step + 1})
+        if step % log_every == 0 or step == steps - 1:
+            print(
+                f"step {step:5d} loss {loss:.4f} gnorm {float(metrics['grad_norm']):.3f} "
+                f"({time.time() - t0:.2f}s) pods={len(healthy)}"
+            )
+    return losses
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", type=str, default="xlstm-125m")
+    ap.add_argument("--reduced", action="store_true", default=True)
+    ap.add_argument("--full", dest="reduced", action="store_false")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--ckpt-dir", type=str, default=None)
+    ap.add_argument("--inject-failures", action="store_true")
+    ap.add_argument("--grad-compression-bits", type=int, default=None)
+    args = ap.parse_args()
+
+    cfg = configs.get_reduced(args.arch) if args.reduced else configs.get_config(args.arch)
+    losses = train_loop(
+        cfg,
+        steps=args.steps,
+        global_batch=args.batch,
+        seq_len=args.seq,
+        ckpt_dir=args.ckpt_dir,
+        inject_failures=args.inject_failures,
+        grad_compression_bits=args.grad_compression_bits,
+    )
+    print(f"final loss {losses[-1]:.4f} (start {losses[0]:.4f})")
+    assert losses[-1] < losses[0], "loss did not decrease"
+
+
+if __name__ == "__main__":
+    main()

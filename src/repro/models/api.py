@@ -1,0 +1,65 @@
+"""Uniform Model API over all families (used by launch/, training/, serving/)."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import lm, whisper
+from repro.models.config import ModelConfig
+from repro.nn import core as nn
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+    init: Callable          # (ctx) -> Annotated tree
+    forward: Callable       # (params, batch, mode, cache, cache_len)
+    loss: Callable          # (params, batch) -> (loss, metrics)
+    init_cache: Callable    # (batch, cap, abstract) -> cache tree
+    cache_axes: Callable    # () -> axes tree
+
+    def init_params(self, key: jax.Array, abstract: bool = False):
+        """Returns (params, axes)."""
+        ctx = nn.InitCtx(key=key, dtype=self.cfg.jdtype, abstract=abstract)
+        return nn.unzip(self.init(ctx))
+
+    def prefill(self, params, batch):
+        logits, cache, _ = self.forward(params, batch, mode="prefill")
+        return logits, cache
+
+    def decode_step(self, params, cache, tokens, cache_len):
+        logits, new_cache, _ = self.forward(
+            params, {"tokens": tokens}, mode="decode", cache=cache, cache_len=cache_len
+        )
+        return logits, new_cache
+
+
+def get_model(cfg: ModelConfig) -> Model:
+    if cfg.is_encoder_decoder:
+        return Model(
+            cfg=cfg,
+            init=lambda ctx: whisper.whisper_init(ctx, cfg),
+            forward=lambda p, b, mode="train", cache=None, cache_len=None: whisper.whisper_forward(
+                p, cfg, b, mode, cache, cache_len
+            ),
+            loss=lambda p, b: whisper.whisper_loss(p, cfg, b),
+            init_cache=lambda batch, cap, abstract=False: whisper.whisper_init_cache(
+                cfg, batch, cap, abstract
+            ),
+            cache_axes=lambda: whisper.whisper_cache_axes(cfg),
+        )
+    return Model(
+        cfg=cfg,
+        init=lambda ctx: lm.lm_init(ctx, cfg),
+        forward=lambda p, b, mode="train", cache=None, cache_len=None: lm.lm_forward(
+            p, cfg, b, mode, cache, cache_len
+        ),
+        loss=lambda p, b: lm.lm_loss(p, cfg, b),
+        init_cache=lambda batch, cap, abstract=False: lm.lm_init_cache(
+            cfg, batch, cap, abstract
+        ),
+        cache_axes=lambda: lm.lm_cache_axes(cfg),
+    )

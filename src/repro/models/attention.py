@@ -1,0 +1,271 @@
+"""GQA attention layer: init, train/prefill forward, single-token decode.
+
+Three interchangeable implementations (cfg.attn_impl):
+  naive   — full [S, S] score materialization (tests / tiny shapes)
+  chunked — q-chunked streaming softmax in pure jnp: the flash algorithm
+            expressed for XLA (the roofline/dry-run default — keeps peak
+            activation memory at [B, H, CQ, S] instead of [B, H, S, S])
+  pallas  — repro.kernels.flash_attention (TPU target; interpret on CPU)
+
+Decode uses a naive single-row softmax (memory-bound regardless) or the
+flash-decode kernel.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.config import ModelConfig
+from repro.nn import core as nn
+from repro.nn.sharding import fsdp_gather, maybe_constrain
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x [B, S, H, D]; positions [B, S] or [S]."""
+    D = x.shape[-1]
+    freqs = rope_freqs(D, theta)                        # [D/2]
+    if positions.ndim == 1:
+        positions = positions[None, :]
+    ang = positions[..., None].astype(jnp.float32) * freqs  # [B, S, D/2]
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Params
+# ---------------------------------------------------------------------------
+
+def attn_init(ctx: nn.InitCtx, cfg: ModelConfig, cross: bool = False):
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    nq, nkv = cfg.n_heads, cfg.n_kv_heads
+    kq, kk, kv, ko, kb = (c.key for c in ctx.split(5))
+    c = lambda k: dataclasses.replace(ctx, key=k)
+    p = {
+        "wq": nn.fan_in_normal(c(kq), (d, nq * hd), ("embed_fsdp", "qkv")),
+        "wk": nn.fan_in_normal(c(kk), (d, nkv * hd), ("embed_fsdp", "qkv")),
+        "wv": nn.fan_in_normal(c(kv), (d, nkv * hd), ("embed_fsdp", "qkv")),
+        "wo": nn.fan_in_normal(c(ko), (nq * hd, d), ("qkv", "embed_fsdp"), fan_in=nq * hd),
+    }
+    if cfg.qkv_bias and not cross:
+        p["bq"] = nn.zeros(c(kb), (nq * hd,), ("qkv",))
+        p["bk"] = nn.zeros(c(kb), (nkv * hd,), ("qkv",))
+        p["bv"] = nn.zeros(c(kb), (nkv * hd,), ("qkv",))
+    return p
+
+
+# ---------------------------------------------------------------------------
+# Score paths
+# ---------------------------------------------------------------------------
+
+def _repeat_kv(x: jax.Array, n_rep: int) -> jax.Array:
+    """[B, S, Hkv, D] -> [B, S, Hkv*n_rep, D]."""
+    if n_rep == 1:
+        return x
+    B, S, H, D = x.shape
+    return jnp.broadcast_to(x[:, :, :, None], (B, S, H, n_rep, D)).reshape(B, S, H * n_rep, D)
+
+
+def _naive_attn(q, k, v, causal: bool, kv_len: Optional[int], q_offset: int = 0):
+    """q [B, Sq, Hq, D], k/v [B, Sk, Hkv, D] — GQA handled by grouped
+    einsums (no KV expansion) and bf16 MXU semantics: inputs stay in model
+    dtype with f32 accumulation via preferred_element_type.  (§Perf
+    iteration D: astype(f32) copies of (expanded) K/V dominated HLO bytes —
+    e.g. 8 q-chunks x 5x-expanded f32 K/V ~ 200 GB/layer on llama4.)"""
+    B, Sq, Hq, D = q.shape
+    Sk, Hkv = k.shape[1], k.shape[2]
+    G = Hq // Hkv
+    scale = 1.0 / np.sqrt(D)
+    qg = q.reshape(B, Sq, Hkv, G, D)
+    s = jnp.einsum(
+        "bqhgd,bkhd->bhgqk", qg, k, preferred_element_type=jnp.float32
+    ) * scale                                             # [B, Hkv, G, Sq, Sk] f32
+    col = jnp.arange(Sk)
+    mask = jnp.ones((Sq, Sk), bool)
+    if causal:
+        row = jnp.arange(Sq)[:, None] + q_offset
+        mask &= col[None, :] <= row
+    if kv_len is not None:
+        mask &= (col < kv_len)[None, :]
+    s = jnp.where(mask[None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1).astype(q.dtype)        # bf16 P for the PV matmul
+    o = jnp.einsum("bhgqk,bkhd->bqhgd", p, v, preferred_element_type=jnp.float32)
+    return o.reshape(B, Sq, Hq, D).astype(q.dtype)
+
+
+def _chunked_attn(q, k, v, causal: bool, chunk: int, kv_len: Optional[int] = None,
+                  unroll: bool = False):
+    """Streaming q-chunked attention; peak live memory [B, H, chunk, Sk]."""
+    B, Sq, H, D = q.shape
+    Sk = k.shape[1]
+    chunk = min(chunk, Sq)
+    pad = (-Sq) % chunk
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    nC = q.shape[1] // chunk
+    qc = q.reshape(B, nC, chunk, H, D).transpose(1, 0, 2, 3, 4)  # [nC,B,c,H,D]
+
+    def one(args):
+        i, qi = args
+        return _naive_attn(qi, k, v, causal=causal, kv_len=kv_len, q_offset=i * chunk)
+
+    # checkpoint each chunk: otherwise the map's VJP residuals stack every
+    # chunk's [B, H, c, Sk] score matrix — resurrecting the full O(S^2)
+    # buffer the chunking exists to avoid (measured: 139 GB/device on
+    # whisper-tiny train_4k before this).
+    one = jax.checkpoint(one, policy=jax.checkpoint_policies.nothing_saveable)
+    if unroll:
+        out = jnp.stack([one((jnp.int32(i), qc[i])) for i in range(nC)])
+    else:
+        out = jax.lax.map(one, (jnp.arange(nC), qc))             # [nC,B,c,H,D]
+    out = out.transpose(1, 0, 2, 3, 4).reshape(B, nC * chunk, H, D)
+    return out[:, :Sq]
+
+
+def _pallas_attn(q, k, v, causal: bool):
+    from repro.kernels import ops
+
+    # [B, S, H, D] -> [B, H, S, D]
+    out = ops.flash_attention(
+        q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3), v.transpose(0, 2, 1, 3),
+        causal=causal,
+    )
+    return out.transpose(0, 2, 1, 3)
+
+
+# ---------------------------------------------------------------------------
+# Layer forward
+# ---------------------------------------------------------------------------
+
+def attn_apply(
+    p: dict,
+    cfg: ModelConfig,
+    x: jax.Array,                      # [B, S, d]
+    positions: jax.Array,              # [S] or [B, S]
+    causal: bool = True,
+    kv: Optional[jax.Array] = None,    # cross-attention memory [B, Sk, d]
+    return_cache: bool = False,
+):
+    """Full-sequence forward (train / prefill).  Returns (y, cache|None)
+    where cache = (k_cache, v_cache) laid out [B, S, Hkv, hd]."""
+    B, S, d = x.shape
+    hd, nq, nkv = cfg.resolved_head_dim, cfg.n_heads, cfg.n_kv_heads
+    src = x if kv is None else kv
+    Sk = src.shape[1]
+
+    wq = fsdp_gather(p["wq"], ("embed_fsdp", "qkv"))
+    wk = fsdp_gather(p["wk"], ("embed_fsdp", "qkv"))
+    wv = fsdp_gather(p["wv"], ("embed_fsdp", "qkv"))
+    q = nn.dense(x, wq, p.get("bq")).reshape(B, S, nq, hd)
+    k = nn.dense(src, wk, p.get("bk")).reshape(B, Sk, nkv, hd)
+    v = nn.dense(src, wv, p.get("bv")).reshape(B, Sk, nkv, hd)
+
+    if kv is None:                     # self-attention: rotary positions
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+
+    # pin the compute layout: batch-sharded, heads TP'd where divisible —
+    # otherwise the (cache_seq -> model) layout of the *returned* cache
+    # propagates back into the score einsum and GSPMD all-reduces the
+    # [B, H, c, S] score tensors (measured: 58 s collective term on
+    # internvl2 prefill_32k).
+    q = maybe_constrain(q, ("batch", "seq", "heads", "head_dim"))
+    k = maybe_constrain(k, ("batch", "seq", "kv_heads", "head_dim"))
+    v = maybe_constrain(v, ("batch", "seq", "kv_heads", "head_dim"))
+
+    cache = None
+    if return_cache:
+        cache = (
+            maybe_constrain(k, ("cache_batch", "cache_seq", "kv_heads", "head_dim")),
+            maybe_constrain(v, ("cache_batch", "cache_seq", "kv_heads", "head_dim")),
+        )
+
+    if cfg.attn_impl == "pallas":
+        o = _pallas_attn(q, k, v, causal)
+    elif cfg.attn_impl == "chunked" and S > cfg.attn_chunk:
+        o = _chunked_attn(q, k, v, causal, cfg.attn_chunk, unroll=cfg.analysis_unroll)
+    else:
+        o = _naive_attn(q, k, v, causal, kv_len=None)
+
+    y = nn.dense(o.reshape(B, S, nq * hd), fsdp_gather(p["wo"], ("qkv", "embed_fsdp")))
+    return y, cache
+
+
+def attn_decode(
+    p: dict,
+    cfg: ModelConfig,
+    x: jax.Array,                      # [B, 1, d] — one new token
+    cache: tuple,                      # (k, v) [B, S_cap, Hkv, hd]
+    cache_len: jax.Array,              # scalar int32: valid entries
+    cross: bool = False,
+):
+    """Single-token decode.  Self-attention appends (k, v) at cache_len and
+    attends over cache_len+1 entries; cross-attention reads the full cache.
+    Returns (y [B, 1, d], new_cache)."""
+    B, _, d = x.shape
+    hd, nq, nkv = cfg.resolved_head_dim, cfg.n_heads, cfg.n_kv_heads
+    kc, vc = cache
+    S_cap = kc.shape[1]
+
+    q = nn.dense(x, fsdp_gather(p["wq"], ("embed_fsdp", "qkv")), p.get("bq")).reshape(B, 1, nq, hd)
+    if not cross:
+        k_new = nn.dense(x, fsdp_gather(p["wk"], ("embed_fsdp", "qkv")), p.get("bk")).reshape(B, 1, nkv, hd)
+        v_new = nn.dense(x, fsdp_gather(p["wv"], ("embed_fsdp", "qkv")), p.get("bv")).reshape(B, 1, nkv, hd)
+        pos = jnp.full((B, 1), cache_len, dtype=jnp.int32)
+        q = apply_rope(q, pos, cfg.rope_theta)
+        k_new = apply_rope(k_new, pos, cfg.rope_theta)
+        kc = jax.lax.dynamic_update_slice(kc, k_new.astype(kc.dtype), (0, cache_len, 0, 0))
+        vc = jax.lax.dynamic_update_slice(vc, v_new.astype(vc.dtype), (0, cache_len, 0, 0))
+        valid = cache_len + 1
+    else:
+        valid = cache_len
+
+    group = nq // nkv
+    scale = 1.0 / np.sqrt(hd)
+    # [B,1,nq,hd] x [B,S,nkv,hd] -> grouped einsum without materializing
+    # repeated KV; bf16 inputs, f32 accumulation (no f32 cache copies —
+    # §Perf iteration D: the astype(f32) of the 32k-entry cache was
+    # ~0.8 GB/layer of convert traffic per decoded token).
+    qg = q.reshape(B, nkv, group, hd)
+    s = jnp.einsum(
+        "bhgd,bshd->bhgs", qg, kc, preferred_element_type=jnp.float32
+    ) * scale
+    mask = jnp.arange(S_cap)[None, None, None, :] < valid
+    s = jnp.where(mask, s, NEG_INF)
+    pr = jax.nn.softmax(s, axis=-1).astype(x.dtype)
+    o = jnp.einsum("bhgs,bshd->bhgd", pr, vc, preferred_element_type=jnp.float32)
+    y = nn.dense(
+        o.reshape(B, 1, nq * hd).astype(x.dtype),
+        fsdp_gather(p["wo"], ("qkv", "embed_fsdp")),
+    )
+    return y, (kc, vc)
+
+
+def init_cache(cfg: ModelConfig, batch: int, cap: int, abstract: bool = False):
+    """One layer's (k, v) cache; logical axes (batch, cache_seq, kv_heads, head_dim)."""
+    hd, nkv = cfg.resolved_head_dim, cfg.n_kv_heads
+    shape = (batch, cap, nkv, hd)
+    if abstract:
+        arr = jax.ShapeDtypeStruct(shape, cfg.jdtype)
+        return (arr, arr)
+    z = jnp.zeros(shape, cfg.jdtype)
+    return (z, z)
+
+
+CACHE_AXES = ("cache_batch", "cache_seq", "kv_heads", "head_dim")

@@ -1,0 +1,387 @@
+"""Unified decoder LM covering dense / MoE / Mamba-hybrid / xLSTM / VLM
+families, with scan-over-layer-groups + remat for compile-tractable 70B+
+configs, full KV/state cache machinery, and a uniform Model API:
+
+    init(key)                 -> Annotated param tree
+    loss_fn(params, batch)    -> (loss, metrics)          [train_4k]
+    prefill(params, batch)    -> (last logits, cache)     [prefill_32k]
+    decode_step(params, cache, token, cache_len)
+                              -> (logits, new cache)      [decode_*/long_*]
+
+Layer stacking: one "group" = one repetition of cfg.block_pattern; params of
+the (n_layers - first_k_dense)/len(pattern) groups are stacked on a leading
+"layers" axis and traversed with lax.scan (keeps HLO size O(group), letting
+the 72-layer Jamba compile for 512 fake devices on CPU).  first_k_dense
+prelude layers (DeepSeek-MoE) run unrolled before the scan.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import attention as attn
+from repro.models import mamba as mb
+from repro.models import mlp
+from repro.models import xlstm as xl
+from repro.models.config import ModelConfig
+from repro.nn import core as nn
+from repro.nn.sharding import fsdp_gather, maybe_constrain
+
+
+# ---------------------------------------------------------------------------
+# Annotated-tree helpers
+# ---------------------------------------------------------------------------
+
+def amap(f, *trees):
+    return jax.tree.map(f, *trees, is_leaf=nn.is_annotated)
+
+
+def stack_init(init_fn, n: int, ctx: nn.InitCtx):
+    """Stack n independent inits along a leading "layers" axis."""
+    proto = init_fn(dataclasses.replace(ctx, abstract=True))
+    if ctx.abstract:
+        return amap(
+            lambda a: nn.Annotated(
+                jax.ShapeDtypeStruct((n,) + a.value.shape, a.value.dtype),
+                ("layers",) + a.names,
+            ),
+            proto,
+        )
+    _, axes_proto = nn.unzip(proto)
+
+    def raw(key):
+        p, _ = nn.unzip(init_fn(dataclasses.replace(ctx, key=key, abstract=False)))
+        return p
+
+    stacked = jax.vmap(raw)(jax.random.split(ctx.key, n))
+    return jax.tree.map(
+        lambda v, names: nn.Annotated(v, ("layers",) + names),
+        stacked,
+        axes_proto,
+        is_leaf=lambda x: isinstance(x, tuple) and not isinstance(x, nn.Annotated),
+    )
+
+
+# ---------------------------------------------------------------------------
+# One block (mixer + FFN)
+# ---------------------------------------------------------------------------
+
+def block_init(ctx: nn.InitCtx, cfg: ModelConfig, layer_idx: int):
+    kind = cfg.layer_kinds()[layer_idx]
+    ks = ctx.split(4)
+    p: dict = {"norm1": nn.ones(ks[0], (cfg.d_model,), ("embed",))}
+    if kind == "attn":
+        p["attn"] = attn.attn_init(ks[1], cfg)
+    elif kind == "mamba":
+        p["mamba"] = mb.mamba_init(ks[1], cfg)
+    elif kind == "mlstm":
+        p["mlstm"] = xl.mlstm_init(ks[1], cfg)
+    elif kind == "slstm":
+        p["slstm"] = xl.slstm_init(ks[1], cfg)
+    else:
+        raise ValueError(kind)
+    if kind in ("attn", "mamba"):
+        p["norm2"] = nn.ones(ks[2], (cfg.d_model,), ("embed",))
+        p["ffn"] = mlp.ffn_init(ks[3], cfg, layer_idx)
+    return p
+
+
+def block_cache(cfg: ModelConfig, layer_idx: int, batch: int, cap: int, abstract=False):
+    kind = cfg.layer_kinds()[layer_idx]
+    if kind == "attn":
+        return attn.init_cache(cfg, batch, cap, abstract)
+    if kind == "mamba":
+        return mb.init_mamba_state(cfg, batch, abstract)
+    if kind == "mlstm":
+        return xl.init_mlstm_state(cfg, batch, abstract)
+    if kind == "slstm":
+        return xl.init_slstm_state(cfg, batch, abstract)
+    raise ValueError(kind)
+
+
+def block_cache_axes(cfg: ModelConfig, layer_idx: int):
+    kind = cfg.layer_kinds()[layer_idx]
+    if kind == "attn":
+        return (attn.CACHE_AXES, attn.CACHE_AXES)
+    if kind == "mamba":
+        return mb.MAMBA_STATE_AXES
+    if kind == "mlstm":
+        return xl.MLSTM_STATE_AXES
+    if kind == "slstm":
+        return xl.SLSTM_STATE_AXES
+    raise ValueError(kind)
+
+
+def block_apply(
+    p: dict,
+    cfg: ModelConfig,
+    kind: str,
+    x: jax.Array,
+    positions: jax.Array,
+    mode: str,                        # train | prefill | decode
+    cache=None,
+    cache_len=None,
+):
+    """Returns (x, new_cache, aux_loss)."""
+    h = nn.rms_norm(x, p["norm1"], cfg.norm_eps)
+    new_cache, aux = None, jnp.float32(0.0)
+
+    if kind == "attn":
+        if mode == "decode":
+            y, new_cache = attn.attn_decode(p["attn"], cfg, h, cache, cache_len)
+        else:
+            y, new_cache = attn.attn_apply(
+                p["attn"], cfg, h, positions, causal=True,
+                return_cache=(mode == "prefill"),
+            )
+    elif kind == "mamba":
+        if mode == "decode":
+            y, new_cache = mb.mamba_decode(p["mamba"], cfg, h, cache)
+        else:
+            y, new_cache = mb.mamba_apply(
+                p["mamba"], cfg, h, return_state=(mode == "prefill")
+            )
+    elif kind == "mlstm":
+        if mode == "decode":
+            y, new_cache = xl.mlstm_decode(p["mlstm"], cfg, h, cache)
+        else:
+            y, new_cache = xl.mlstm_apply(
+                p["mlstm"], cfg, h, return_state=(mode == "prefill")
+            )
+    elif kind == "slstm":
+        if mode == "decode":
+            y, new_cache = xl.slstm_decode(p["slstm"], cfg, h, cache)
+        else:
+            y, new_cache = xl.slstm_apply(
+                p["slstm"], cfg, h, return_state=(mode == "prefill")
+            )
+    else:
+        raise ValueError(kind)
+    x = x + y
+
+    if kind in ("attn", "mamba"):
+        h2 = nn.rms_norm(x, p["norm2"], cfg.norm_eps)
+        y2, aux = mlp.ffn_apply(p["ffn"], cfg, h2)
+        x = x + y2
+    x = maybe_constrain(x, ("batch", "seq", "embed"))
+    return x, new_cache, aux
+
+
+# ---------------------------------------------------------------------------
+# Model
+# ---------------------------------------------------------------------------
+
+def _n_groups(cfg: ModelConfig) -> int:
+    rem = cfg.n_layers - cfg.first_k_dense
+    assert rem % len(cfg.block_pattern) == 0, (cfg.name, rem, cfg.block_pattern)
+    return rem // len(cfg.block_pattern)
+
+
+def lm_init(ctx: nn.InitCtx, cfg: ModelConfig):
+    ks = ctx.split(6)
+    d = cfg.d_model
+    p: dict = {
+        "embed": nn.normal(ks[0], (cfg.padded_vocab, d), ("vocab", "embed_fsdp")),
+        "final_norm": nn.ones(ks[1], (d,), ("embed",)),
+    }
+    if not cfg.tie_embeddings:
+        p["head"] = nn.fan_in_normal(ks[2], (d, cfg.padded_vocab), ("embed_fsdp", "vocab"))
+    if cfg.n_vision_tokens:
+        p["vision_proj"] = nn.fan_in_normal(ks[5], (d, d), ("embed_fsdp", "embed"))
+
+    for i in range(cfg.first_k_dense):
+        p[f"prelude_{i}"] = block_init(ks[3].fold(f"pre{i}"), cfg, i)
+
+    pattern = cfg.block_pattern
+
+    def group_init(c: nn.InitCtx):
+        return {
+            f"l{j}": block_init(c.fold(f"g{j}"), cfg, cfg.first_k_dense + j)
+            for j in range(len(pattern))
+        }
+
+    p["groups"] = stack_init(group_init, _n_groups(cfg), ks[4])
+    return p
+
+
+def _group_kinds(cfg: ModelConfig) -> list:
+    return list(cfg.block_pattern)
+
+
+def _remat(fn, cfg: ModelConfig):
+    if cfg.remat == "none":
+        return fn
+    policy = (
+        jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+        if cfg.remat == "dots"
+        else jax.checkpoint_policies.nothing_saveable
+    )
+    return jax.checkpoint(fn, policy=policy, prevent_cse=False)
+
+
+def _embed_tokens(p, cfg: ModelConfig, batch: dict) -> jax.Array:
+    embed = fsdp_gather(p["embed"], ("vocab", "embed_fsdp"))
+    x = jnp.take(embed, batch["tokens"], axis=0)
+    if cfg.n_vision_tokens:
+        patches = batch["patches"].astype(x.dtype)          # [B, V, d]
+        vis = nn.dense(patches, fsdp_gather(p["vision_proj"], ("embed_fsdp", "embed")))
+        x = jnp.concatenate([vis, x], axis=1)
+    return x
+
+
+def lm_forward(
+    p: dict,
+    cfg: ModelConfig,
+    batch: dict,
+    mode: str = "train",
+    cache: Optional[dict] = None,
+    cache_len=None,
+):
+    """Returns (logits or last-position logits, new_cache, aux)."""
+    if mode == "decode":
+        embed = fsdp_gather(p["embed"], ("vocab", "embed_fsdp"))
+        x = jnp.take(embed, batch["tokens"], axis=0)        # [B, 1, d]
+    else:
+        x = _embed_tokens(p, cfg, batch)
+    x = maybe_constrain(x, ("batch", "seq", "embed"))
+    B, S = x.shape[0], x.shape[1]
+    positions = jnp.arange(S, dtype=jnp.int32)
+    kinds = _group_kinds(cfg)
+    aux_total = jnp.float32(0.0)
+
+    # prelude (unrolled) layers
+    new_prelude_cache = {}
+    for i in range(cfg.first_k_dense):
+        entry = None if cache is None else cache.get(f"prelude_{i}")
+        x, c_new, aux = block_apply(
+            p[f"prelude_{i}"], cfg, cfg.layer_kinds()[i], x, positions, mode,
+            entry, cache_len,
+        )
+        aux_total += aux
+        if c_new is not None:
+            new_prelude_cache[f"prelude_{i}"] = c_new
+
+    # scanned groups
+    def group_body(x, xs):
+        gp, gcache = xs
+        new_gcache = {}
+        aux_g = jnp.float32(0.0)
+        for j, kind in enumerate(kinds):
+            entry = None if gcache is None else gcache[f"l{j}"]
+            x, c_new, aux = block_apply(
+                gp[f"l{j}"], cfg, kind, x, positions, mode, entry, cache_len
+            )
+            aux_g += aux
+            if c_new is not None:
+                new_gcache[f"l{j}"] = c_new
+        return x, (new_gcache, aux_g)
+
+    body = _remat(group_body, cfg) if mode == "train" else group_body
+    groups_cache = None if cache is None else cache["groups"]
+    nG = _n_groups(cfg)
+    if cfg.scan_layers and not cfg.analysis_unroll:
+        if groups_cache is None:
+            x, (caches, auxes) = jax.lax.scan(
+                lambda c, gp: body(c, (gp, None)), x, p["groups"]
+            )
+        else:
+            x, (caches, auxes) = jax.lax.scan(
+                lambda c, xs: body(c, xs), x, (p["groups"], groups_cache)
+            )
+        aux_total += jnp.sum(auxes)
+    else:
+        cache_list, auxes = [], []
+        for g in range(nG):
+            gp = jax.tree.map(lambda t: t[g], p["groups"])
+            gc = (
+                None
+                if groups_cache is None
+                else jax.tree.map(lambda t: t[g], groups_cache)
+            )
+            x, (c_new, aux_g) = body(x, (gp, gc))
+            cache_list.append(c_new)
+            auxes.append(aux_g)
+        caches = (
+            jax.tree.map(lambda *xs: jnp.stack(xs), *cache_list)
+            if cache_list and cache_list[0]
+            else {}
+        )
+        aux_total += sum(auxes)
+
+    x = nn.rms_norm(x, p["final_norm"], cfg.norm_eps)
+    new_cache = None
+    if mode in ("prefill", "decode"):
+        new_cache = dict(new_prelude_cache)
+        new_cache["groups"] = caches
+
+    if mode == "prefill":
+        x = x[:, -1:]                                  # only last-position logits
+    if cfg.tie_embeddings:
+        head = fsdp_gather(p["embed"], ("vocab", "embed_fsdp")).T
+    else:
+        head = fsdp_gather(p["head"], ("embed_fsdp", "vocab"))
+    logits = nn.dense(x, head)
+    if cfg.logits_f32:
+        logits = logits.astype(jnp.float32)
+    logits = maybe_constrain(logits, ("batch", "seq", "vocab"))
+    return logits, new_cache, aux_total
+
+
+# ---------------------------------------------------------------------------
+# Cache init (tree matches lm_forward's cache layout)
+# ---------------------------------------------------------------------------
+
+def lm_init_cache(cfg: ModelConfig, batch: int, cap: int, abstract=False):
+    cache: dict = {}
+    for i in range(cfg.first_k_dense):
+        cache[f"prelude_{i}"] = block_cache(cfg, i, batch, cap, abstract)
+    nG = _n_groups(cfg)
+    group = {
+        f"l{j}": block_cache(cfg, cfg.first_k_dense + j, batch, cap, abstract)
+        for j in range(len(cfg.block_pattern))
+    }
+
+    def stack(leaf):
+        if abstract:
+            return jax.ShapeDtypeStruct((nG,) + leaf.shape, leaf.dtype)
+        return jnp.broadcast_to(leaf[None], (nG,) + leaf.shape).copy()
+
+    cache["groups"] = jax.tree.map(stack, group)
+    return cache
+
+
+def lm_cache_axes(cfg: ModelConfig):
+    axes: dict = {}
+    for i in range(cfg.first_k_dense):
+        axes[f"prelude_{i}"] = block_cache_axes(cfg, i)
+    group = {
+        f"l{j}": block_cache_axes(cfg, cfg.first_k_dense + j)
+        for j in range(len(cfg.block_pattern))
+    }
+    axes["groups"] = jax.tree.map(
+        lambda names: ("layers",) + tuple(names),
+        group,
+        is_leaf=lambda x: isinstance(x, tuple) and all(isinstance(i, (str, type(None))) for i in x),
+    )
+    return axes
+
+
+# ---------------------------------------------------------------------------
+# Losses / steps
+# ---------------------------------------------------------------------------
+
+def lm_loss(p, cfg: ModelConfig, batch: dict):
+    logits, _, aux = lm_forward(p, cfg, batch, mode="train")
+    labels = batch["labels"]
+    if cfg.n_vision_tokens:
+        ignore = jnp.full(
+            (labels.shape[0], cfg.n_vision_tokens), -100, dtype=labels.dtype
+        )
+        labels = jnp.concatenate([ignore, labels], axis=1)
+    ce, n = nn.softmax_cross_entropy(logits, labels)
+    return ce + aux, {"ce": ce, "aux": aux, "n_tokens": n}

@@ -1,0 +1,249 @@
+"""Mamba block, TPU-adapted as Mamba-2 / SSD chunked matmul scan.
+
+HARDWARE ADAPTATION (DESIGN.md §3): the original Mamba CUDA kernel is a
+work-efficient parallel *selective scan* tuned for SM shared memory; a
+literal port would serialize on the VPU.  The SSD (state-space dual)
+formulation recasts the same recurrence as chunk-local attention-like
+matmuls plus a tiny inter-chunk state scan — MXU-shaped work:
+
+    H_t = a_t * H_{t-1} + dt_t * (B_t ⊗ x_t),   y_t = C_t · H_t + D * x_t
+    a_t = exp(dt_t * A_h)   (per head h; A_h < 0)
+
+Chunked (chunk Q): intra-chunk term is a masked [Q, Q] matmul per head;
+the carried state H [B, nH, N, P] crosses chunks via lax.scan.  Peak live
+memory is O(B * nH * Q^2) instead of O(B * L * d_inner * N).
+
+`ssd_scan_ref` is the sequential oracle; tests assert chunked == ref.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.config import ModelConfig
+from repro.nn import core as nn
+from repro.nn.sharding import fsdp_gather
+
+NEG_INF = -1e30
+
+
+def mamba_init(ctx: nn.InitCtx, cfg: ModelConfig):
+    d, di = cfg.d_model, cfg.d_inner
+    nH, N, dc = cfg.mamba_heads, cfg.mamba_d_state, cfg.mamba_d_conv
+    keys = [c.key for c in ctx.split(7)]
+    c = lambda k: dataclasses.replace(ctx, key=k)
+    # A init in [-1, -0.1] log-spaced (standard mamba init), stored as log(-A)
+    if ctx.abstract:
+        a_log = nn.Annotated(jax.ShapeDtypeStruct((nH,), jnp.float32), ("heads",))
+    else:
+        a = jnp.linspace(1.0, 16.0, nH, dtype=jnp.float32)
+        a_log = nn.Annotated(jnp.log(a), ("heads",))
+    return {
+        "w_in": nn.fan_in_normal(c(keys[0]), (d, 2 * di), ("embed_fsdp", "mlp")),
+        "conv_w": nn.normal(c(keys[1]), (dc, di), ("conv", "mlp"), stddev=0.1),
+        "conv_b": nn.zeros(c(keys[2]), (di,), ("mlp",)),
+        "w_bc": nn.fan_in_normal(c(keys[3]), (di, 2 * N), ("mlp", "state")),
+        "w_dt": nn.normal(c(keys[4]), (di, nH), ("mlp", "heads"), stddev=0.02),
+        "dt_bias": nn.zeros(c(keys[5]), (nH,), ("heads",)),
+        "a_log": a_log,
+        "d_skip": nn.ones(c(keys[6]), (nH,), ("heads",)),
+        "w_out": nn.fan_in_normal(c(keys[0]), (di, d), ("mlp", "embed_fsdp"), fan_in=di),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv1d: x [B, L, di], w [dc, di]."""
+    dc = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (dc - 1, 0), (0, 0)))
+    L = x.shape[1]
+    out = sum(xp[:, j : j + L] * w[j][None, None, :] for j in range(dc))
+    return out + b
+
+
+def _project(p: dict, cfg: ModelConfig, x: jax.Array):
+    """Shared pre-SSM projections.  x [B, L, d] ->
+    (xh [B,L,nH,P], dt [B,L,nH], Bm/Cm [B,L,N], z [B,L,di], conv_tail)."""
+    di, nH, N, P = cfg.d_inner, cfg.mamba_heads, cfg.mamba_d_state, cfg.mamba_head_dim
+    xz = nn.dense(x, fsdp_gather(p["w_in"], ("embed_fsdp", "mlp")))
+    x_ssm, z = jnp.split(xz, 2, axis=-1)
+    conv_tail = x_ssm[:, -(cfg.mamba_d_conv - 1):]        # decode carry-over
+    x_conv = jax.nn.silu(_causal_conv(x_ssm, p["conv_w"], p["conv_b"]))
+    bc = nn.dense(x_conv, p["w_bc"]).astype(jnp.float32)
+    Bm, Cm = jnp.split(bc, 2, axis=-1)
+    dt = jax.nn.softplus(
+        nn.dense(x_conv, p["w_dt"]).astype(jnp.float32) + p["dt_bias"]
+    )                                                      # [B, L, nH]
+    B_, L = x.shape[0], x.shape[1]
+    xh = x_conv.reshape(B_, L, nH, P)
+    return xh, dt, Bm, Cm, z, conv_tail
+
+
+def ssd_chunked(
+    xh: jax.Array,   # [B, L, nH, P]
+    dt: jax.Array,   # [B, L, nH] f32
+    Bm: jax.Array,   # [B, L, N]  f32
+    Cm: jax.Array,   # [B, L, N]  f32
+    a_log: jax.Array,  # [nH] f32 (A = -exp(a_log))
+    chunk: int,
+    h0: Optional[jax.Array] = None,  # [B, nH, N, P] f32
+    out_dtype=jnp.float32,
+    unroll: bool = False,
+):
+    """Chunked SSD.  Returns (y [B, L, nH, P] out_dtype, h_final f32).
+    out_dtype=bf16 keeps the full-sequence y (the largest live buffer:
+    [B, L, d_inner] per mamba layer) at half size; accumulation stays f32."""
+    B, L, nH, P = xh.shape
+    N = Bm.shape[-1]
+    Q = min(chunk, L)
+    pad = (-L) % Q
+    if pad:
+        xh = jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+    Lp = L + pad
+    nC = Lp // Q
+    A = -jnp.exp(a_log)                                    # [nH]
+    log_a = dt * A[None, None, :]                          # [B, Lp, nH] (<=0)
+
+    # chunk-major
+    def resh(t, extra):
+        return t.reshape((B, nC, Q) + extra).transpose(1, 0, 2, *range(3, 3 + len(extra)))
+
+    xc = resh(xh, (nH, P))                 # model dtype; f32 upcast per chunk
+    dc = resh(dt, (nH,))
+    lc = resh(log_a, (nH,))
+    Bc = resh(Bm, (N,))
+    Cc = resh(Cm, (N,))
+
+    h_init = (
+        jnp.zeros((B, nH, N, P), jnp.float32) if h0 is None else h0.astype(jnp.float32)
+    )
+
+    def body(h, args):
+        xq, dq, lq, Bq, Cq = args                # [B,Q,nH,P], [B,Q,nH]x2, [B,Q,N]x2
+        xq = xq.astype(jnp.float32) * dq[..., None]   # dt-weighted input (f32)
+        cum = jnp.cumsum(lq, axis=1)             # [B, Q, nH]
+        # intra-chunk: decay(t,s) = cum_t - cum_s for s <= t
+        dec = cum[:, :, None, :] - cum[:, None, :, :]       # [B, t, s, nH]
+        tri = jnp.tril(jnp.ones((Q, Q), bool))
+        dec = jnp.where(tri[None, :, :, None], dec, NEG_INF)
+        CB = jnp.einsum("btn,bsn->bts", Cq, Bq)             # [B, t, s]
+        scores = CB[:, :, :, None] * jnp.exp(dec)           # [B, t, s, nH]
+        y = jnp.einsum("btsh,bshp->bthp", scores, xq)
+        # inter-chunk: y += (C_t . h) * exp(cum_t)
+        y = y + jnp.einsum("btn,bhnp->bthp", Cq, h) * jnp.exp(cum)[..., None]
+        # state update
+        total = cum[:, -1]                                   # [B, nH]
+        w = jnp.exp(total[:, None, :] - cum)                 # [B, Q, nH]
+        h_new = h * jnp.exp(total)[:, :, None, None] + jnp.einsum(
+            "bsn,bshp->bhnp", Bq, xq * w[..., None]
+        )
+        return h_new, y.astype(out_dtype)
+
+    # checkpoint per chunk: keeps the scan VJP from stacking every chunk's
+    # [B, Q, Q, nH] decay/score intermediates (O(B*nH*L*Q) otherwise).
+    body = jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable)
+    if unroll:
+        h, ys = h_init, []
+        for i in range(nC):
+            h, y_i = body(h, (xc[i], dc[i], lc[i], Bc[i], Cc[i]))
+            ys.append(y_i)
+        h_fin, yc = h, jnp.stack(ys)
+    else:
+        h_fin, yc = jax.lax.scan(body, h_init, (xc, dc, lc, Bc, Cc))
+    y = yc.transpose(1, 0, 2, 3, 4).reshape(B, Lp, nH, P)[:, :L]
+    return y, h_fin
+
+
+def ssd_scan_ref(xh, dt, Bm, Cm, a_log, h0=None):
+    """Sequential oracle: one step per token."""
+    B, L, nH, P = xh.shape
+    N = Bm.shape[-1]
+    A = -jnp.exp(a_log)
+    h = jnp.zeros((B, nH, N, P), jnp.float32) if h0 is None else h0.astype(jnp.float32)
+
+    def step(h, args):
+        x_t, dt_t, B_t, C_t = args               # [B,nH,P], [B,nH], [B,N], [B,N]
+        a_t = jnp.exp(dt_t * A[None, :])         # [B, nH]
+        upd = jnp.einsum("bn,bhp->bhnp", B_t, x_t * dt_t[..., None])
+        h = h * a_t[:, :, None, None] + upd
+        y = jnp.einsum("bn,bhnp->bhp", C_t, h)
+        return h, y
+
+    xs = (
+        xh.astype(jnp.float32).transpose(1, 0, 2, 3),
+        dt.transpose(1, 0, 2),
+        Bm.transpose(1, 0, 2),
+        Cm.transpose(1, 0, 2),
+    )
+    h_fin, ys = jax.lax.scan(step, h, xs)
+    return ys.transpose(1, 0, 2, 3), h_fin
+
+
+def mamba_apply(p: dict, cfg: ModelConfig, x: jax.Array, state: Optional[dict] = None,
+                return_state: bool = False):
+    """Full-sequence forward.  x [B, L, d] -> (y, state|None)."""
+    B, L, d = x.shape
+    nH, P = cfg.mamba_heads, cfg.mamba_head_dim
+    xh, dt, Bm, Cm, z, conv_tail = _project(p, cfg, x)
+    h0 = state["h"] if state is not None else None
+    y, h_fin = ssd_chunked(
+        xh, dt, Bm, Cm, p["a_log"].astype(jnp.float32), cfg.mamba_chunk, h0,
+        out_dtype=x.dtype, unroll=cfg.analysis_unroll,
+    )
+    y = y + xh * p["d_skip"].astype(x.dtype)[None, None, :, None]
+    y = y.reshape(B, L, cfg.d_inner) * jax.nn.silu(z)
+    out = nn.dense(y, fsdp_gather(p["w_out"], ("mlp", "embed_fsdp")))
+    new_state = None
+    if return_state:
+        new_state = {"h": h_fin.astype(jnp.float32), "conv": conv_tail}
+    return out, new_state
+
+
+def mamba_decode(p: dict, cfg: ModelConfig, x: jax.Array, state: dict):
+    """Single-token step.  x [B, 1, d]; state = {h [B,nH,N,P], conv [B,dc-1,di]}."""
+    B = x.shape[0]
+    di, nH, N, P, dc = cfg.d_inner, cfg.mamba_heads, cfg.mamba_d_state, cfg.mamba_head_dim, cfg.mamba_d_conv
+    xz = nn.dense(x, fsdp_gather(p["w_in"], ("embed_fsdp", "mlp")))  # [B, 1, 2di]
+    x_ssm, z = jnp.split(xz, 2, axis=-1)
+    window = jnp.concatenate([state["conv"], x_ssm], axis=1)      # [B, dc, di]
+    conv_out = jnp.einsum("bld,ld->bd", window, p["conv_w"]) + p["conv_b"]
+    xc = jax.nn.silu(conv_out)[:, None, :]                         # [B, 1, di]
+    bc = nn.dense(xc, p["w_bc"]).astype(jnp.float32)
+    Bm, Cm = jnp.split(bc[:, 0], 2, axis=-1)                       # [B, N]
+    dt = jax.nn.softplus(
+        nn.dense(xc, p["w_dt"]).astype(jnp.float32)[:, 0] + p["dt_bias"]
+    )                                                              # [B, nH]
+    xh = xc.reshape(B, nH, P).astype(jnp.float32)
+    A = -jnp.exp(p["a_log"].astype(jnp.float32))
+    a_t = jnp.exp(dt * A[None, :])
+    h = state["h"] * a_t[:, :, None, None] + jnp.einsum(
+        "bn,bhp->bhnp", Bm, xh * dt[..., None]
+    )
+    y = jnp.einsum("bn,bhnp->bhp", Cm, h)
+    y = y + xh * p["d_skip"].astype(jnp.float32)[None, :, None]
+    y = y.reshape(B, 1, di).astype(x.dtype) * jax.nn.silu(z)
+    out = nn.dense(y, fsdp_gather(p["w_out"], ("mlp", "embed_fsdp")))
+    return out, {"h": h, "conv": window[:, 1:]}
+
+
+def init_mamba_state(cfg: ModelConfig, batch: int, abstract: bool = False):
+    nH, N, P = cfg.mamba_heads, cfg.mamba_d_state, cfg.mamba_head_dim
+    shapes = {
+        "h": ((batch, nH, N, P), jnp.float32),
+        "conv": ((batch, cfg.mamba_d_conv - 1, cfg.d_inner), cfg.jdtype),
+    }
+    if abstract:
+        return {k: jax.ShapeDtypeStruct(s, dt) for k, (s, dt) in shapes.items()}
+    return {k: jnp.zeros(s, dt) for k, (s, dt) in shapes.items()}
+
+
+MAMBA_STATE_AXES = {
+    "h": ("cache_batch", "heads", "state", "head_dim"),
+    "conv": ("cache_batch", "conv", "mlp"),
+}

@@ -1,0 +1,236 @@
+"""Whisper-style encoder-decoder backbone (audio family).
+
+The conv/mel frontend is a STUB per the assignment: `input_specs()` supplies
+precomputed frame embeddings [B, n_audio_frames, d_model] (what the two
+stride-2 convs would emit).  The transformer backbone is fully real:
+
+  encoder — bidirectional attention blocks over frames (+ sinusoidal pos)
+  decoder — causal self-attn + cross-attn to encoder output + FFN
+
+Decode caches both the growing self-attn KV and the static cross-attn KV
+(projected once from encoder output at prefill).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import attention as attn
+from repro.models import mlp
+from repro.models.config import ModelConfig
+from repro.models.lm import amap, stack_init
+from repro.nn import core as nn
+from repro.nn.sharding import fsdp_gather, maybe_constrain
+
+
+def sinusoidal_pos(n: int, d: int) -> jax.Array:
+    pos = np.arange(n)[:, None]
+    dim = np.arange(d // 2)[None, :]
+    ang = pos / (10000 ** (2 * dim / d))
+    out = np.concatenate([np.sin(ang), np.cos(ang)], axis=-1)
+    return jnp.asarray(out, jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Blocks
+# ---------------------------------------------------------------------------
+
+def _enc_block_init(ctx: nn.InitCtx, cfg: ModelConfig):
+    ks = ctx.split(4)
+    return {
+        "norm1": nn.ones(ks[0], (cfg.d_model,), ("embed",)),
+        "attn": attn.attn_init(ks[1], cfg),
+        "norm2": nn.ones(ks[2], (cfg.d_model,), ("embed",)),
+        "ffn": mlp.dense_ffn_init(ks[3], cfg, cfg.d_ff),
+    }
+
+
+def _dec_block_init(ctx: nn.InitCtx, cfg: ModelConfig):
+    ks = ctx.split(6)
+    return {
+        "norm1": nn.ones(ks[0], (cfg.d_model,), ("embed",)),
+        "self_attn": attn.attn_init(ks[1], cfg),
+        "norm_x": nn.ones(ks[2], (cfg.d_model,), ("embed",)),
+        "cross_attn": attn.attn_init(ks[3], cfg, cross=True),
+        "norm2": nn.ones(ks[4], (cfg.d_model,), ("embed",)),
+        "ffn": mlp.dense_ffn_init(ks[5], cfg, cfg.d_ff),
+    }
+
+
+def whisper_init(ctx: nn.InitCtx, cfg: ModelConfig):
+    ks = ctx.split(6)
+    d = cfg.d_model
+    return {
+        "embed": nn.normal(ks[0], (cfg.padded_vocab, d), ("vocab", "embed_fsdp")),
+        "enc_blocks": stack_init(
+            lambda c: _enc_block_init(c, cfg), cfg.n_encoder_layers, ks[1]
+        ),
+        "enc_norm": nn.ones(ks[2], (d,), ("embed",)),
+        "dec_blocks": stack_init(
+            lambda c: _dec_block_init(c, cfg), cfg.n_layers, ks[3]
+        ),
+        "dec_norm": nn.ones(ks[4], (d,), ("embed",)),
+        "head": nn.fan_in_normal(ks[5], (d, cfg.padded_vocab), ("embed_fsdp", "vocab")),
+    }
+
+
+def encode(p: dict, cfg: ModelConfig, frames: jax.Array) -> jax.Array:
+    """frames [B, F, d] (stub frontend output) -> encoder states [B, F, d]."""
+    x = frames.astype(cfg.jdtype) + sinusoidal_pos(frames.shape[1], cfg.d_model).astype(
+        cfg.jdtype
+    )
+    positions = jnp.arange(frames.shape[1], dtype=jnp.int32)
+
+    def body(x, bp):
+        h = nn.rms_norm(x, bp["norm1"], cfg.norm_eps)
+        y, _ = attn.attn_apply(bp["attn"], cfg, h, positions, causal=False)
+        x = x + y
+        h = nn.rms_norm(x, bp["norm2"], cfg.norm_eps)
+        x = x + mlp.dense_ffn_apply(bp["ffn"], h)
+        return maybe_constrain(x, ("batch", "seq", "embed")), None
+
+    if cfg.remat != "none":
+        body = jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable,
+                              prevent_cse=False)
+    if cfg.scan_layers and not cfg.analysis_unroll:
+        x, _ = jax.lax.scan(body, x, p["enc_blocks"])
+    else:
+        for g in range(cfg.n_encoder_layers):
+            x, _ = body(x, jax.tree.map(lambda t: t[g], p["enc_blocks"]))
+    return nn.rms_norm(x, p["enc_norm"], cfg.norm_eps)
+
+
+def _dec_block(bp, cfg, x, positions, enc_out, mode, cache, cache_len):
+    """cache = {"self": (k,v), "cross": (k,v)} or None."""
+    new_cache = {}
+    h = nn.rms_norm(x, bp["norm1"], cfg.norm_eps)
+    if mode == "decode":
+        y, new_cache["self"] = attn.attn_decode(
+            bp["self_attn"], cfg, h, cache["self"], cache_len
+        )
+    else:
+        y, c = attn.attn_apply(
+            bp["self_attn"], cfg, h, positions, causal=True,
+            return_cache=(mode == "prefill"),
+        )
+        if c is not None:
+            new_cache["self"] = c
+    x = x + y
+
+    h = nn.rms_norm(x, bp["norm_x"], cfg.norm_eps)
+    if mode == "decode":
+        y, _ = attn.attn_decode(
+            bp["cross_attn"], cfg, h, cache["cross"],
+            jnp.int32(cache["cross"][0].shape[1]), cross=True,
+        )
+        new_cache["cross"] = cache["cross"]
+    else:
+        y, c = attn.attn_apply(
+            bp["cross_attn"], cfg, h, positions, causal=False, kv=enc_out,
+            return_cache=(mode == "prefill"),
+        )
+        if c is not None:
+            new_cache["cross"] = c
+    x = x + y
+
+    h = nn.rms_norm(x, bp["norm2"], cfg.norm_eps)
+    x = x + mlp.dense_ffn_apply(bp["ffn"], h)
+    x = maybe_constrain(x, ("batch", "seq", "embed"))
+    return x, (new_cache if new_cache else None)
+
+
+def whisper_forward(
+    p: dict,
+    cfg: ModelConfig,
+    batch: dict,
+    mode: str = "train",
+    cache: Optional[dict] = None,
+    cache_len=None,
+):
+    """train/prefill: batch = {frames [B,F,d], tokens [B,S]};
+    decode: batch = {tokens [B,1]} + cache (self KV + static cross KV)."""
+    x = jnp.take(fsdp_gather(p["embed"], ("vocab", "embed_fsdp")), batch["tokens"], axis=0)
+    x = maybe_constrain(x, ("batch", "seq", "embed"))
+    B, S = x.shape[0], x.shape[1]
+    positions = jnp.arange(S, dtype=jnp.int32)
+    enc_out = None
+    if mode != "decode":
+        enc_out = encode(p, cfg, batch["frames"])
+
+    def body(x, xs):
+        bp, bcache = xs
+        return _dec_block(bp, cfg, x, positions, enc_out, mode, bcache, cache_len)
+
+    if mode == "train" and cfg.remat != "none":
+        body = jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable,
+                              prevent_cse=False)
+
+    if cfg.scan_layers and not cfg.analysis_unroll:
+        if cache is None:
+            x, caches = jax.lax.scan(
+                lambda c, bp: body(c, (bp, None)), x, p["dec_blocks"]
+            )
+        else:
+            x, caches = jax.lax.scan(body, x, (p["dec_blocks"], cache["dec"]))
+    else:
+        cache_list = []
+        for g in range(cfg.n_layers):
+            bp = jax.tree.map(lambda t: t[g], p["dec_blocks"])
+            bc = None if cache is None else jax.tree.map(lambda t: t[g], cache["dec"])
+            x, c_new = body(x, (bp, bc))
+            cache_list.append(c_new)
+        caches = (
+            jax.tree.map(lambda *xs: jnp.stack(xs), *cache_list)
+            if cache_list and cache_list[0]
+            else {}
+        )
+
+    x = nn.rms_norm(x, p["dec_norm"], cfg.norm_eps)
+    if mode == "prefill":
+        x = x[:, -1:]
+    logits = nn.dense(x, fsdp_gather(p["head"], ("embed_fsdp", "vocab")))
+    if cfg.logits_f32:
+        logits = logits.astype(jnp.float32)
+    logits = maybe_constrain(logits, ("batch", "seq", "vocab"))
+    new_cache = {"dec": caches} if mode in ("prefill", "decode") else None
+    return logits, new_cache, jnp.float32(0.0)
+
+
+def whisper_init_cache(cfg: ModelConfig, batch: int, cap: int, abstract=False):
+    self_c = attn.init_cache(cfg, batch, cap, abstract)
+    F = cfg.n_audio_frames
+    cross_c = attn.init_cache(cfg, batch, F, abstract)
+    entry = {"self": self_c, "cross": cross_c}
+    nL = cfg.n_layers
+
+    def stack(leaf):
+        if abstract:
+            return jax.ShapeDtypeStruct((nL,) + leaf.shape, leaf.dtype)
+        return jnp.broadcast_to(leaf[None], (nL,) + leaf.shape).copy()
+
+    return {"dec": jax.tree.map(stack, entry)}
+
+
+def whisper_cache_axes(cfg: ModelConfig):
+    entry = {
+        "self": (attn.CACHE_AXES, attn.CACHE_AXES),
+        "cross": (attn.CACHE_AXES, attn.CACHE_AXES),
+    }
+    return {
+        "dec": jax.tree.map(
+            lambda names: ("layers",) + tuple(names),
+            entry,
+            is_leaf=lambda x: isinstance(x, tuple)
+            and all(isinstance(i, (str, type(None))) for i in x),
+        )
+    }
+
+
+def whisper_loss(p, cfg: ModelConfig, batch: dict):
+    logits, _, _ = whisper_forward(p, cfg, batch, mode="train")
+    ce, n = nn.softmax_cross_entropy(logits, batch["labels"])
+    return ce, {"ce": ce, "n_tokens": n}

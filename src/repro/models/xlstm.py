@@ -1,0 +1,330 @@
+"""xLSTM blocks: mLSTM (matrix memory, chunked-parallel) and sLSTM
+(scalar memory, sequential recurrence with exponential gating).
+
+TPU adaptation (DESIGN.md §3): mLSTM's matrix-memory recurrence
+
+    C_t = f_t * C_{t-1} + i_t * (k_t v_t^T),    n_t = f_t * n_{t-1} + i_t k_t
+    h_t = o_t * (C_t q_t) / max(|n_t^T q_t|, 1)
+
+is evaluated in log-stabilized chunked form (same chunk machinery as the
+Mamba SSD path: intra-chunk [Q, Q] masked matmuls + inter-chunk state scan),
+instead of porting the fused CUDA recurrence.  `mlstm_scan_ref` is the
+sequential oracle with identical stabilization semantics; tests assert
+chunked == ref.
+
+sLSTM's recurrent weights make each step depend on h_{t-1}; it cannot be
+parallelized over time, so it is a lax.scan — the xLSTM paper makes the same
+observation (sLSTM "is not parallelizable").  It is used in a 1:1 interleave
+for xlstm-125m, where the sequential cost is acceptable.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.config import ModelConfig
+from repro.nn import core as nn
+from repro.nn.sharding import fsdp_gather
+
+NEG_INF = -1e30
+
+
+# ===========================================================================
+# mLSTM
+# ===========================================================================
+
+def mlstm_init(ctx: nn.InitCtx, cfg: ModelConfig):
+    d = cfg.d_model
+    di = int(cfg.mlstm_proj_factor * d)
+    keys = [c.key for c in ctx.split(8)]
+    c = lambda k: dataclasses.replace(ctx, key=k)
+    return {
+        "w_up": nn.fan_in_normal(c(keys[0]), (d, 2 * di), ("embed_fsdp", "mlp")),
+        "w_q": nn.fan_in_normal(c(keys[1]), (di, di), ("mlp", "qkv")),
+        "w_k": nn.fan_in_normal(c(keys[2]), (di, di), ("mlp", "qkv")),
+        "w_v": nn.fan_in_normal(c(keys[3]), (di, di), ("mlp", "qkv")),
+        "w_i": nn.normal(c(keys[4]), (di, cfg.n_heads), ("mlp", "heads"), stddev=0.02),
+        "w_f": nn.normal(c(keys[5]), (di, cfg.n_heads), ("mlp", "heads"), stddev=0.02),
+        "b_i": nn.zeros(c(keys[4]), (cfg.n_heads,), ("heads",)),
+        "b_f": nn.ones(c(keys[5]), (cfg.n_heads,), ("heads",)),   # forget-bias > 0
+        "w_o": nn.fan_in_normal(c(keys[6]), (di, di), ("mlp", "qkv")),
+        "norm": nn.ones(c(keys[7]), (di,), ("mlp",)),
+        "w_down": nn.fan_in_normal(c(keys[7]), (di, d), ("mlp", "embed_fsdp"), fan_in=di),
+    }
+
+
+def mlstm_chunked(q, k, v, log_f, log_i, chunk: int, state: Optional[dict] = None,
+                  unroll: bool = False):
+    """q/k/v [B, L, nH, dh]; log_f/log_i [B, L, nH].
+    Returns (h [B, L, nH, dh], state{C,n,m})."""
+    B, L, nH, dh = q.shape
+    Q = min(chunk, L)
+    pad = (-L) % Q
+    if pad:
+        z4 = ((0, 0), (0, pad), (0, 0), (0, 0))
+        z3 = ((0, 0), (0, pad), (0, 0))
+        q, k, v = (jnp.pad(t, z4) for t in (q, k, v))
+        log_f = jnp.pad(log_f, z3)                 # log f = 0 => f=1 (benign)
+        log_i = jnp.pad(log_i, z3, constant_values=NEG_INF)  # i = 0
+    Lp = L + pad
+    nC = Lp // Q
+    scale = 1.0 / np.sqrt(dh)
+
+    def resh(t, extra):
+        return t.reshape((B, nC, Q) + extra).transpose(1, 0, 2, *range(3, 3 + len(extra)))
+
+    qc = resh(q.astype(jnp.float32) * scale, (nH, dh))
+    kc = resh(k.astype(jnp.float32), (nH, dh))
+    vc = resh(v.astype(jnp.float32), (nH, dh))
+    fc = resh(log_f.astype(jnp.float32), (nH,))
+    ic = resh(log_i.astype(jnp.float32), (nH,))
+
+    if state is None:
+        C0 = jnp.zeros((B, nH, dh, dh), jnp.float32)
+        n0 = jnp.zeros((B, nH, dh), jnp.float32)
+        m0 = jnp.full((B, nH), NEG_INF, jnp.float32)
+    else:
+        C0, n0, m0 = state["C"], state["n"], state["m"]
+
+    def body(carry, args):
+        C, n, m = carry
+        qq, kk, vv, lf, li = args                    # [B,Q,nH,dh]x3, [B,Q,nH]x2
+        b = jnp.cumsum(lf, axis=1)                   # [B, Q, nH]
+        # log decay(t,s) = b_t - b_s + li_s  (s <= t)
+        dec = b[:, :, None, :] - b[:, None, :, :] + li[:, None, :, :]
+        tri = jnp.tril(jnp.ones((Q, Q), bool))
+        dec = jnp.where(tri[None, :, :, None], dec, NEG_INF)
+        m_intra = jnp.max(dec, axis=2)               # [B, Q, nH]
+        m_inter = b + m[:, None, :]                  # [B, Q, nH]
+        m_t = jnp.maximum(m_intra, m_inter)
+        m_t = jnp.maximum(m_t, -30.0)                # keep denom representable
+
+        D = jnp.exp(dec - m_t[:, :, None, :])        # [B, t, s, nH]
+        s_qk = jnp.einsum("bthd,bshd->btsh", qq, kk)
+        scores = s_qk * D
+        num = jnp.einsum("btsh,bshd->bthd", scores, vv)
+        num = num + jnp.einsum("bthd,bhde->bthe", qq, C) * jnp.exp(m_inter - m_t)[..., None]
+        nvec = jnp.einsum("btsh,bshd->bthd", D, kk)
+        nvec = nvec + n[:, None] * jnp.exp(m_inter - m_t)[..., None]
+        qn = jnp.einsum("bthd,bthd->bth", qq, nvec)
+        denom = jnp.maximum(jnp.abs(qn), jnp.exp(-m_t))
+        h = num / denom[..., None]
+
+        # end-of-chunk state
+        btot = b[:, -1]                               # [B, nH]
+        m_cand = jnp.max(
+            jnp.where(True, btot[:, None, :] - b + li, NEG_INF), axis=1
+        )                                             # [B, nH]
+        m_new = jnp.maximum(btot + m, m_cand)
+        m_new = jnp.maximum(m_new, -30.0)
+        w = jnp.exp(btot[:, None, :] - b + li - m_new[:, None, :])   # [B,Q,nH]
+        C_new = C * jnp.exp(btot + m - m_new)[..., None, None] + jnp.einsum(
+            "bshd,bshe->bhde", kk * w[..., None], vv
+        )
+        n_new = n * jnp.exp(btot + m - m_new)[..., None] + jnp.einsum(
+            "bshd->bhd", kk * w[..., None]
+        )
+        return (C_new, n_new, m_new), h
+
+    # checkpoint per chunk (same VJP-residual rationale as mamba.ssd_chunked)
+    body = jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable)
+    if unroll:
+        carry, ys = (C0, n0, m0), []
+        for i in range(nC):
+            carry, h_i = body(carry, (qc[i], kc[i], vc[i], fc[i], ic[i]))
+            ys.append(h_i)
+        (Cf, nf, mf), hs = carry, jnp.stack(ys)
+    else:
+        (Cf, nf, mf), hs = jax.lax.scan(body, (C0, n0, m0), (qc, kc, vc, fc, ic))
+    h = hs.transpose(1, 0, 2, 3, 4).reshape(B, Lp, nH, dh)[:, :L]
+    return h, {"C": Cf, "n": nf, "m": mf}
+
+
+def mlstm_scan_ref(q, k, v, log_f, log_i, state: Optional[dict] = None):
+    """Sequential oracle, identical stabilization semantics."""
+    B, L, nH, dh = q.shape
+    scale = 1.0 / np.sqrt(dh)
+    if state is None:
+        C = jnp.zeros((B, nH, dh, dh), jnp.float32)
+        n = jnp.zeros((B, nH, dh), jnp.float32)
+        m = jnp.full((B, nH), NEG_INF, jnp.float32)
+    else:
+        C, n, m = state["C"], state["n"], state["m"]
+
+    def step(carry, args):
+        C, n, m = carry
+        q_t, k_t, v_t, lf_t, li_t = args
+        m_new = jnp.maximum(jnp.maximum(lf_t + m, li_t), -30.0)
+        fw = jnp.exp(lf_t + m - m_new)
+        iw = jnp.exp(li_t - m_new)
+        C = C * fw[..., None, None] + iw[..., None, None] * jnp.einsum(
+            "bhd,bhe->bhde", k_t, v_t
+        )
+        n = n * fw[..., None] + iw[..., None] * k_t
+        qs = q_t * scale
+        num = jnp.einsum("bhd,bhde->bhe", qs, C)
+        qn = jnp.einsum("bhd,bhd->bh", qs, n)
+        denom = jnp.maximum(jnp.abs(qn), jnp.exp(-m_new))
+        h = num / denom[..., None]
+        return (C, n, m_new), h
+
+    xs = tuple(
+        t.astype(jnp.float32).transpose(1, 0, 2, *range(3, t.ndim))
+        for t in (q, k, v, log_f, log_i)
+    )
+    (Cf, nf, mf), hs = jax.lax.scan(step, (C, n, m), xs)
+    return hs.transpose(1, 0, 2, 3), {"C": Cf, "n": nf, "m": mf}
+
+
+def _mlstm_qkv(p, cfg, x_in):
+    B, L, _ = x_in.shape
+    di = p["w_q"].shape[0]
+    nH = cfg.n_heads
+    dh = di // nH
+    q = nn.dense(x_in, p["w_q"]).reshape(B, L, nH, dh)
+    k = nn.dense(x_in, p["w_k"]).reshape(B, L, nH, dh)
+    v = nn.dense(x_in, p["w_v"]).reshape(B, L, nH, dh)
+    log_i = nn.dense(x_in, p["w_i"]).astype(jnp.float32) + p["b_i"]
+    log_f = jax.nn.log_sigmoid(
+        nn.dense(x_in, p["w_f"]).astype(jnp.float32) + p["b_f"]
+    )
+    return q, k, v, log_f, log_i
+
+
+def mlstm_apply(p: dict, cfg: ModelConfig, x: jax.Array, state=None, return_state=False):
+    B, L, d = x.shape
+    up = nn.dense(x, fsdp_gather(p["w_up"], ("embed_fsdp", "mlp")))
+    x_in, z = jnp.split(up, 2, axis=-1)
+    q, k, v, log_f, log_i = _mlstm_qkv(p, cfg, x_in)
+    h, new_state = mlstm_chunked(
+        q, k, v, log_f, log_i, cfg.mlstm_chunk, state, unroll=cfg.analysis_unroll
+    )
+    di = x_in.shape[-1]
+    h = h.reshape(B, L, di).astype(x.dtype)
+    o = jax.nn.sigmoid(nn.dense(x_in, p["w_o"]))
+    y = nn.rms_norm(h * o, p["norm"], cfg.norm_eps) * jax.nn.silu(z)
+    out = nn.dense(y, fsdp_gather(p["w_down"], ("mlp", "embed_fsdp")))
+    return out, (new_state if return_state else None)
+
+
+def mlstm_decode(p: dict, cfg: ModelConfig, x: jax.Array, state: dict):
+    """x [B, 1, d]; O(1) state update via the sequential oracle step."""
+    up = nn.dense(x, fsdp_gather(p["w_up"], ("embed_fsdp", "mlp")))
+    x_in, z = jnp.split(up, 2, axis=-1)
+    q, k, v, log_f, log_i = _mlstm_qkv(p, cfg, x_in)
+    h, new_state = mlstm_scan_ref(q, k, v, log_f, log_i, state)
+    B = x.shape[0]
+    di = x_in.shape[-1]
+    h = h.reshape(B, 1, di).astype(x.dtype)
+    o = jax.nn.sigmoid(nn.dense(x_in, p["w_o"]))
+    y = nn.rms_norm(h * o, p["norm"], cfg.norm_eps) * jax.nn.silu(z)
+    return nn.dense(y, fsdp_gather(p["w_down"], ("mlp", "embed_fsdp"))), new_state
+
+
+def init_mlstm_state(cfg: ModelConfig, batch: int, abstract: bool = False):
+    di = int(cfg.mlstm_proj_factor * cfg.d_model)
+    nH = cfg.n_heads
+    dh = di // nH
+    shapes = {
+        "C": ((batch, nH, dh, dh), jnp.float32),
+        "n": ((batch, nH, dh), jnp.float32),
+        "m": ((batch, nH), jnp.float32),
+    }
+    if abstract:
+        return {k: jax.ShapeDtypeStruct(s, d) for k, (s, d) in shapes.items()}
+    out = {k: jnp.zeros(s, d) for k, (s, d) in shapes.items()}
+    out["m"] = jnp.full(shapes["m"][0], NEG_INF, jnp.float32)
+    return out
+
+
+MLSTM_STATE_AXES = {
+    "C": ("cache_batch", "heads", "head_dim", "head_dim"),
+    "n": ("cache_batch", "heads", "head_dim"),
+    "m": ("cache_batch", "heads"),
+}
+
+
+# ===========================================================================
+# sLSTM
+# ===========================================================================
+
+def slstm_init(ctx: nn.InitCtx, cfg: ModelConfig):
+    d = cfg.d_model
+    nH = cfg.n_heads
+    dh = d // nH
+    dff = int(cfg.slstm_proj_factor * d)
+    keys = [c.key for c in ctx.split(6)]
+    c = lambda k: dataclasses.replace(ctx, key=k)
+    return {
+        "w": nn.fan_in_normal(c(keys[0]), (d, 4 * d), ("embed_fsdp", "mlp")),
+        "r": nn.normal(c(keys[1]), (nH, dh, 4 * dh), ("heads", "head_dim", "mlp"), stddev=0.02),
+        "b": nn.zeros(c(keys[2]), (4 * d,), ("mlp",)),
+        "up": {
+            "w_gate": nn.fan_in_normal(c(keys[3]), (d, dff), ("embed_fsdp", "mlp")),
+            "w_up": nn.fan_in_normal(c(keys[4]), (d, dff), ("embed_fsdp", "mlp")),
+            "w_down": nn.fan_in_normal(c(keys[5]), (dff, d), ("mlp", "embed_fsdp"), fan_in=dff),
+        },
+    }
+
+
+def slstm_cell(p: dict, cfg: ModelConfig, x_seq: jax.Array, state: dict):
+    """x_seq [B, L, d]; recurrent scan over L.  Returns (h [B,L,d], state)."""
+    B, L, d = x_seq.shape
+    nH = cfg.n_heads
+    dh = d // nH
+    wx = nn.dense(
+        x_seq, fsdp_gather(p["w"], ("embed_fsdp", "mlp"))
+    ).astype(jnp.float32)                                          # [B, L, 4d]
+
+    def step(carry, wx_t):
+        c, n, m, h_prev = carry
+        hh = h_prev.reshape(B, nH, dh)
+        rec = jnp.einsum("bhd,hdf->bhf", hh, p["r"].astype(jnp.float32))
+        gates = wx_t + rec.reshape(B, 4 * d) + p["b"].astype(jnp.float32)
+        i_r, f_r, z_r, o_r = jnp.split(gates, 4, axis=-1)
+        m_new = jnp.maximum(jnp.maximum(f_r + m, i_r), -30.0)
+        c_new = jnp.exp(f_r + m - m_new) * c + jnp.exp(i_r - m_new) * jnp.tanh(z_r)
+        n_new = jnp.exp(f_r + m - m_new) * n + jnp.exp(i_r - m_new)
+        h = jax.nn.sigmoid(o_r) * c_new / jnp.maximum(n_new, 1e-6)
+        return (c_new, n_new, m_new, h), h
+
+    carry = (state["c"], state["n"], state["m"], state["h"])
+    carry, hs = jax.lax.scan(step, carry, wx.transpose(1, 0, 2))
+    c, n, m, h = carry
+    return hs.transpose(1, 0, 2).astype(x_seq.dtype), {"c": c, "n": n, "m": m, "h": h}
+
+
+def slstm_apply(p: dict, cfg: ModelConfig, x: jax.Array, state=None, return_state=False):
+    B = x.shape[0]
+    if state is None:
+        state = init_slstm_state(cfg, B)
+    h, new_state = slstm_cell(p, cfg, x, state)
+    y = h + nn.swiglu(
+        h,
+        fsdp_gather(p["up"]["w_gate"], ("embed_fsdp", "mlp")),
+        fsdp_gather(p["up"]["w_up"], ("embed_fsdp", "mlp")),
+        fsdp_gather(p["up"]["w_down"], ("mlp", "embed_fsdp")),
+    )
+    return y, (new_state if return_state else None)
+
+
+def slstm_decode(p: dict, cfg: ModelConfig, x: jax.Array, state: dict):
+    y, new_state = slstm_apply(p, cfg, x, state, return_state=True)
+    return y, new_state
+
+
+def init_slstm_state(cfg: ModelConfig, batch: int, abstract: bool = False):
+    d = cfg.d_model
+    shape = (batch, d)
+    if abstract:
+        a = jax.ShapeDtypeStruct(shape, jnp.float32)
+        return {"c": a, "n": a, "m": a, "h": a}
+    z = jnp.zeros(shape, jnp.float32)
+    return {"c": z, "n": z, "m": jnp.full(shape, -30.0, jnp.float32), "h": z}
+
+
+SLSTM_STATE_AXES = {k: ("cache_batch", "embed") for k in ("c", "n", "m", "h")}

@@ -1,0 +1,138 @@
+"""Minimal functional module system.
+
+No flax/haiku offline — params are plain nested dicts of jnp arrays.  Every
+initializer returns a tree of `Annotated(value, names)` leaves where `names`
+are *logical* axis names ("embed", "mlp", "heads", ...); `unzip` splits the
+tree into (params, axes) and `repro.nn.sharding` maps logical names onto
+mesh axes per layout.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class Annotated(NamedTuple):
+    value: Any                      # jnp array or ShapeDtypeStruct
+    names: tuple                    # logical axis names, len == value.ndim
+
+
+def is_annotated(x) -> bool:
+    return isinstance(x, Annotated)
+
+
+def unzip(tree):
+    """Tree of Annotated -> (params tree, axes tree)."""
+    params = jax.tree.map(lambda a: a.value, tree, is_leaf=is_annotated)
+    axes = jax.tree.map(lambda a: a.names, tree, is_leaf=is_annotated)
+    return params, axes
+
+
+def zip_trees(params, axes):
+    return jax.tree.map(Annotated, params, axes)
+
+
+# ---------------------------------------------------------------------------
+# Initializers.  All inits take an explicit key and produce Annotated leaves.
+# When `abstract=True` they produce ShapeDtypeStruct leaves instead — used by
+# the dry-run to build parameter pytrees without allocating 398B params.
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class InitCtx:
+    key: jax.Array
+    dtype: Any = jnp.bfloat16
+    abstract: bool = False
+
+    def split(self, n: int = 2):
+        keys = jax.random.split(self.key, n)
+        return [dataclasses.replace(self, key=k) for k in keys]
+
+    def fold(self, name: str) -> "InitCtx":
+        return dataclasses.replace(
+            self, key=jax.random.fold_in(self.key, _stable_hash(name))
+        )
+
+
+def _stable_hash(s: str) -> int:
+    h = 2166136261
+    for c in s.encode():
+        h = (h ^ c) * 16777619 % (1 << 31)
+    return h
+
+
+def normal(ctx: InitCtx, shape, names, stddev: float = 0.02) -> Annotated:
+    assert len(shape) == len(names), (shape, names)
+    if ctx.abstract:
+        return Annotated(jax.ShapeDtypeStruct(tuple(shape), ctx.dtype), tuple(names))
+    v = (jax.random.normal(ctx.key, tuple(shape), jnp.float32) * stddev).astype(ctx.dtype)
+    return Annotated(v, tuple(names))
+
+
+def zeros(ctx: InitCtx, shape, names) -> Annotated:
+    if ctx.abstract:
+        return Annotated(jax.ShapeDtypeStruct(tuple(shape), ctx.dtype), tuple(names))
+    return Annotated(jnp.zeros(tuple(shape), ctx.dtype), tuple(names))
+
+
+def ones(ctx: InitCtx, shape, names) -> Annotated:
+    if ctx.abstract:
+        return Annotated(jax.ShapeDtypeStruct(tuple(shape), ctx.dtype), tuple(names))
+    return Annotated(jnp.ones(tuple(shape), ctx.dtype), tuple(names))
+
+
+def fan_in_normal(ctx: InitCtx, shape, names, fan_in: Optional[int] = None) -> Annotated:
+    fan_in = fan_in if fan_in is not None else shape[0]
+    return normal(ctx, shape, names, stddev=1.0 / float(np.sqrt(max(fan_in, 1))))
+
+
+# ---------------------------------------------------------------------------
+# Stateless layer math (params passed explicitly)
+# ---------------------------------------------------------------------------
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-5) -> jax.Array:
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    out = x32 * jax.lax.rsqrt(var + eps)
+    return (out * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def layer_norm(x, scale, bias, eps: float = 1e-5):
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    out = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    return (out * scale.astype(jnp.float32) + bias.astype(jnp.float32)).astype(x.dtype)
+
+
+def dense(x: jax.Array, w: jax.Array, b: Optional[jax.Array] = None) -> jax.Array:
+    out = jnp.einsum("...d,df->...f", x, w)
+    if b is not None:
+        out = out + b
+    return out
+
+
+def swiglu(x, w_gate, w_up, w_down):
+    return dense(jax.nn.silu(dense(x, w_gate)) * dense(x, w_up), w_down)
+
+
+def softmax_cross_entropy(
+    logits: jax.Array,      # [..., V] (any float dtype; upcast inside)
+    labels: jax.Array,      # [...] int32, -100 = ignore
+    z_loss: float = 0.0,
+) -> tuple[jax.Array, jax.Array]:
+    """Mean CE over non-ignored positions; returns (loss, n_valid)."""
+    valid = labels != -100
+    safe = jnp.where(valid, labels, 0)
+    logits32 = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits32, axis=-1)
+    gold = jnp.take_along_axis(logits32, safe[..., None], axis=-1)[..., 0]
+    ce = lse - gold
+    if z_loss:
+        ce = ce + z_loss * lse**2
+    n = jnp.maximum(jnp.sum(valid), 1)
+    return jnp.sum(jnp.where(valid, ce, 0.0)) / n, n

@@ -1,0 +1,249 @@
+"""Logical-axis -> mesh-axis sharding rules with divisibility fallback.
+
+MaxText-style: every param/activation dim carries a logical name; a layout
+maps logical names to mesh axes (a mesh axis, a tuple of mesh axes, or
+None).  `logical_to_spec` resolves a concrete PartitionSpec for a given
+array shape on a given mesh, enforcing two invariants that make ONE
+production mesh serve archs from whisper-tiny (d=384) to jamba-398B:
+
+  * divisibility fallback — if the mapped mesh axes do not evenly divide a
+    dim, trailing axes of the mapping are dropped (replicate instead of
+    crash); drops are recorded for the dry-run report;
+  * single-use — a mesh axis may shard at most one dim of a tensor; later
+    logical dims lose the conflicting axis.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence, Union
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+AxisMap = dict  # logical name -> mesh axis | tuple[mesh axes] | None
+
+
+@dataclasses.dataclass
+class LayoutReport:
+    """Record of fallback decisions (surfaced in EXPERIMENTS.md §Dry-run)."""
+    dropped: list = dataclasses.field(default_factory=list)
+
+    def note(self, tensor: str, dim: int, axes, size: int):
+        self.dropped.append((tensor, dim, tuple(axes), size))
+
+
+def _as_tuple(v) -> tuple:
+    if v is None:
+        return ()
+    if isinstance(v, (tuple, list)):
+        return tuple(v)
+    return (v,)
+
+
+def logical_to_spec(
+    names: Sequence[Optional[str]],
+    shape: Sequence[int],
+    mesh: Mesh,
+    rules: AxisMap,
+    report: Optional[LayoutReport] = None,
+    tensor_name: str = "?",
+) -> P:
+    mesh_sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    used: set = set()
+    spec = []
+    for d, (name, size) in enumerate(zip(names, shape)):
+        axes = [a for a in _as_tuple(rules.get(name)) if a in mesh_sizes]
+        # single-use: drop axes already consumed by an earlier dim
+        axes = [a for a in axes if a not in used]
+        # divisibility fallback: drop trailing axes until the product divides
+        while axes and size % int(np.prod([mesh_sizes[a] for a in axes])) != 0:
+            dropped = axes.pop()
+            if report is not None:
+                report.note(tensor_name, d, (dropped,), size)
+        used.update(axes)
+        if not axes:
+            spec.append(None)
+        elif len(axes) == 1:
+            spec.append(axes[0])
+        else:
+            spec.append(tuple(axes))
+    return P(*spec)
+
+
+def tree_shardings(
+    axes_tree,
+    shapes_tree,
+    mesh: Mesh,
+    rules: AxisMap,
+    report: Optional[LayoutReport] = None,
+):
+    """Axes tree (tuples of logical names) + shapes tree -> NamedSharding tree."""
+
+    def one(names, arr):
+        shape = arr.shape if hasattr(arr, "shape") else tuple(arr)
+        spec = logical_to_spec(names, shape, mesh, rules, report)
+        return NamedSharding(mesh, spec)
+
+    return jax.tree.map(one, axes_tree, shapes_tree, is_leaf=lambda x: isinstance(x, tuple) and all(isinstance(i, (str, type(None))) for i in x))
+
+
+def constrain(x: jax.Array, names: Sequence[Optional[str]], mesh: Mesh, rules: AxisMap):
+    """with_sharding_constraint via logical names (no-op outside jit mesh)."""
+    spec = logical_to_spec(names, x.shape, mesh, rules)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+# ---------------------------------------------------------------------------
+# Trace-time activation-constraint context.
+#
+# Model code calls maybe_constrain(x, names) at block boundaries; it is a
+# no-op unless a launcher installed (mesh, rules) for the trace.  Without
+# these constraints GSPMD is free to resolve batch-vs-FSDP axis conflicts by
+# replicating the batch (measured on whisper-tiny train_4k: 27 GB logits
+# all-reduce because [global_batch, S, vocab] went device-replicated).
+# ---------------------------------------------------------------------------
+
+import contextlib
+import threading
+
+_ACT = threading.local()
+
+
+@contextlib.contextmanager
+def activation_sharding(mesh: Mesh, rules: AxisMap):
+    prev = getattr(_ACT, "ctx", None)
+    _ACT.ctx = (mesh, rules)
+    try:
+        yield
+    finally:
+        _ACT.ctx = prev
+
+
+def maybe_constrain(x: jax.Array, names: Sequence[Optional[str]]) -> jax.Array:
+    ctx = getattr(_ACT, "ctx", None)
+    if ctx is None:
+        return x
+    mesh, rules = ctx
+    return constrain(x, names, mesh, rules)
+
+
+def fsdp_gather(w: jax.Array, names: Sequence[Optional[str]]) -> jax.Array:
+    """Explicit FSDP use-site gather: constrain `w` to its spec with the
+    "embed_fsdp" (storage-sharding) dim replicated.  XLA materializes one
+    weight all-gather right here and reduce-scatters the gradient on the
+    transpose — instead of leaving GSPMD to resolve the
+    w[d@data] x act[batch@data] contraction conflict by replicating the
+    batch (measured: 492 GB/device temps on jamba train_4k).  No-op outside
+    an activation_sharding context or when "embed_fsdp" maps to None."""
+    ctx = getattr(_ACT, "ctx", None)
+    if ctx is None:
+        return w
+    mesh, rules = ctx
+    if not rules.get("__use_site_gather__", True):
+        return w                      # weight-stationary layouts (serve_big)
+    gathered = tuple(None if n == "embed_fsdp" else n for n in names)
+    return constrain(w, gathered, mesh, rules)
+
+
+# ---------------------------------------------------------------------------
+# Layout presets (DESIGN.md §5).  Mesh axes: ("pod",) "data", "model".
+# ---------------------------------------------------------------------------
+
+def train_layout() -> AxisMap:
+    """DP(+pod) over batch, FSDP over embed-ish param dims, TP over
+    heads/mlp/vocab.  Sequence dim replicated (XLA overlaps collectives)."""
+    return {
+        "batch": ("pod", "data"),
+        "cache_batch": ("pod", "data"),   # KV/state cache batch dim
+        "seq": None,
+        "embed": None,
+        "embed_fsdp": ("data",),          # param embed dims: FSDP shard
+        "heads": ("model",),
+        "kv_heads": ("model",),
+        "qkv": ("model",),
+        "head_dim": None,
+        "mlp": ("model",),
+        "vocab": ("model",),
+        # expert parallelism on the model axis: each model shard owns E/16
+        # experts whole; the per-expert FSDP dim stays "embed_fsdp"->data.
+        # (experts->data would FSDP-gather ~19 GB of expert weights per MoE
+        # layer on jamba — measured 84 s collective term.)
+        "experts": ("model",),
+        "expert_mlp": None,
+        "layers": None,
+        "conv": None,
+        "state": None,
+        "frames": None,
+    }
+
+
+def serve_layout() -> AxisMap:
+    """Inference: batch over (pod,data), TP over heads/mlp/vocab; weights
+    FSDP over data so big models fit; cache batch over data."""
+    rules = train_layout()
+    rules.update({
+        "batch": ("pod", "data"),
+        # 2D cache sharding: batch over data, sequence over model — GQA
+        # kv_heads (4-8) never divide the 16-way model axis, and
+        # batch-only sharding leaves 25.8 GB/device of KV on
+        # internlm2 decode_32k (measured).
+        "cache_seq": ("model",),
+    })
+    return rules
+
+
+def serve_replicated_layout() -> AxisMap:
+    """§Perf iteration B: decode for <=20B-param archs.  Replicate weights
+    over the data axis (16-way TP over model only) — kills the per-step
+    FSDP weight all-gather that dominated the baseline serve layout
+    (qwen2-7b decode_32k: 38.6 ms collective term = ~1.9 GB of gathered
+    weights per decoded token)."""
+    rules = serve_layout()
+    rules.update({"embed_fsdp": None})
+    return rules
+
+
+def serve_big_layout() -> AxisMap:
+    """§Perf iteration C: weight-stationary decode for >20B archs (jamba,
+    llama4).  Weights keep their 2D (model x data) storage sharding and are
+    NOT gathered at use (use-site gather disabled); activations are
+    replicated over data, so each matmul contracts against its local weight
+    shard and all-reduces the [B, 1, f] activation — KBs per layer instead
+    of the baseline's GBs of weight movement per decoded token.  The KV
+    cache stays (cache_batch -> data, cache_seq -> model) sharded."""
+    rules = serve_layout()
+    rules.update({
+        "batch": None,            # activations replicated across data
+        "__use_site_gather__": False,
+        # non-expert weights: TP over model only (jamba: ~6.3 GB/device) —
+        # column-parallel matmuls stay local, row-parallel ones all-reduce
+        # tiny [B, 1, d] activations
+        "embed_fsdp": None,
+        # expert weights: (experts -> model) x (hidden -> data) so the
+        # nonlinear hidden stays shard-local and only the down-proj partial
+        # [B, E_loc, C, d] all-reduces (~16 MB/layer vs the 100 MB/layer
+        # hidden all-reduce measured with d-contraction sharding)
+        "expert_mlp": ("data",),
+    })
+    return rules
+
+
+def long_layout() -> AxisMap:
+    """long_500k: global_batch=1 — batch unshardable; shard the KV/state
+    sequence dim over data (sequence parallelism) and TP over model."""
+    rules = serve_big_layout()
+    rules.update({
+        "cache_seq": ("data",),
+        "seq": ("data",),
+    })
+    return rules
+
+
+LAYOUTS = {
+    "train": train_layout,
+    "serve": serve_layout,
+    "serve_replicated": serve_replicated_layout,
+    "serve_big": serve_big_layout,
+    "long": long_layout,
+}

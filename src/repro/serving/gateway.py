@@ -1,0 +1,166 @@
+"""Network-aware inference gateway — the paper's technique as a first-class
+serving feature (DESIGN.md §2).
+
+A fleet of model-serving replicas (pods) stands in for the paper's MCP
+server pool: each replica advertises a capability description (its arch +
+task competences, the analogue of d_m) and live latency telemetry.  The
+gateway routes every request with SONAR: two-stage BM25 capability match
+(Eq. 1-5) fused with the QoS score of each replica's telemetry (Eq. 7-8).
+Feed-forward recording closes the loop (Sec. III-B).
+
+At fleet scale the hot loop is vectorized through the Pallas kernels
+(`use_kernels=True`): one bm25_scores matmul for the batch x replica scores
+and one qos_scores pass over the telemetry matrix.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional, Sequence
+
+import numpy as np
+
+from repro.core import bm25 as bm25lib
+from repro.core import latency as latlib
+from repro.core.dataset import Server, Tool
+from repro.core.qos import DEFAULT_QOS, QosParams, network_score
+from repro.core.routing import RoutingConfig, SonarRouter
+
+ARCH_CAPABILITIES = {
+    "dense": "general purpose text generation chat completion dense transformer",
+    "moe": "mixture of experts text generation high throughput sparse compute",
+    "hybrid": "long context document summarization state space hybrid generation",
+    "ssm": "streaming long context low latency recurrent state generation",
+    "audio": "speech transcription audio translation whisper encoder decoder",
+    "vlm": "image understanding visual question answering multimodal vision language",
+}
+
+
+def replica_pool(
+    archs: Sequence[tuple],          # [(arch_id, family)], one per replica
+) -> list:
+    servers = []
+    for i, (arch_id, family) in enumerate(archs):
+        cap = ARCH_CAPABILITIES[family]
+        servers.append(
+            Server(
+                name=f"{arch_id}-replica-{i}",
+                domain=family,
+                description=f"{arch_id} serving replica: {cap}",
+                tools=[Tool("generate", f"generate text with {arch_id}: {cap}")],
+            )
+        )
+    return servers
+
+
+@dataclasses.dataclass
+class RouteResult:
+    replica_idx: int
+    latency_ms: float
+    ok: bool
+    expertise: float
+    network: float
+
+
+class SonarGateway:
+    """Routes requests across serving replicas with SONAR."""
+
+    def __init__(
+        self,
+        replicas: Sequence[Server],
+        profiles: Optional[list] = None,
+        cfg: RoutingConfig = RoutingConfig(top_s=8, top_k=8),
+        seed: int = 0,
+        history: int = 64,
+        executor: Optional[Callable] = None,   # (replica_idx, request) -> latency_ms
+        use_kernels: bool = False,
+    ):
+        import jax
+
+        self.replicas = list(replicas)
+        self.router = SonarRouter(self.replicas, cfg)
+        self.history = history
+        self.executor = executor
+        self.use_kernels = use_kernels
+        n = len(self.replicas)
+        if profiles is None:
+            profiles = [latlib.ideal_profile() for _ in range(n)]
+        packed = latlib.pack_profiles(profiles)
+        steps = latlib.trace_horizon_steps()
+        self.traces = np.asarray(
+            latlib.generate_traces_jit(jax.random.PRNGKey(seed), packed, steps)
+        )
+        self.telemetry = self.traces[:, :history].copy()
+        self.t = history
+        self.stats: list = []
+
+    def _observe(self, idx: int, latency_ms: float):
+        self.telemetry = np.roll(self.telemetry, -1, axis=1)
+        self.telemetry[:, -1] = self.traces[:, min(self.t, self.traces.shape[1] - 1)]
+        self.telemetry[idx, -1] = latency_ms
+        self.t += 1
+
+    def route(self, request_text: str) -> RouteResult:
+        decision = self.router.select(request_text, self.telemetry)
+        idx = decision.server_idx
+        if self.executor is not None:
+            latency = float(self.executor(idx, request_text))
+        else:
+            latency = float(self.traces[idx, min(self.t, self.traces.shape[1] - 1)])
+        ok = latency < latlib.OFFLINE_MS
+        self._observe(idx, latency)
+        res = RouteResult(
+            replica_idx=idx, latency_ms=latency, ok=ok,
+            expertise=decision.expertise, network=decision.network,
+        )
+        self.stats.append(res)
+        return res
+
+    def route_batch(self, request_texts: Sequence[str]) -> list:
+        """Fleet-scale batched routing through the Pallas kernels: one BM25
+        matmul over all (request, tool) pairs + one fused QoS pass."""
+        if not self.use_kernels:
+            return [self.route(t) for t in request_texts]
+        import jax.numpy as jnp
+
+        from repro.kernels import ops
+
+        index = self.router.index
+        # semantic: canonical intents -> tool scores (batch)
+        from repro.core.routing import predict_tool_type
+
+        qtexts = [predict_tool_type(t)[1] for t in request_texts]
+        qcounts = index.tool_corpus.encode_queries(qtexts)
+        scores = np.asarray(ops.bm25_scores(jnp.asarray(qcounts), jnp.asarray(index.tool_corpus.weights)))
+        # network: fused QoS over the full replica fleet
+        qos = np.asarray(ops.qos_scores(jnp.asarray(self.telemetry), self.router.cfg.qos))
+        out = []
+        for qi, text in enumerate(request_texts):
+            s = scores[qi]
+            k = min(self.router.cfg.top_k, s.shape[0])
+            cand = np.argsort(-s, kind="stable")[:k]
+            z = (s[cand] - s[cand].max()) / self.router.cfg.expertise_temp
+            C = np.exp(z) / np.exp(z).sum()
+            N = qos[index.tool_server[cand]]
+            S = self.router.cfg.alpha * C + self.router.cfg.beta * N
+            best = int(np.argmax(S))
+            idx = int(index.tool_server[cand[best]])
+            latency = float(self.traces[idx, min(self.t, self.traces.shape[1] - 1)])
+            self._observe(idx, latency)
+            res = RouteResult(
+                replica_idx=idx, latency_ms=latency,
+                ok=latency < latlib.OFFLINE_MS,
+                expertise=float(C[best]), network=float(N[best]),
+            )
+            self.stats.append(res)
+            out.append(res)
+        return out
+
+    def report(self) -> dict:
+        lat = np.array([r.latency_ms for r in self.stats])
+        ok = np.array([r.ok for r in self.stats])
+        return {
+            "n": len(self.stats),
+            "al_ms": float(lat.mean()) if len(lat) else 0.0,
+            "p99_ms": float(np.percentile(lat, 99)) if len(lat) else 0.0,
+            "failure_rate": float(1.0 - ok.mean()) if len(ok) else 0.0,
+        }

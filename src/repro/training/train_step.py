@@ -1,0 +1,35 @@
+"""Train-step factory: loss -> grads -> (optional compression) -> update."""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.api import Model
+from repro.training.optimizer import AdamW, quantize_grads
+
+
+def make_train_step(model: Model, opt: AdamW, grad_compression_bits: Optional[int] = None):
+    """Returns train_step(params, opt_state, batch) -> (params, opt_state, metrics)."""
+
+    def train_step(params, opt_state, batch):
+        (loss, metrics), grads = jax.value_and_grad(model.loss, has_aux=True)(
+            params, batch
+        )
+        if grad_compression_bits:
+            grads = quantize_grads(grads, grad_compression_bits)
+        params, opt_state, gnorm = opt.update(grads, opt_state, params)
+        out = {"loss": loss, "grad_norm": gnorm, **metrics}
+        return params, opt_state, out
+
+    return train_step
+
+
+def make_eval_step(model: Model):
+    def eval_step(params, batch):
+        loss, metrics = model.loss(params, batch)
+        return {"loss": loss, **metrics}
+
+    return eval_step

@@ -1,0 +1,47 @@
+"""Adaptive alpha/beta controller (paper Sec. VI future work, implemented)."""
+import numpy as np
+
+from repro.core import agent, dataset, metrics, platform
+from repro.core.adaptive import AdaptiveConfig, AdaptiveSonarRouter
+from repro.core.routing import RoutingConfig
+
+SERVERS = dataset.build_server_pool(seed=0)
+QUERIES = dataset.build_query_dataset(n=60, seed=0)
+
+
+def test_beta_rises_on_failures():
+    r = AdaptiveSonarRouter(SERVERS)
+    b0 = r.beta
+    for _ in range(4):
+        r.observe(latency_ms=1000.0, online=False)
+    assert r.beta > b0
+    assert r.beta <= r.adapt.beta_max
+
+
+def test_beta_recovers_when_healthy():
+    r = AdaptiveSonarRouter(SERVERS)
+    for _ in range(3):
+        r.observe(1000.0, online=False)
+    high = r.beta
+    for _ in range(100):
+        r.observe(25.0, online=True)
+    assert r.beta < high
+    assert abs(r.beta - (1 - r.adapt.target_alpha)) < 0.1
+
+
+def test_adaptive_router_in_agent_loop():
+    """End-to-end: starts semantic-heavy (alpha=0.8) yet still achieves 0%
+    failures in the hybrid scenario — the controller shifts weight to the
+    network term after the first failures."""
+    plat = platform.NetMCPPlatform(SERVERS, scenario="hybrid", seed=1)
+    r = AdaptiveSonarRouter(
+        SERVERS,
+        RoutingConfig(top_s=5, top_k=10),
+        AdaptiveConfig(target_alpha=0.95, beta_min=0.05),
+    )
+    ag = agent.Agent(plat, r)
+    recs = ag.run_benchmark(QUERIES, ticks_per_query=60)
+    rep = metrics.evaluate(recs, SERVERS)
+    assert rep.tsr > 80.0
+    assert rep.fr < 30.0               # a few early failures while adapting
+    assert max(r.history) > 0.06       # controller actually moved

@@ -1,0 +1,80 @@
+"""BM25 retrieval (Eq. 1-5) + Pallas kernel equivalence."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import bm25
+from repro.kernels import ops
+
+DOCS = [
+    "web search engine for the internet",
+    "database sql query execution",
+    "weather forecast for any city",
+    "search the web for news and articles",
+    "code refactoring and bug fixing",
+]
+
+
+def test_exact_match_ranks_first():
+    corpus = bm25.build_corpus(DOCS)
+    q = corpus.encode_query("web search internet")
+    scores = corpus.weights @ q
+    assert int(np.argmax(scores)) in (0, 3)
+    assert scores[0] > scores[1]  # beats the database doc
+
+
+def test_oov_terms_score_zero():
+    corpus = bm25.build_corpus(DOCS)
+    q = corpus.encode_query("zzz qqq xyzzy")
+    assert (corpus.weights @ q == 0).all()
+
+
+def test_idf_downweights_common_terms():
+    docs = ["the cat", "the dog", "the bird", "platypus"]
+    corpus = bm25.build_corpus(docs)
+    s_common = corpus.weights @ corpus.encode_query("the")
+    s_rare = corpus.weights @ corpus.encode_query("platypus")
+    assert s_rare.max() > s_common.max()
+
+
+def test_softmax_expertise_normalizes():
+    s = jnp.asarray([1.0, 2.0, 3.0])
+    c = np.asarray(bm25.softmax_expertise(s))
+    assert abs(c.sum() - 1.0) < 1e-6
+    assert c[2] > c[1] > c[0]
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    texts=st.lists(
+        st.text(alphabet="abcde ", min_size=1, max_size=30), min_size=1, max_size=8
+    )
+)
+def test_corpus_builds_on_arbitrary_text(texts):
+    corpus = bm25.build_corpus(texts + ["fallback doc"])
+    q = corpus.encode_query(texts[0])
+    scores = corpus.weights @ q
+    assert np.isfinite(scores).all()
+    if bm25.tokenize(texts[0]):
+        assert scores[0] >= scores.min()
+
+
+@pytest.mark.parametrize(
+    "nq,nd,V", [(1, 3, 17), (5, 64, 200), (130, 129, 513), (16, 300, 1024)]
+)
+def test_bm25_kernel_matches_oracle(nq, nd, V):
+    rng = np.random.default_rng(nq * 7 + nd)
+    q = (rng.random((nq, V)) < 0.05).astype(np.float32)
+    w = (rng.random((nd, V)).astype(np.float32)) * (rng.random((nd, V)) < 0.1)
+    got = np.asarray(ops.bm25_scores(jnp.asarray(q), jnp.asarray(w)))
+    want = np.asarray(bm25.bm25_scores(jnp.asarray(w), jnp.asarray(q)))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+
+def test_bm25_kernel_on_real_corpus():
+    corpus = bm25.build_corpus(DOCS * 30)  # 150 docs
+    qc = corpus.encode_queries(["web search news", "sql database", "weather in paris"])
+    got = np.asarray(ops.bm25_scores(jnp.asarray(qc), jnp.asarray(corpus.weights)))
+    want = qc @ corpus.weights.T
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)

@@ -1,0 +1,86 @@
+"""Latency-synthesis properties (NetMCP Module 2)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import latency as L
+
+
+def _trace(profile, n=2048, seed=0):
+    return np.asarray(
+        L.generate_trace(jax.random.PRNGKey(seed), jnp.asarray(profile.as_array()), n)
+    )
+
+
+def test_ideal_trace_statistics():
+    t = _trace(L.ideal_profile(), n=4096)
+    assert 25 < t.mean() < 35
+    assert t.std() < 10
+    assert (t >= 1.0).all()
+
+
+def test_high_latency_trace():
+    t = _trace(L.high_latency_profile(), n=4096)
+    assert 330 < t.mean() < 370
+    assert (t < L.OFFLINE_MS).all()
+
+
+def test_high_jitter_trace():
+    t = _trace(L.high_jitter_profile(), n=4096)
+    assert t.std() > 50
+
+
+def test_fluctuating_trace_periodicity():
+    p = L.fluctuating_profile(base_ms=150, amplitude_ms=100, period_s=1000, std_ms=1.0)
+    t = _trace(p, n=2000)  # dt=10s -> period = 100 samples
+    # autocorrelation at one period should be strongly positive
+    x = t - t.mean()
+    ac = float(np.dot(x[:-100], x[100:]) / np.dot(x, x))
+    assert ac > 0.7
+    assert 40 < t.min() < 60 and 240 < t.max() < 260
+
+
+def test_outage_stationary_fraction():
+    p = L.outage_profile(probability=0.5, duration_min_s=300, duration_max_s=600)
+    t = _trace(p, n=30000, seed=3)
+    frac = (t >= L.OFFLINE_MS).mean()
+    assert 0.3 < frac < 0.7  # stationary ~0.5 (long-run average)
+
+
+def test_outage_severity_pins_latency():
+    p = L.outage_profile(probability=0.9, severity_ms=1234.0)
+    t = _trace(p, n=4096)
+    down = t[t > 1000]
+    assert len(down) > 0 and np.allclose(down, 1234.0)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    base=st.floats(5.0, 500.0),
+    std=st.floats(0.0, 100.0),
+    seed=st.integers(0, 2**30),
+)
+def test_traces_never_negative(base, std, seed):
+    p = L.LatencyProfile(base_latency_ms=base, std_dev_ms=std)
+    t = _trace(p, n=256, seed=seed)
+    assert (t >= p.floor_ms).all()
+
+
+def test_fleet_generation_vectorized():
+    profiles = L.pack_profiles([L.ideal_profile(), L.high_latency_profile()])
+    traces = np.asarray(
+        L.generate_traces_jit(jax.random.PRNGKey(0), jnp.asarray(profiles), 512)
+    )
+    assert traces.shape == (2, 512)
+    assert traces[1].mean() > traces[0].mean() + 200
+
+
+def test_independent_servers_decorrelated():
+    profiles = L.pack_profiles([L.high_jitter_profile()] * 2)
+    tr = np.asarray(
+        L.generate_traces_jit(jax.random.PRNGKey(1), jnp.asarray(profiles), 4096)
+    )
+    c = np.corrcoef(tr[0], tr[1])[0, 1]
+    assert abs(c) < 0.1

@@ -1,0 +1,83 @@
+"""End-to-end NetMCP platform + agent behaviour (paper Sec. V claims)."""
+import numpy as np
+import pytest
+
+from repro.core import agent, dataset, metrics, platform, routing
+
+SERVERS = dataset.build_server_pool(seed=0)
+QUERIES = dataset.build_query_dataset(n=60, seed=0)
+
+
+def _bench(scenario, algo, seed=1, **router_kw):
+    plat = platform.NetMCPPlatform(SERVERS, scenario=scenario, seed=seed)
+    r = routing.make_router(algo, SERVERS, **router_kw)
+    ag = agent.Agent(plat, r)
+    recs = ag.run_benchmark(QUERIES, ticks_per_query=60)
+    return metrics.evaluate(recs, SERVERS)
+
+
+def test_hybrid_sonar_zero_failures():
+    """Table II headline: SONAR 0% FR vs PRAG ~90%+ at matched SSR."""
+    prag = _bench("hybrid", "prag")
+    sonar = _bench("hybrid", "sonar")
+    assert sonar.fr == 0.0
+    assert prag.fr > 50.0
+    assert abs(sonar.ssr - prag.ssr) < 10.0
+    assert sonar.al_ms < 50.0
+    assert prag.al_ms > 500.0
+
+
+def test_fluctuating_sonar_cuts_latency():
+    """Table III headline: large AL reduction at matched SSR."""
+    prag = _bench("fluctuating", "prag")
+    sonar = _bench("fluctuating", "sonar")
+    assert sonar.al_ms < 0.6 * prag.al_ms
+    assert abs(sonar.ssr - prag.ssr) < 10.0
+
+
+def test_ideal_sonar_equals_prag():
+    prag = _bench("ideal", "prag")
+    sonar = _bench("ideal", "sonar")
+    assert abs(sonar.ssr - prag.ssr) < 5.0
+    assert abs(sonar.al_ms - prag.al_ms) < 10.0
+
+
+def test_agent_retries_on_failure():
+    plat = platform.NetMCPPlatform(SERVERS, scenario="hybrid", seed=1)
+    r = routing.make_router("prag", SERVERS)
+    ag = agent.Agent(plat, r, max_turns=5)
+    recs = ag.run_benchmark(QUERIES[:30], ticks_per_query=60)
+    assert any(rec.n_calls > 1 for rec in recs)
+    assert all(rec.n_calls <= 5 for rec in recs)
+
+
+def test_feedforward_recording():
+    plat = platform.NetMCPPlatform(SERVERS, scenario="ideal", seed=0)
+    r = routing.make_router("sonar", SERVERS)
+    d = r.select(QUERIES[0].text, plat.latency_window(50))
+    before = plat.observed[d.server_idx, 50]
+    res = plat.call_tool(d, QUERIES[0], 50)
+    assert plat.observed[d.server_idx, 50] == res.latency_ms
+
+
+def test_mock_cluster_scales_pool():
+    cluster = dataset.mock_cluster(SERVERS[:2], n_per_template=10)
+    assert len(cluster) == 20
+    assert len({s.name for s in cluster}) == 20
+    assert all(s.domain == SERVERS[0].domain for s in cluster[:10])
+
+
+def test_dual_mode_live_transport():
+    calls = []
+
+    def fake_transport(server, decision, query):
+        calls.append(server.name)
+        return query.answer, 42.0
+
+    plat = platform.NetMCPPlatform(
+        SERVERS, scenario="ideal", seed=0, mode="live", live_transport=fake_transport
+    )
+    r = routing.make_router("prag", SERVERS)
+    d = r.select(QUERIES[0].text, plat.latency_window(10))
+    res = plat.call_tool(d, QUERIES[0], 10)
+    assert calls and res.latency_ms == 42.0 and res.success

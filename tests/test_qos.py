@@ -1,0 +1,106 @@
+"""SONAR QoS scoring (Eq. 7) properties + Pallas kernel equivalence."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from hypothesis.extra import numpy as hnp
+
+from repro.core.qos import DEFAULT_QOS, QosParams, ewma, network_score, penalties
+from repro.kernels import ops
+
+
+def test_ideal_band_scores_high():
+    lat = jnp.full((3, 64), 30.0)
+    n = np.asarray(network_score(lat))
+    assert (n > 0.95).all()
+
+
+def test_offline_clamp():
+    lat = np.full((2, 64), 30.0, np.float32)
+    lat[0, -1] = 1000.0
+    n = np.asarray(network_score(jnp.asarray(lat)))
+    assert n[0] == -1.0 and n[1] > 0.9
+
+
+def test_high_latency_penalized_monotonically():
+    scores = []
+    for base in [30, 100, 300, 600]:
+        lat = jnp.full((1, 64), float(base))
+        scores.append(float(network_score(lat)[0]))
+    assert all(a > b for a, b in zip(scores, scores[1:]))
+
+
+def test_trend_penalty():
+    flat = jnp.full((1, 64), 100.0)
+    rising = jnp.asarray(np.linspace(50, 150, 64, dtype=np.float32))[None]
+    assert float(network_score(rising)[0]) < float(network_score(flat)[0])
+
+
+def test_outage_risk_penalty():
+    calm = np.full((1, 64), 100.0, np.float32)
+    risky = calm.copy()
+    risky[0, -8:-1] = 900.0  # recent >800ms events (not offline at t)
+    assert float(network_score(jnp.asarray(risky))[0]) < float(
+        network_score(jnp.asarray(calm))[0]
+    )
+
+
+def test_instability_penalty():
+    rng = np.random.default_rng(0)
+    stable = np.full((1, 64), 100.0, np.float32)
+    jittery = (100 + 60 * rng.standard_normal((1, 64))).astype(np.float32)
+    jittery = np.clip(jittery, 1.0, 700.0)
+    assert float(network_score(jnp.asarray(jittery))[0]) < float(
+        network_score(jnp.asarray(stable))[0]
+    )
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    lat=hnp.arrays(
+        np.float32,
+        st.tuples(st.integers(1, 8), st.integers(4, 96)),
+        elements=st.floats(1.0, 2000.0, width=32),
+    )
+)
+def test_score_range_property(lat):
+    n = np.asarray(network_score(jnp.asarray(lat)))
+    assert ((n >= -1.0) & (n <= 1.0)).all()
+    offline = lat[:, -1] >= 1000.0
+    assert (n[offline] == -1.0).all()
+    assert (n[~offline] >= 0.0).all()
+
+
+def test_ewma_matches_recursive():
+    rng = np.random.default_rng(1)
+    lat = rng.random((3, 40)).astype(np.float32) * 100
+    alpha = 0.3
+    got = np.asarray(ewma(jnp.asarray(lat), alpha))
+    want = lat[:, 0].copy()
+    for t in range(lat.shape[1]):
+        want = (1 - alpha) * want + alpha * lat[:, t]
+    np.testing.assert_allclose(got, want, rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Pallas kernel vs oracle — shape sweep
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n,T", [(1, 32), (7, 64), (256, 64), (300, 100), (512, 128)])
+def test_qos_kernel_matches_oracle(n, T):
+    rng = np.random.default_rng(n * 1000 + T)
+    lat = (rng.random((n, T)).astype(np.float32) * 900 + 5)
+    lat[0, -1] = 1500.0  # one offline server
+    got = np.asarray(ops.qos_scores(jnp.asarray(lat)))
+    want = np.asarray(network_score(jnp.asarray(lat)))
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-6)
+
+
+def test_qos_kernel_custom_params():
+    p = QosParams(window=16, ewma_alpha=0.5, w_outage=0.5)
+    rng = np.random.default_rng(9)
+    lat = (rng.random((64, 48)).astype(np.float32) * 1200).clip(1.0)
+    got = np.asarray(ops.qos_scores(jnp.asarray(lat), p))
+    want = np.asarray(network_score(jnp.asarray(lat), p))
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-6)
