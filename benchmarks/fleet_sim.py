@@ -1,69 +1,79 @@
-"""Fleet-scale routing: the NetMCP mock-cluster blown up to 10^3 replicas,
-scored through the Pallas kernel path (bm25_scores + qos_scores).
+"""Fleet-scale routing: the NetMCP mock-cluster blown up to ~10^3 replicas,
+routed end-to-end through the batched engine (bm25_scores + qos_scores +
+fused selection, one jit pipeline) and compared against a scalar
+`Router.select` loop over the same fleet.
 
-Measures the per-request routing cost of the vectorized gateway and checks
-the kernel path agrees with the scalar router on selections.
+Reports per-request routing cost for both paths, the speedup, and argmax
+parity (the batched path must pick the exact same (server, tool) per query).
 """
 import time
 
-import jax.numpy as jnp
 import numpy as np
 
-from repro.core import bm25, dataset
-from repro.core.qos import network_score
-from repro.kernels import ops
+from repro.core import dataset
+from repro.core.batch_routing import make_engine
+from repro.core.routing import RoutingConfig, make_router
 
 
-def main(print_fn=print) -> dict:
+def main(
+    print_fn=print,
+    n_per_template: int = 67,     # 67 -> 1005 servers
+    n_queries: int = 64,
+    n_iter: int = 5,
+) -> dict:
     base = dataset.build_server_pool(seed=0)
-    cluster = dataset.mock_cluster(base, n_per_template=67)  # 1005 servers
-    docs = []
-    host = []
-    for i, s in enumerate(cluster):
-        for t in s.tools:
-            docs.append(f"{t.name.replace('_', ' ')} {t.description}")
-            host.append(i)
-    corpus = bm25.build_corpus(docs)
-    host = np.asarray(host)
-
-    queries = [q.text for q in dataset.build_query_dataset(n=64, seed=1)]
-    from repro.core.routing import predict_tool_type
-
-    qtexts = [predict_tool_type(q)[1] for q in queries]
-    qc = corpus.encode_queries(qtexts)
+    cluster = dataset.mock_cluster(base, n_per_template=n_per_template)
+    cfg = RoutingConfig(top_s=5, top_k=10)
+    queries = [q.text for q in dataset.build_query_dataset(n=n_queries, seed=1)]
 
     rng = np.random.default_rng(0)
     telemetry = (rng.random((len(cluster), 64)).astype(np.float32) * 400 + 5)
 
-    # warm up + time the kernel path
-    scores = ops.bm25_scores(jnp.asarray(qc), jnp.asarray(corpus.weights))
-    qos = ops.qos_scores(jnp.asarray(telemetry))
-    scores.block_until_ready()
+    # -- batched path: encode once per batch, one jit pipeline per route
+    # (kernels auto-select per backend: Pallas on TPU, jnp on CPU) --
+    engine = make_engine("sonar", cluster, cfg)
+    dec = engine.route_texts(queries, telemetry)   # warm-up (compile)
     t0 = time.time()
-    n_iter = 5
     for _ in range(n_iter):
-        scores = ops.bm25_scores(jnp.asarray(qc), jnp.asarray(corpus.weights))
-        qos = ops.qos_scores(jnp.asarray(telemetry))
-    scores.block_until_ready()
-    qos.block_until_ready()
-    wall = (time.time() - t0) / n_iter
-    us_per_req = 1e6 * wall / len(queries)
+        dec = engine.route_texts(queries, telemetry)
+    batched_s = (time.time() - t0) / n_iter
+    us_batched = 1e6 * batched_s / len(queries)
 
-    # correctness vs oracle path
-    ref_scores = np.asarray(bm25.bm25_scores(jnp.asarray(corpus.weights), jnp.asarray(qc)))
-    ref_qos = np.asarray(network_score(jnp.asarray(telemetry)))
-    np.testing.assert_allclose(np.asarray(scores), ref_scores, rtol=1e-3, atol=1e-3)
-    np.testing.assert_allclose(np.asarray(qos), ref_qos, rtol=1e-3, atol=1e-3)
+    # -- scalar path: one Router.select per query (numpy argsorts) --
+    router = make_router("sonar", cluster, cfg)
+    scalar_iter = max(1, n_iter // 5)
+    router.select(queries[0], telemetry)           # warm-up
+    t0 = time.time()
+    for _ in range(scalar_iter):
+        scalar_picks = [router.select(q, telemetry) for q in queries]
+    scalar_s = (time.time() - t0) / scalar_iter
+    us_scalar = 1e6 * scalar_s / len(queries)
 
-    fused = 0.5 * np.asarray(scores) + 0.5 * ref_qos[host][None, :]
-    picks = host[np.argmax(fused, axis=1)]
-    derived = (
-        f"servers={len(cluster)} tools={len(docs)} vocab={len(corpus.vocab)} "
-        f"kernel==oracle=True distinct_picks={len(set(picks.tolist()))}"
+    # -- parity: argmax-identical selections --
+    parity = all(
+        d.server_idx == int(dec.server_idx[i]) and d.tool_idx == int(dec.tool_idx[i])
+        for i, d in enumerate(scalar_picks)
     )
-    print_fn(f"fleet_sim_kernel_routing,{us_per_req:.1f},{derived}")
-    return {"us_per_request": us_per_req}
+    speedup = us_scalar / max(us_batched, 1e-9)
+
+    n_tools = engine.index.n_tools
+    derived = (
+        f"servers={len(cluster)} tools={n_tools} "
+        f"scalar_us={us_scalar:.1f} speedup={speedup:.1f}x parity={parity}"
+    )
+    print_fn(f"fleet_sim_batched_routing,{us_batched:.1f},{derived}")
+    return {
+        "n_servers": len(cluster),
+        "n_tools": n_tools,
+        "n_queries": len(queries),
+        "us_per_request_batched": us_batched,
+        "us_per_request_scalar": us_scalar,
+        "speedup": speedup,
+        "parity": parity,
+    }
 
 
 if __name__ == "__main__":
-    main()
+    res = main()
+    assert res["parity"], "batched path diverged from scalar Router.select"
+    assert res["speedup"] >= 5.0, f"speedup {res['speedup']:.1f}x < 5x"

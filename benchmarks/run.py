@@ -1,25 +1,75 @@
 """Benchmark harness — one module per paper table/figure (+ fleet & roofline).
 
 Prints ``name,us_per_call,derived`` CSV rows.
+
+Modes:
+  python benchmarks/run.py                     # full paper suite
+  python benchmarks/run.py --smoke             # CI smoke: reduced fleet/iters
+  python benchmarks/run.py --json out.json     # also dump results as JSON
 """
 from __future__ import annotations
 
+import argparse
+import dataclasses
+import json
 import sys
 import time
 
 
-def main() -> None:
-    from benchmarks import fleet_sim, paper_fig7, paper_fig9, paper_table2, paper_table3, roofline
+def _jsonable(obj):
+    """Best-effort conversion of benchmark return values to JSON."""
+    if dataclasses.is_dataclass(obj) and not isinstance(obj, type):
+        return {k: _jsonable(v) for k, v in dataclasses.asdict(obj).items()}
+    if isinstance(obj, dict):
+        return {str(k): _jsonable(v) for k, v in obj.items()}
+    if isinstance(obj, (list, tuple)):
+        return [_jsonable(v) for v in obj]
+    if isinstance(obj, (str, int, float, bool)) or obj is None:
+        return obj
+    return str(obj)
+
+
+def main(argv=None) -> dict:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument(
+        "--smoke", action="store_true",
+        help="reduced-size CI mode: small fleet, few iterations, skips the "
+             "long paper-table sweeps",
+    )
+    parser.add_argument("--json", metavar="PATH", default=None,
+                        help="write collected results as JSON")
+    args = parser.parse_args(argv)
+
+    from benchmarks import (
+        fleet_sim, paper_fig7, paper_fig9, paper_table2, paper_table3, roofline,
+    )
 
     print("name,us_per_call,derived")
     t0 = time.time()
-    paper_fig7.main()
-    paper_table2.main()
-    paper_table3.main()
-    paper_fig9.main()
-    fleet_sim.main()
-    roofline.main()
-    print(f"# total wall {time.time()-t0:.1f}s", file=sys.stderr)
+    results: dict = {"mode": "smoke" if args.smoke else "full"}
+    if args.smoke:
+        # the kernel-path hot loop (regression signal for per-PR perf diffs)
+        results["fleet_sim"] = fleet_sim.main(
+            n_per_template=8, n_queries=32, n_iter=2
+        )
+        # one cheap end-to-end agent benchmark so the routing/agent/metrics
+        # stack is exercised too
+        results["fig7"] = _jsonable(paper_fig7.main())
+    else:
+        results["fig7"] = _jsonable(paper_fig7.main())
+        results["table2"] = _jsonable(paper_table2.main())
+        results["table3"] = _jsonable(paper_table3.main())
+        results["fig9"] = _jsonable(paper_fig9.main())
+        results["fleet_sim"] = fleet_sim.main()
+        results["roofline"] = _jsonable(roofline.main())
+    results["wall_s"] = time.time() - t0
+    print(f"# total wall {results['wall_s']:.1f}s", file=sys.stderr)
+
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(_jsonable(results), f, indent=2)
+        print(f"# results written to {args.json}", file=sys.stderr)
+    return results
 
 
 if __name__ == "__main__":

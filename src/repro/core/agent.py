@@ -4,6 +4,15 @@ Coordinates user query -> tool routing -> tool call -> evaluation, alternating
 tool calls with (simulated) LLM chat turns until the task completes or the
 turn budget is exhausted, with exception handling for timeouts/outages.
 The judge (Module 5's LLM-as-a-judge) is an exact-match scorer in sim mode.
+
+Two drivers share the episode semantics:
+
+  `Agent`      — the scalar call-chat loop, one `Router.select` per turn.
+  `BatchAgent` — the vectorized driver: every turn routes *all* unfinished
+                 tasks in one `BatchRoutingEngine.route` call (per-query
+                 latency windows, jit end-to-end), then executes the calls
+                 against the platform traces in bulk.  Used by the Table
+                 II/III-style benchmarks at fleet scale.
 """
 from __future__ import annotations
 
@@ -12,6 +21,8 @@ from typing import Optional
 
 import numpy as np
 
+from repro.core import latency as L
+from repro.core.batch_routing import BatchRoutingEngine
 from repro.core.dataset import Query
 from repro.core.platform import NetMCPPlatform, ToolResult
 from repro.core.routing import Decision, Router
@@ -106,12 +117,147 @@ class Agent:
     ) -> list:
         """Run a query batch across the simulated horizon (uniformly spread
         so outage/fluctuation phases are sampled representatively)."""
-        rng = np.random.default_rng(seed)
+        ticks = spread_start_ticks(
+            len(queries), self.platform.n_steps, self.max_turns,
+            self.ticks_per_turn, t_start, ticks_per_query, seed,
+        )
+        return [self.run_task(q, int(t)) for q, t in zip(queries, ticks)]
+
+
+def spread_start_ticks(
+    n: int,
+    n_steps: int,
+    max_turns: int,
+    ticks_per_turn: int,
+    t_start: int = 0,
+    ticks_per_query: int = 4,
+    seed: int = 0,
+) -> np.ndarray:
+    """The start-time assignment of `Agent.run_benchmark` as a vector."""
+    rng = np.random.default_rng(seed)
+    horizon = n_steps - max_turns * ticks_per_turn - 1
+    t = t_start + np.arange(n, dtype=np.int64) * ticks_per_query
+    over = t >= horizon
+    t[over] = rng.integers(0, horizon, size=int(over.sum()))
+    return t
+
+
+class BatchAgent:
+    """Vectorized episode driver over the batched routing engine.
+
+    Episodes are turn-synchronous: at turn k every still-unfinished task
+    routes (one batched engine call on per-query latency windows), executes,
+    and either completes or retries at turn k+1 — the same retry/feed-forward
+    semantics as `Agent.run_task`, minus the scalar Python loop.  Sim-mode
+    execution only (live transports are inherently per-call).
+    """
+
+    def __init__(
+        self,
+        platform: NetMCPPlatform,
+        engine: BatchRoutingEngine,
+        max_turns: int = 8,
+        chat_turn_ms: float = 150.0,
+        ticks_per_turn: int = 1,
+    ):
+        assert platform.mode == "sim", "BatchAgent drives sim-mode episodes"
+        self.platform = platform
+        self.engine = engine
+        self.max_turns = max_turns
+        self.chat_turn_ms = chat_turn_ms
+        self.ticks_per_turn = ticks_per_turn
+
+    def run_benchmark(
+        self,
+        queries: list,
+        t_start: int = 0,
+        ticks_per_query: int = 4,
+        seed: int = 0,
+    ) -> list:
+        plat = self.platform
+        n = len(queries)
+        t_vec = spread_start_ticks(
+            n, plat.n_steps, self.max_turns, self.ticks_per_turn,
+            t_start, ticks_per_query, seed,
+        )
+        batch = self.engine.encode([q.text for q in queries])
+        sl_per_decision = self.engine.select_latency_ms()
+        domains = np.asarray([s.domain for s in plat.servers])
+        intents = np.asarray([q.intent for q in queries])
+
+        active = np.ones(n, dtype=bool)
+        success = np.zeros(n, dtype=bool)
+        n_fail = np.zeros(n, dtype=np.int64)
+        wall_ms = np.zeros(n, dtype=np.float64)
+        sl_total = np.zeros(n, dtype=np.float64)
+        per_turn: list = []          # (active_mask, decisions, latencies)
+        latencies: list = [[] for _ in range(n)]
+
+        for _turn in range(self.max_turns):
+            # route the FULL batch every turn (constant shapes -> one XLA
+            # compile); results are applied only to still-active tasks.
+            windows = plat.latency_windows(t_vec)
+            dec = self.engine.route(batch, windows)
+
+            t_clip = np.clip(t_vec, 0, plat.n_steps - 1)
+            lat = plat.traces[dec.server_idx, t_clip]
+            online = lat < L.OFFLINE_MS
+            ok = online & (domains[dec.server_idx] == intents)
+
+            # feed-forward recording for executed (active) calls only
+            plat.observed[dec.server_idx[active], t_clip[active]] = lat[active]
+
+            sl_total[active] += sl_per_decision
+            wall_ms[active] += sl_per_decision + lat[active] + self.chat_turn_ms
+            n_fail[active & ~online] += 1
+            success[active & online] = ok[active & online]
+            for i in np.flatnonzero(active):
+                latencies[i].append(float(lat[i]))
+            per_turn.append((active.copy(), dec, lat))
+
+            t_vec = t_vec + self.ticks_per_turn
+            active = active & ~online           # only failed calls retry
+            if not active.any():
+                break
+
+        return self._build_records(
+            queries, per_turn, latencies, success, n_fail, sl_total, wall_ms
+        )
+
+    def _build_records(
+        self, queries, per_turn, latencies, success, n_fail, sl_total, wall_ms
+    ) -> list:
+        n = len(queries)
+        decisions: list = [[] for _ in range(n)]
+        for mask, dec, _lat in per_turn:
+            for i in np.flatnonzero(mask):
+                decisions[i].append(
+                    Decision(
+                        server_idx=int(dec.server_idx[i]),
+                        tool_idx=int(dec.tool_idx[i]),
+                        expertise=float(dec.expertise[i]),
+                        network=float(dec.network[i]),
+                        fused=float(dec.fused[i]),
+                        select_latency_ms=float(dec.select_latency_ms),
+                        candidate_servers=[],
+                        candidate_tools=[],
+                    )
+                )
         records = []
-        horizon = self.platform.n_steps - self.max_turns * self.ticks_per_turn - 1
         for i, q in enumerate(queries):
-            t = t_start + i * ticks_per_query
-            if t >= horizon:
-                t = int(rng.integers(0, horizon))
-            records.append(self.run_task(q, t))
+            final = decisions[i][-1]
+            records.append(
+                TaskRecord(
+                    query=q,
+                    success=bool(success[i]),
+                    n_calls=len(latencies[i]),
+                    n_failures=int(n_fail[i]),
+                    decisions=decisions[i],
+                    call_latencies_ms=latencies[i],
+                    select_latency_ms=float(sl_total[i]),
+                    completion_ms=float(wall_ms[i]),
+                    final_server_idx=final.server_idx,
+                    final_expertise=final.expertise,
+                )
+            )
         return records

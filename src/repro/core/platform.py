@@ -46,6 +46,8 @@ def _semantic_rank_websearch(servers: Sequence[Server]) -> list:
     from repro.core.routing import CANONICAL_DESCRIPTIONS
 
     ws = [i for i, s in enumerate(servers) if s.domain == WEBSEARCH]
+    if not ws:
+        return []
     docs, host = [], []
     for i in ws:
         for t in servers[i].tools:
@@ -110,10 +112,76 @@ def _ideal_profiles(servers: Sequence[Server]) -> list:
     return [L.ideal_profile() for _ in servers]
 
 
+def _high_latency_profiles(servers: Sequence[Server]) -> list:
+    """All websearch servers in the high-latency canonical state (Fig. 4:
+    elevated stable baseline), except the semantically *bottom*-ranked one
+    which stays ideal — so a network-aware router has exactly one healthy
+    escape hatch that a purely semantic router ranks last.  Distractors get
+    the stable-but-moderate profile (see `_fluctuating_profiles` rationale)."""
+    ranked = _semantic_rank_websearch(servers)
+    assign = {srv: L.high_latency_profile() for srv in ranked[:-1]}
+    if ranked:
+        assign[ranked[-1]] = L.ideal_profile()
+    return [
+        assign.get(i, L.LatencyProfile(base_latency_ms=110.0, std_dev_ms=8.0))
+        for i, s in enumerate(servers)
+    ]
+
+
+def _high_jitter_profiles(servers: Sequence[Server]) -> list:
+    """All websearch servers in the high-jitter canonical state (moderate
+    baseline, high variance), with per-rank increasing jitter so the QoS
+    instability penalty (P_instab) has a gradient to descend; distractors
+    stable-moderate."""
+    ranked = _semantic_rank_websearch(servers)
+    assign = {
+        srv: L.LatencyProfile(base_latency_ms=100.0, std_dev_ms=70.0 + 10.0 * r)
+        for r, srv in enumerate(ranked)
+    }
+    return [
+        assign.get(i, L.LatencyProfile(base_latency_ms=110.0, std_dev_ms=8.0))
+        for i, s in enumerate(servers)
+    ]
+
+
+def _diurnal_congestion_profiles(servers: Sequence[Server]) -> list:
+    """Composed scenario: a 24 h diurnal load rhythm (fluctuating state with
+    period = the full horizon) on every websearch server, phase-staggered,
+    *plus* congestion brownouts (outage state) on the semantically top-ranked
+    server — peak-hour overload on the most popular replica.  Exercises the
+    trend, instability and outage penalties simultaneously."""
+    ranked = _semantic_rank_websearch(servers)
+    out: dict = {}
+    for r, srv in enumerate(ranked):
+        phase = 2.0 * np.pi * r / max(len(ranked), 1)
+        out[srv] = L.LatencyProfile(
+            base_latency_ms=140.0,
+            std_dev_ms=15.0,
+            amplitude_ms=110.0,
+            period_s=24 * 3600.0,
+            phase_shift=phase,
+            # top-ranked server browns out under peak load
+            outage_probability=0.35 if r == 0 else 0.0,
+            outage_duration_min_s=20 * 60.0,
+            outage_duration_max_s=60 * 60.0,
+        )
+    return [
+        assign if (assign := out.get(i)) is not None
+        else L.LatencyProfile(base_latency_ms=110.0, std_dev_ms=8.0)
+        for i, s in enumerate(servers)
+    ]
+
+
+# All five canonical network states of Fig. 4 appear as fleet assignments:
+# ideal, outage (inside hybrid), fluctuating, high_latency, high_jitter —
+# plus the composed diurnal-congestion scenario.
 SCENARIOS: dict = {
     "ideal": _ideal_profiles,
     "hybrid": _hybrid_profiles,
     "fluctuating": _fluctuating_profiles,
+    "high_latency": _high_latency_profiles,
+    "high_jitter": _high_jitter_profiles,
+    "diurnal_congestion": _diurnal_congestion_profiles,
 }
 
 
@@ -167,6 +235,21 @@ class NetMCPPlatform:
             return self.observed[:, lo : t_idx + 1]
         pad = np.repeat(self.observed[:, :1], -lo, axis=1)
         return np.concatenate([pad, self.observed[:, : t_idx + 1]], axis=1)
+
+    def latency_windows(
+        self, t_indices: np.ndarray, window: Optional[int] = None
+    ) -> np.ndarray:
+        """Vectorized `latency_window`: one observed-history slab per query
+        time -> [n_q, n_servers, window].  Same left-padding semantics (the
+        first sample is repeated when t+1 < window) so every slab has a
+        static shape — this is what the batched engine consumes."""
+        w = window or self.history_window
+        t_indices = np.clip(np.asarray(t_indices, np.int64), 0, self.n_steps - 1)
+        # per-query column indices [n_q, w]: t-w+1 .. t, clamped at 0
+        cols = t_indices[:, None] + np.arange(-w + 1, 1)[None, :]
+        cols = np.maximum(cols, 0)
+        # observed is [n_servers, T]; fancy-index to [n_servers, n_q, w]
+        return self.observed[:, cols].transpose(1, 0, 2)
 
     def latency_at(self, server_idx: int, t_idx: int) -> float:
         t_idx = int(np.clip(t_idx, 0, self.n_steps - 1))

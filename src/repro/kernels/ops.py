@@ -19,6 +19,7 @@ from repro.kernels import bm25_score as _bm25
 from repro.kernels import decode_attention as _dec
 from repro.kernels import flash_attention as _fa
 from repro.kernels import qos_score as _qos
+from repro.kernels import select_fuse as _sel
 
 
 def _auto_interpret(interpret: Optional[bool]) -> bool:
@@ -82,6 +83,48 @@ def bm25_scores(
     w = _pad_to(_pad_to(jnp.asarray(weights, jnp.float32), 1, _bm25.BV), 0, _bm25.BD)
     out = _bm25.bm25_scores_pallas(q, w, interpret=_auto_interpret(interpret))
     return out[:n_q, :n_d]
+
+
+# ---------------------------------------------------------------------------
+# Fused selection (stage-2 top-k + Eq. 5 softmax + Eq. 8 fusion + argmax)
+# ---------------------------------------------------------------------------
+
+def fused_select(
+    sel_scores: jax.Array,   # [n_q, n_tools] stage-2 scores, invalid = -inf/NEG
+    val_scores: jax.Array,   # [n_q, n_tools] softmax-value scores (== sel
+                             # except under rerank)
+    tool_qos: jax.Array,     # [n_q, n_tools] or [n_tools] per-tool N (Eq. 7)
+    *,
+    k: int,
+    alpha: float,
+    beta: float,
+    temp: float = 1.0,
+    interpret: Optional[bool] = None,
+):
+    """Winning (tool_idx, C, N, S) per query; exact match of the scalar
+    candidate->softmax->fuse->argmax tail of `Router.select`."""
+    n_q, n_t = sel_scores.shape
+    k = min(k, n_t)
+    per_query_qos = tool_qos.ndim == 2
+    sel = jnp.maximum(jnp.asarray(sel_scores, jnp.float32), _sel.NEG)
+    val = jnp.asarray(val_scores, jnp.float32)
+    qos = jnp.asarray(tool_qos, jnp.float32)
+    if not per_query_qos:
+        qos = qos[None, :]
+
+    sel = _pad_to(_pad_to(sel, 1, 128, value=_sel.NEG), 0, _sel.QUERY_TILE,
+                  value=_sel.NEG)
+    val = _pad_to(_pad_to(val, 1, 128, value=_sel.NEG), 0, _sel.QUERY_TILE,
+                  value=_sel.NEG)
+    qos = _pad_to(qos, 1, 128)
+    if per_query_qos:
+        qos = _pad_to(qos, 0, _sel.QUERY_TILE)
+    idx, c, n, s = _sel.fused_select_pallas(
+        sel, val, qos,
+        k=k, alpha=float(alpha), beta=float(beta), temp=float(temp),
+        per_query_qos=per_query_qos, interpret=_auto_interpret(interpret),
+    )
+    return idx[:n_q], c[:n_q], n[:n_q], s[:n_q]
 
 
 # ---------------------------------------------------------------------------

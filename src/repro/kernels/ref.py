@@ -11,6 +11,38 @@ import numpy as np
 
 from repro.core.bm25 import bm25_scores as bm25_ref          # noqa: F401
 from repro.core.qos import QosParams, network_score as qos_ref  # noqa: F401
+from repro.kernels.select_fuse import NEG  # kernel & oracle must agree
+
+
+def fused_select_ref(
+    sel_scores: jax.Array,   # [n_q, n_tools], invalid = -inf/NEG
+    val_scores: jax.Array,   # [n_q, n_tools]
+    tool_qos: jax.Array,     # [n_q, n_tools] or [n_tools]
+    *,
+    k: int,
+    alpha: float,
+    beta: float,
+    temp: float = 1.0,
+):
+    """Pure-jnp oracle for kernels/select_fuse: stage-2 top-k (ties -> lower
+    index), Eq. 5 softmax over the valid candidates, Eq. 8 fusion, argmax."""
+    sel = jnp.maximum(sel_scores.astype(jnp.float32), NEG)
+    k = min(k, sel.shape[-1])
+    top_v, top_i = jax.lax.top_k(sel, k)                     # [n_q, k]
+    valid = top_v > NEG / 2.0
+    val = jnp.take_along_axis(val_scores.astype(jnp.float32), top_i, axis=-1)
+    val = jnp.where(valid, val, NEG)
+    if tool_qos.ndim == 1:
+        n = tool_qos.astype(jnp.float32)[top_i]
+    else:
+        n = jnp.take_along_axis(tool_qos.astype(jnp.float32), top_i, axis=-1)
+    z = (val - jnp.max(val, axis=-1, keepdims=True)) / temp
+    e = jnp.exp(z)
+    c = e / jnp.maximum(e.sum(axis=-1, keepdims=True), 1e-30)
+    s = jnp.where(valid, alpha * c + beta * n, NEG)
+    best = jnp.argmax(s, axis=-1)                            # first max wins
+    take = lambda a: jnp.take_along_axis(a, best[:, None], axis=-1)[:, 0]
+    return take(top_i), take(c), take(n), take(s)
 
 
 def repeat_kv(k: jax.Array, n_rep: int) -> jax.Array:

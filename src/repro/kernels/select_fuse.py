@@ -1,0 +1,149 @@
+"""Fused SONAR selection Pallas kernel (TPU target).
+
+Collapses the per-query tail of Algorithm 1 — stage-2 top-k over the masked
+tool scores (Eq. 4), softmax expertise over the candidate set (Eq. 5), QoS
+fusion S = alpha*C + beta*N (Eq. 8) and the final argmax (Eq. 9) — into one
+pass over a (QUERY_TILE x n_tools) score stripe resident in VMEM.
+
+Why fuse: the unfused pipeline materializes the [n_q, k] candidate tensors
+(indices, scores, gathered QoS) in HBM between five separate ops; at fleet
+scale (10^3-10^4 tools, scored per request batch) the candidate traffic
+dominates.  Here each score stripe is streamed once and the k-step
+extraction, softmax and fusion happen in-register.
+
+Inputs per query row
+  sel  [n_tools]  — stage-2 scores, already masked to NEG outside the
+                    stage-1 candidate servers (Eq. 2 mask).
+  val  [n_tools]  — scores used for the expertise softmax.  Equal to `sel`
+                    for RAG/PRAG/SONAR; the rerank re-scoring for RerankRAG
+                    (candidates are *chosen* by `sel` but *valued* by `val`).
+  qos  [n_tools]  — per-tool network score N (Eq. 7), broadcast from the
+                    host server; zeros when the algorithm is semantic-only.
+
+Outputs per query row: winning global tool index + (C, N, S) at the winner.
+
+Selection semantics replicate the scalar `Router.select` exactly:
+top-k ties break toward the lower tool index (stable argsort), the softmax
+normalizes over the valid candidate set only, candidates whose selection
+score is NEG (fewer than k valid tools) are excluded from the argmax, and
+the final argmax tie-breaks toward the earlier (higher-ranked) candidate.
+
+Gather-free trick: per-candidate values come from one-hot reductions over
+the stripe (sum(onehot * row)) instead of dynamic gathers, which keeps the
+kernel pure VPU work with lane-aligned reductions.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+QUERY_TILE = 8      # f32 sublane granularity
+NEG = -1e30         # finite -inf stand-in (avoids inf-inf NaNs in VMEM math)
+
+
+def _select_kernel(
+    sel_ref, val_ref, qos_ref, idx_ref, c_ref, n_ref, s_ref,
+    *, k: int, alpha: float, beta: float, temp: float,
+):
+    sel = sel_ref[...].astype(jnp.float32)   # [QT, T_pad]
+    val = val_ref[...].astype(jnp.float32)   # [QT, T_pad]
+    qos = qos_ref[...].astype(jnp.float32)   # [QT or 1, T_pad]
+    QT, T_pad = sel.shape
+
+    lane = jax.lax.broadcasted_iota(jnp.float32, (QT, T_pad), 1)
+
+    # --- k-step extraction: peel the row maximum k times (ties -> lowest
+    # index, matching a stable descending argsort) ---
+    cand_val, cand_qos, cand_idx = [], [], []
+    cur = sel
+    for _ in range(k):
+        m = jnp.max(cur, axis=-1, keepdims=True)                    # [QT, 1]
+        is_max = cur >= m
+        idx = jnp.min(jnp.where(is_max, lane, float(T_pad)), axis=-1,
+                      keepdims=True)                                # first max
+        onehot = (lane == idx).astype(jnp.float32)
+        v = jnp.sum(val * onehot, axis=-1, keepdims=True)
+        n = jnp.sum(qos * onehot, axis=-1, keepdims=True)
+        valid = m > NEG / 2.0
+        cand_val.append(jnp.where(valid, v, NEG))
+        cand_qos.append(n)
+        cand_idx.append(idx)
+        cur = jnp.where(onehot > 0.0, NEG, cur)
+
+    # --- Eq. 5 softmax over the valid candidates (invalid -> zero mass) ---
+    vmax = cand_val[0]                       # extraction is value-sorted only
+    for v in cand_val[1:]:                   # when val==sel; reduce explicitly
+        vmax = jnp.maximum(vmax, v)
+    exps = [jnp.exp((v - vmax) / temp) for v in cand_val]
+    denom = exps[0]
+    for e in exps[1:]:
+        denom = denom + e
+    denom = jnp.maximum(denom, 1e-30)
+
+    # --- Eq. 8 fusion + Eq. 9 argmax (strict > keeps the earliest winner,
+    # matching np.argmax over the rank-ordered candidate list) ---
+    best_s = jnp.full((QT, 1), NEG, jnp.float32)
+    best_c = jnp.zeros((QT, 1), jnp.float32)
+    best_n = jnp.zeros((QT, 1), jnp.float32)
+    best_i = jnp.zeros((QT, 1), jnp.float32)
+    for v, e, n, i in zip(cand_val, exps, cand_qos, cand_idx):
+        c = e / denom
+        s = alpha * c + beta * n
+        s = jnp.where(v > NEG / 2.0, s, NEG)
+        take = s > best_s
+        best_c = jnp.where(take, c, best_c)
+        best_n = jnp.where(take, n, best_n)
+        best_i = jnp.where(take, i, best_i)
+        best_s = jnp.where(take, s, best_s)
+
+    idx_ref[...] = best_i.astype(jnp.int32)
+    c_ref[...] = best_c
+    n_ref[...] = best_n
+    s_ref[...] = best_s
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("k", "alpha", "beta", "temp", "per_query_qos", "interpret"),
+)
+def fused_select_pallas(
+    sel: jax.Array,   # [n_q_pad, T_pad] f32, NEG-padded
+    val: jax.Array,   # [n_q_pad, T_pad] f32
+    qos: jax.Array,   # [n_q_pad or 1, T_pad] f32
+    *,
+    k: int,
+    alpha: float,
+    beta: float,
+    temp: float,
+    per_query_qos: bool,
+    interpret: bool = False,
+):
+    n_q, T_pad = sel.shape
+    assert n_q % QUERY_TILE == 0 and T_pad % 128 == 0
+    grid = (n_q // QUERY_TILE,)
+    qos_spec = (
+        pl.BlockSpec((QUERY_TILE, T_pad), lambda i: (i, 0))
+        if per_query_qos
+        else pl.BlockSpec((1, T_pad), lambda i: (0, 0))
+    )
+    out_spec = pl.BlockSpec((QUERY_TILE, 1), lambda i: (i, 0))
+    out_shape = jax.ShapeDtypeStruct((n_q, 1), jnp.float32)
+    idx, c, n, s = pl.pallas_call(
+        functools.partial(_select_kernel, k=k, alpha=alpha, beta=beta, temp=temp),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((QUERY_TILE, T_pad), lambda i: (i, 0)),
+            pl.BlockSpec((QUERY_TILE, T_pad), lambda i: (i, 0)),
+            qos_spec,
+        ],
+        out_specs=[out_spec, out_spec, out_spec, out_spec],
+        out_shape=[
+            jax.ShapeDtypeStruct((n_q, 1), jnp.int32),
+            out_shape, out_shape, out_shape,
+        ],
+        interpret=interpret,
+    )(sel, val, qos)
+    return idx[:, 0], c[:, 0], n[:, 0], s[:, 0]

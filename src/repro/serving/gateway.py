@@ -8,9 +8,11 @@ gateway routes every request with SONAR: two-stage BM25 capability match
 (Eq. 1-5) fused with the QoS score of each replica's telemetry (Eq. 7-8).
 Feed-forward recording closes the loop (Sec. III-B).
 
-At fleet scale the hot loop is vectorized through the Pallas kernels
-(`use_kernels=True`): one bm25_scores matmul for the batch x replica scores
-and one qos_scores pass over the telemetry matrix.
+At fleet scale the hot loop is the batched routing engine
+(`use_kernels=True`): the whole request batch flows through one jit-compiled
+pipeline — bm25_scores matmuls, a qos_scores pass over the telemetry matrix
+and the fused top-k/softmax/fusion/argmax selection kernel (see
+repro.core.batch_routing).
 """
 from __future__ import annotations
 
@@ -19,10 +21,9 @@ from typing import Callable, Optional, Sequence
 
 import numpy as np
 
-from repro.core import bm25 as bm25lib
 from repro.core import latency as latlib
+from repro.core.batch_routing import BatchRoutingEngine
 from repro.core.dataset import Server, Tool
-from repro.core.qos import DEFAULT_QOS, QosParams, network_score
 from repro.core.routing import RoutingConfig, SonarRouter
 
 ARCH_CAPABILITIES = {
@@ -81,6 +82,7 @@ class SonarGateway:
         self.history = history
         self.executor = executor
         self.use_kernels = use_kernels
+        self._engine: Optional[BatchRoutingEngine] = None
         n = len(self.replicas)
         if profiles is None:
             profiles = [latlib.ideal_profile() for _ in range(n)]
@@ -115,41 +117,35 @@ class SonarGateway:
         self.stats.append(res)
         return res
 
+    def engine(self) -> BatchRoutingEngine:
+        """The batched SONAR engine over this fleet (built once, lazily).
+        Shares the scalar router's compiled ToolIndex so both paths score
+        the exact same corpus."""
+        if self._engine is None:
+            self._engine = BatchRoutingEngine(
+                self.replicas, self.router.cfg, algo="sonar",
+                index=self.router.index,
+            )
+        return self._engine
+
     def route_batch(self, request_texts: Sequence[str]) -> list:
-        """Fleet-scale batched routing through the Pallas kernels: one BM25
-        matmul over all (request, tool) pairs + one fused QoS pass."""
+        """Fleet-scale batched routing: the whole request batch runs through
+        the jit-compiled engine (two-stage BM25 + Pallas QoS + fused
+        selection) against one telemetry snapshot; executions are then
+        recorded in arrival order (feed-forward, Sec. III-B)."""
         if not self.use_kernels:
             return [self.route(t) for t in request_texts]
-        import jax.numpy as jnp
-
-        from repro.kernels import ops
-
-        index = self.router.index
-        # semantic: canonical intents -> tool scores (batch)
-        from repro.core.routing import predict_tool_type
-
-        qtexts = [predict_tool_type(t)[1] for t in request_texts]
-        qcounts = index.tool_corpus.encode_queries(qtexts)
-        scores = np.asarray(ops.bm25_scores(jnp.asarray(qcounts), jnp.asarray(index.tool_corpus.weights)))
-        # network: fused QoS over the full replica fleet
-        qos = np.asarray(ops.qos_scores(jnp.asarray(self.telemetry), self.router.cfg.qos))
+        decisions = self.engine().route_texts(request_texts, self.telemetry)
         out = []
-        for qi, text in enumerate(request_texts):
-            s = scores[qi]
-            k = min(self.router.cfg.top_k, s.shape[0])
-            cand = np.argsort(-s, kind="stable")[:k]
-            z = (s[cand] - s[cand].max()) / self.router.cfg.expertise_temp
-            C = np.exp(z) / np.exp(z).sum()
-            N = qos[index.tool_server[cand]]
-            S = self.router.cfg.alpha * C + self.router.cfg.beta * N
-            best = int(np.argmax(S))
-            idx = int(index.tool_server[cand[best]])
+        for qi in range(len(request_texts)):
+            idx = int(decisions.server_idx[qi])
             latency = float(self.traces[idx, min(self.t, self.traces.shape[1] - 1)])
             self._observe(idx, latency)
             res = RouteResult(
                 replica_idx=idx, latency_ms=latency,
                 ok=latency < latlib.OFFLINE_MS,
-                expertise=float(C[best]), network=float(N[best]),
+                expertise=float(decisions.expertise[qi]),
+                network=float(decisions.network[qi]),
             )
             self.stats.append(res)
             out.append(res)

@@ -111,7 +111,8 @@ def test_ssd_unroll_equals_scan():
     a_log = jnp.zeros(nH)
     y1, _ = mb.ssd_chunked(xh, dt, Bm, Cm, a_log, chunk=16, unroll=False)
     y2, _ = mb.ssd_chunked(xh, dt, Bm, Cm, a_log, chunk=16, unroll=True)
-    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), rtol=1e-6)
+    # scan vs unrolled lowering reassociates f32 sums; allow ulp-level noise
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), rtol=1e-5, atol=1e-7)
 
 
 def test_mlstm_chunked_matches_sequential():

@@ -107,7 +107,9 @@ DS["__test"] = shape
 fn, args, shardings, donate = build_lowerable(cfg, "__test", mesh, "train", rep)
 with mesh, activation_sharding(mesh, LAYOUTS["train"]()):
     compiled = jax.jit(fn, in_shardings=shardings, donate_argnums=donate).lower(*args).compile()
-print(json.dumps({"ok": True, "flops": compiled.cost_analysis().get("flops", 0)}))
+ca = compiled.cost_analysis()
+ca = ca[0] if isinstance(ca, (list, tuple)) else ca  # list[dict] pre-jax-0.5
+print(json.dumps({"ok": True, "flops": ca.get("flops", 0)}))
 """
 
 
