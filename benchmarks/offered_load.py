@@ -1,0 +1,156 @@
+"""Offered-load sweep: load-blind SONAR vs load-aware SONAR-LB.
+
+For each arrival rate the same Poisson stream is driven through the
+discrete-event fleet simulator (`repro.traffic`) against a pool of
+identical websearch replicas on a healthy network — the adversarial case
+for load-blind routing, where semantics and QoS tie and argmax herds every
+request onto one replica.  Reported per (algorithm, rate):
+
+  goodput (completed requests / s), p50 / p99 completion time (ms, queueing
+  + service + network), failure count (requests that exhausted their retry
+  budget), drop events, busiest-server share.
+
+Past single-server saturation (capacity / mean service time) the load-blind
+router collapses — queue overflows, failures, tail blow-up — while SONAR-LB
+spreads the same stream and keeps goodput at the fleet limit.
+
+  PYTHONPATH=src:. python benchmarks/offered_load.py                # full
+  PYTHONPATH=src:. python benchmarks/offered_load.py --smoke        # CI
+  PYTHONPATH=src:. python benchmarks/offered_load.py --json out.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+import jax
+
+from repro.core.routing import RoutingConfig, make_router
+from repro.traffic import (
+    FleetTrafficSim,
+    QueueConfig,
+    ideal_platform,
+    poisson_arrivals,
+    replica_fleet,
+)
+
+QUERY_TEXTS = [
+    "what is the latest news about the stock market today",
+    "search the web for current weather information",
+    "find recent articles about machine learning research",
+    "look up live election results online",
+]
+
+
+def run_point(
+    algo: str,
+    rate_rps: float,
+    *,
+    n_replicas: int,
+    queue_cfg: QueueConfig,
+    horizon_s: float,
+    cfg: RoutingConfig,
+    seed: int,
+) -> dict:
+    servers = replica_fleet(n_replicas)
+    plat = ideal_platform(servers, seed=seed, horizon_s=4.0 * horizon_s)
+    router = make_router(algo, servers, cfg)
+    arrivals = poisson_arrivals(
+        jax.random.PRNGKey(seed), rate_rps, horizon_s
+    )
+    sim = FleetTrafficSim(plat, router, queue_cfg, retry_budget=2, seed=seed)
+    rep = sim.run(arrivals, QUERY_TEXTS)
+    return {
+        "algo": algo,
+        "rate_rps": rate_rps,
+        "offered": rep.n_offered,
+        "goodput_rps": rep.goodput_rps,
+        "p50_ms": rep.p50_ms,
+        "p99_ms": rep.p99_ms,
+        "failed": rep.n_failed,
+        "drop_events": rep.n_drop_events,
+        "max_share": rep.max_share,
+        "mean_utilization": rep.mean_utilization,
+    }
+
+
+def main(
+    print_fn=print,
+    *,
+    smoke: bool = False,
+    n_replicas: int | None = None,
+    rates: list | None = None,
+    horizon_s: float | None = None,
+    seed: int = 0,
+) -> dict:
+    # single-server saturation = capacity / mean service = 2 / 0.5 s = 4 rps;
+    # the sweep crosses it and approaches the fleet limit (n * 4 rps)
+    queue_cfg = QueueConfig(
+        capacity=2, queue_limit=8, base_service_ms=500.0, inflation=1.0
+    )
+    if smoke:
+        n_replicas = n_replicas or 4
+        rates = rates or [2.0, 8.0]
+        horizon_s = horizon_s or 45.0
+    else:
+        n_replicas = n_replicas or 6
+        rates = rates or [2.0, 6.0, 8.0, 12.0]
+        horizon_s = horizon_s or 120.0
+    # every replica is a candidate (top_s default would exclude some)
+    cfg = RoutingConfig(gamma=0.35, top_s=n_replicas, top_k=n_replicas)
+    sat_rps = queue_cfg.capacity * 1000.0 / queue_cfg.base_service_ms
+
+    results: dict = {
+        "n_replicas": n_replicas,
+        "queue": {
+            "capacity": queue_cfg.capacity,
+            "queue_limit": queue_cfg.queue_limit,
+            "base_service_ms": queue_cfg.base_service_ms,
+        },
+        "single_server_saturation_rps": sat_rps,
+        "horizon_s": horizon_s,
+        "points": [],
+    }
+    for rate in rates:
+        for algo in ("sonar", "sonar_lb"):
+            point = run_point(
+                algo, rate,
+                n_replicas=n_replicas, queue_cfg=queue_cfg,
+                horizon_s=horizon_s, cfg=cfg, seed=seed,
+            )
+            results["points"].append(point)
+            print_fn(
+                f"offered_load,{rate:.1f},algo={algo} "
+                f"goodput={point['goodput_rps']:.2f}rps "
+                f"p50={point['p50_ms']:.0f}ms p99={point['p99_ms']:.0f}ms "
+                f"failed={point['failed']} drops={point['drop_events']} "
+                f"max_share={point['max_share']:.2f}"
+            )
+    return results
+
+
+if __name__ == "__main__":
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--smoke", action="store_true",
+                        help="tiny fleet / short horizon for CI")
+    parser.add_argument("--json", metavar="PATH", default=None)
+    args = parser.parse_args()
+    res = main(smoke=args.smoke)
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(res, f, indent=2)
+
+    # SONAR-LB must strictly win goodput AND p99 past single-server
+    # saturation (the acceptance gate of the herding fix)
+    by_rate: dict = {}
+    for p in res["points"]:
+        by_rate.setdefault(p["rate_rps"], {})[p["algo"]] = p
+    past_sat = [
+        r for r in by_rate
+        if r > res["single_server_saturation_rps"]
+        and by_rate[r]["sonar_lb"]["goodput_rps"] > by_rate[r]["sonar"]["goodput_rps"]
+        and by_rate[r]["sonar_lb"]["p99_ms"] < by_rate[r]["sonar"]["p99_ms"]
+    ]
+    assert len(past_sat) >= 2 or (args.smoke and len(past_sat) >= 1), (
+        f"SONAR-LB won at only {len(past_sat)} post-saturation load points"
+    )

@@ -41,7 +41,8 @@ def main(argv=None) -> dict:
     args = parser.parse_args(argv)
 
     from benchmarks import (
-        fleet_sim, paper_fig7, paper_fig9, paper_table2, paper_table3, roofline,
+        fleet_sim, offered_load, paper_fig7, paper_fig9, paper_table2,
+        paper_table3, roofline,
     )
 
     print("name,us_per_call,derived")
@@ -61,6 +62,7 @@ def main(argv=None) -> dict:
         results["table3"] = _jsonable(paper_table3.main())
         results["fig9"] = _jsonable(paper_fig9.main())
         results["fleet_sim"] = fleet_sim.main()
+        results["offered_load"] = _jsonable(offered_load.main())
         results["roofline"] = _jsonable(roofline.main())
     results["wall_s"] = time.time() - t0
     print(f"# total wall {results['wall_s']:.1f}s", file=sys.stderr)

@@ -51,7 +51,16 @@ class Agent:
     turn (its inputs are unchanged), reproducing the paper's observation that
     PRAG "frequently routes requests to the top-ranked tool located on a
     server undergoing downtime" and accumulates failures; SONAR's network
-    term steers the retry away."""
+    term steers the retry away.
+
+    Hedging (off by default): with `hedge_ms` set, a primary call whose
+    latency exceeds the threshold is raced against a duplicate to the
+    highest-ranked candidate on a *different* server, and the episode takes
+    whichever completes first (effective hedge completion = hedge_ms +
+    duplicate latency).  `retry_budget` bounds the total extra calls —
+    hedges and failure retries — a single task may spend; None leaves the
+    turn loop bounded by `max_turns` alone, preserving the original
+    semantics exactly."""
 
     def __init__(
         self,
@@ -60,18 +69,38 @@ class Agent:
         max_turns: int = 8,
         chat_turn_ms: float = 150.0,
         ticks_per_turn: int = 1,
+        hedge_ms: Optional[float] = None,
+        retry_budget: Optional[int] = None,
     ):
         self.platform = platform
         self.router = router
         self.max_turns = max_turns
         self.chat_turn_ms = chat_turn_ms
         self.ticks_per_turn = ticks_per_turn
+        self.hedge_ms = hedge_ms
+        self.retry_budget = retry_budget
+
+    def _hedge_decision(self, decision: Decision) -> Optional[Decision]:
+        """Highest-ranked candidate tool hosted on a different server."""
+        for tool in decision.candidate_tools:
+            server = int(self.router.index.tool_server[tool])
+            if server != decision.server_idx:
+                return Decision(
+                    server_idx=server,
+                    tool_idx=int(tool),
+                    expertise=0.0, network=0.0, fused=0.0,
+                    select_latency_ms=0.0,
+                    candidate_servers=decision.candidate_servers,
+                    candidate_tools=decision.candidate_tools,
+                )
+        return None
 
     def run_task(self, query: Query, t_idx: int) -> TaskRecord:
         decisions, latencies = [], []
         n_fail, sl_total, wall_ms = 0, 0.0, 0.0
         success = False
         t = t_idx
+        budget = self.retry_budget if self.retry_budget is not None else -1
 
         for _turn in range(self.max_turns):
             hist = self.platform.latency_window(t)
@@ -82,13 +111,42 @@ class Agent:
 
             result = self.platform.call_tool(decision, query, t)
             latencies.append(result.latency_ms)
-            wall_ms += result.latency_ms + self.chat_turn_ms
-            t += self.ticks_per_turn
+            call_ms = result.latency_ms
             if hasattr(self.router, "observe"):   # adaptive alpha/beta hook
                 self.router.observe(result.latency_ms, result.online)
 
+            # hedge: race a duplicate on the runner-up server when the
+            # primary is slow and budget remains
+            if (
+                self.hedge_ms is not None
+                and budget != 0
+                and result.latency_ms > self.hedge_ms
+                and (alt := self._hedge_decision(decision)) is not None
+            ):
+                budget -= 1
+                alt_result = self.platform.call_tool(alt, query, t)
+                latencies.append(alt_result.latency_ms)
+                if hasattr(self.router, "observe"):
+                    self.router.observe(alt_result.latency_ms, alt_result.online)
+                if not alt_result.online:
+                    n_fail += 1
+                hedged_ms = self.hedge_ms + alt_result.latency_ms
+                if alt_result.online and (
+                    not result.online or hedged_ms < result.latency_ms
+                ):
+                    if not result.online:
+                        n_fail += 1   # the out-raced primary still failed
+                    decisions.append(alt)
+                    decision, result = alt, alt_result
+                    call_ms = hedged_ms
+            wall_ms += call_ms + self.chat_turn_ms
+            t += self.ticks_per_turn
+
             if not result.online:
                 n_fail += 1       # server failure event (FR numerator)
+                if budget == 0:
+                    break         # retry budget exhausted: give up
+                budget -= 1 if budget > 0 else 0
                 continue          # exception handling: re-route and retry
             # online call: the chat phase judges task completion
             success = result.success

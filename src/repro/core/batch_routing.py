@@ -43,7 +43,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.dataset import Server
-from repro.core.qos import QosParams, network_score
+from repro.core.qos import QosParams, load_penalty, network_score
 from repro.core.routing import (
     ALGORITHMS,
     BM25_STAGE_MS,
@@ -91,8 +91,9 @@ class BatchDecisions:
 @functools.partial(
     jax.jit,
     static_argnames=(
-        "top_s", "top_k", "alpha", "beta", "temp",
-        "use_network", "rerank", "use_kernels", "qos_params", "interpret",
+        "top_s", "top_k", "alpha", "beta", "gamma", "load_knee", "load_sharp",
+        "temp", "use_network", "use_load", "rerank", "use_kernels",
+        "qos_params", "interpret",
     ),
 )
 def _route_pipeline(
@@ -103,13 +104,18 @@ def _route_pipeline(
     w_tool: jax.Array,            # [n_tools, V_t]
     tool_server: jax.Array,       # [n_tools] i32
     latency_hist: Optional[jax.Array],  # [n_servers, T] or [n_q, n_servers, T]
+    server_load: Optional[jax.Array],   # [n_servers] or [n_q, n_servers] rho
     *,
     top_s: int,
     top_k: int,
     alpha: float,
     beta: float,
+    gamma: float,
+    load_knee: float,
+    load_sharp: float,
     temp: float,
     use_network: bool,
+    use_load: bool,
     rerank: bool,
     use_kernels: bool,
     qos_params: QosParams,
@@ -168,17 +174,31 @@ def _route_pipeline(
         tool_qos = jnp.zeros((n_tools,), jnp.float32)
         eff_alpha, eff_beta = 1.0, 0.0                      # S = C (scalar path)
 
+    # -- SONAR-LB load term: per-server utilization penalty, broadcast to
+    # tools of the host server (shared [n_servers] or per-query) --
+    if use_load and server_load is not None:
+        pen = load_penalty(server_load, load_knee, load_sharp)
+        if server_load.ndim == 2:                           # [n_q, n_servers]
+            tool_load = jnp.take(pen, tool_server, axis=1)  # [n_q, n_tools]
+        else:
+            tool_load = pen[tool_server]                    # [n_tools]
+        eff_gamma = gamma
+    else:
+        tool_load = jnp.zeros((n_tools,), jnp.float32)
+        eff_gamma = 0.0
+
     # -- fused candidate top-k + Eq. 5 softmax + Eq. 8 fusion + argmax --
     if use_kernels:
         tool_idx, c, n, s = ops.fused_select(
-            sel, val, tool_qos,
-            k=top_k, alpha=eff_alpha, beta=eff_beta, temp=temp,
-            interpret=interpret,
+            sel, val, tool_qos, tool_load,
+            k=top_k, alpha=eff_alpha, beta=eff_beta, gamma=eff_gamma,
+            temp=temp, interpret=interpret,
         )
     else:
         tool_idx, c, n, s = kref.fused_select_ref(
-            sel, val, tool_qos,
-            k=top_k, alpha=eff_alpha, beta=eff_beta, temp=temp,
+            sel, val, tool_qos, tool_load,
+            k=top_k, alpha=eff_alpha, beta=eff_beta, gamma=eff_gamma,
+            temp=temp,
         )
     server_idx = tool_server[tool_idx]
     return server_idx, tool_idx, c, n, s
@@ -211,6 +231,7 @@ class BatchRoutingEngine:
         router_cls = ALGORITHMS[self.algo]
         self.uses_prediction = router_cls.uses_prediction
         self.uses_network = router_cls.uses_network
+        self.uses_load = router_cls.uses_load
         self.rerank = router_cls.rerank
         self.use_kernels = use_kernels
         self.interpret = interpret
@@ -258,6 +279,8 @@ class BatchRoutingEngine:
         batch: EncodedBatch,
         latency_hist: Optional[np.ndarray] = None,  # [n_servers, T] shared or
                                                     # [n_q, n_servers, T]
+        server_load: Optional[np.ndarray] = None,   # [n_servers] shared or
+                                                    # [n_q, n_servers] rho
     ) -> BatchDecisions:
         if batch.n == 0:
             z = np.zeros((0,), np.float32)
@@ -269,6 +292,9 @@ class BatchRoutingEngine:
         lat = None
         if self.uses_network and latency_hist is not None:
             lat = jnp.asarray(latency_hist, jnp.float32)
+        load = None
+        if self.uses_load and server_load is not None and self.cfg.gamma != 0.0:
+            load = jnp.asarray(server_load, jnp.float32)
         server_idx, tool_idx, c, n, s = _route_pipeline(
             jnp.asarray(batch.q_server),
             jnp.asarray(batch.q_tool),
@@ -277,12 +303,17 @@ class BatchRoutingEngine:
             self._w_tool,
             self._tool_server,
             lat,
+            load,
             top_s=self.cfg.top_s,
             top_k=self.cfg.top_k,
             alpha=self.cfg.alpha,
             beta=self.cfg.beta,
+            gamma=self.cfg.gamma,
+            load_knee=self.cfg.load_knee,
+            load_sharp=self.cfg.load_sharp,
             temp=self.cfg.expertise_temp,
             use_network=self.uses_network and lat is not None,
+            use_load=load is not None,
             rerank=self.rerank,
             use_kernels=self.use_kernels,
             qos_params=self.cfg.qos,
@@ -298,9 +329,12 @@ class BatchRoutingEngine:
         )
 
     def route_texts(
-        self, queries: Sequence[str], latency_hist: Optional[np.ndarray] = None
+        self,
+        queries: Sequence[str],
+        latency_hist: Optional[np.ndarray] = None,
+        server_load: Optional[np.ndarray] = None,
     ) -> BatchDecisions:
-        return self.route(self.encode(queries), latency_hist)
+        return self.route(self.encode(queries), latency_hist, server_load)
 
 
 def make_engine(

@@ -209,6 +209,33 @@ def generate_traces(
 
 generate_traces_jit = jax.jit(generate_traces, static_argnums=(2, 3))
 
+# Host-side memo of synthesized fleets.  Platform/gateway construction is
+# dominated by the 8640-step outage scan; tests (and repeated benchmark
+# sweeps) rebuild the same (seed, profiles, horizon) fleets dozens of times,
+# so one process-wide cache cuts minutes of tier-1 wall-clock.  Entries are
+# marked read-only — consumers copy before mutating (observed histories).
+_TRACE_CACHE: dict = {}
+
+
+def generate_traces_cached(
+    seed: int,
+    profiles_packed: np.ndarray,
+    n_steps: int,
+    dt_s: float = DEFAULT_DT_S,
+) -> np.ndarray:
+    key = (int(seed), profiles_packed.tobytes(), int(n_steps), float(dt_s))
+    hit = _TRACE_CACHE.get(key)
+    if hit is None:
+        hit = np.asarray(
+            generate_traces_jit(
+                jax.random.PRNGKey(seed), jnp.asarray(profiles_packed),
+                n_steps, dt_s,
+            )
+        )
+        hit.setflags(write=False)
+        _TRACE_CACHE[key] = hit
+    return hit
+
 
 def pack_profiles(profiles: list[LatencyProfile]) -> np.ndarray:
     return np.stack([p.as_array() for p in profiles], axis=0)

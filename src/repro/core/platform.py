@@ -18,7 +18,6 @@ from __future__ import annotations
 import dataclasses
 from typing import Callable, Optional, Sequence
 
-import jax
 import numpy as np
 
 from repro.core import latency as L
@@ -215,10 +214,9 @@ class NetMCPPlatform:
         self.profiles = profiles
         packed = L.pack_profiles(profiles)
         n_steps = L.trace_horizon_steps(horizon_s, dt_s)
-        key = jax.random.PRNGKey(seed)
-        self.traces = np.asarray(
-            L.generate_traces_jit(key, packed, n_steps, dt_s)
-        )  # [n_servers, T] ms — ground-truth network state
+        # [n_servers, T] ms — ground-truth network state (memoized per
+        # (seed, profiles, horizon); the returned array is read-only)
+        self.traces = L.generate_traces_cached(seed, packed, n_steps, dt_s)
         # Observed histories: monitoring prefix + feed-forward call records.
         self.observed = self.traces.copy()
         self.n_steps = n_steps
@@ -255,6 +253,17 @@ class NetMCPPlatform:
         t_idx = int(np.clip(t_idx, 0, self.n_steps - 1))
         return float(self.traces[server_idx, t_idx])
 
+    def record_observation(
+        self, server_idx: int, t_idx: int, latency_ms: float
+    ) -> None:
+        """Feed-forward recording (Sec. III-B): write an actually-observed
+        latency into the server's history so future routing decisions see
+        it.  The traffic simulator records queueing-inclusive completion
+        latencies (and offline events for queue overflows) through this,
+        which is what closes the load->latency loop."""
+        t_idx = int(np.clip(t_idx, 0, self.n_steps - 1))
+        self.observed[server_idx, t_idx] = latency_ms
+
     # -- execution --------------------------------------------------------------
     def call_tool(self, decision: Decision, query: Query, t_idx: int) -> ToolResult:
         """Execute the selected tool at simulated time t_idx."""
@@ -275,5 +284,5 @@ class NetMCPPlatform:
             answer = query.answer if success else ""
 
         # feed-forward: record the actual execution latency
-        self.observed[decision.server_idx, int(np.clip(t_idx, 0, self.n_steps - 1))] = lat
+        self.record_observation(decision.server_idx, t_idx, lat)
         return ToolResult(latency_ms=lat, online=online, success=success, answer=answer)

@@ -143,3 +143,26 @@ def network_score(lat: jnp.ndarray, p: QosParams = DEFAULT_QOS) -> jnp.ndarray:
 
 
 network_score_jit = jax.jit(network_score, static_argnums=(1,))
+
+
+# ---------------------------------------------------------------------------
+# Load penalty (SONAR-LB extension of Eq. 8)
+# ---------------------------------------------------------------------------
+
+def load_penalty(
+    rho: jnp.ndarray, knee: float = 0.75, sharp: float = 4.0
+) -> jnp.ndarray:
+    """Convex utilization penalty U(rho) for the load-aware fusion
+
+        S(i) = alpha*C(i) + beta*N(i) - gamma*U(rho_i)
+
+    where rho is the host server's demand-normalized utilization
+    ((in-service + queued) / capacity).  Linear in rho below the knee so
+    semantics still dominate on an idle fleet; superlinear past it so a
+    saturating server is vacated before its queue overflows.  Pure
+    elementwise f32 math — the scalar router, the jit batched pipeline and
+    the Pallas selection kernel all consume the same values, keeping the
+    three paths argmax-identical.
+    """
+    x = jnp.maximum(rho.astype(jnp.float32), 0.0)
+    return x + sharp * jnp.maximum(x - knee, 0.0) ** 2

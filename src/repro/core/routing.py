@@ -25,7 +25,7 @@ import numpy as np
 
 from repro.core import bm25
 from repro.core.dataset import Server, WEBSEARCH
-from repro.core.qos import DEFAULT_QOS, QosParams, network_score
+from repro.core.qos import DEFAULT_QOS, QosParams, load_penalty, network_score
 
 # Simulated component latencies (ms) — calibrated to Fig. 7's SL axis.
 LLM_CALL_MS = 300.0          # one short LLM call (predict / translate)
@@ -123,6 +123,13 @@ class RoutingConfig:
     top_k: int = 10                # #filter_tool   (stage 2, Eq. 4)
     alpha: float = 0.5             # semantic weight (Eq. 8)
     beta: float = 0.5              # network weight  (Eq. 8)
+    # Load-aware extension (SONAR-LB): S = alpha*C + beta*N - gamma*U(rho),
+    # with U the convex utilization penalty of core.qos.load_penalty.
+    # Only consulted when the algorithm `uses_load` AND a server_load vector
+    # is supplied; gamma=0 or load=None reduces exactly to SONAR.
+    gamma: float = 0.35            # load weight
+    load_knee: float = 0.75        # utilization where the penalty turns convex
+    load_sharp: float = 4.0        # superlinear coefficient past the knee
     # Softmax temperature of Eq. 5 ("amplifies the relative differences
     # between expert tools and non-expert tools").
     expertise_temp: float = 1.0
@@ -160,6 +167,7 @@ class Router:
     name = "base"
     uses_prediction = False
     uses_network = False
+    uses_load = False
     rerank = False
 
     def __init__(self, servers: Sequence[Server], cfg: RoutingConfig = RoutingConfig()):
@@ -197,6 +205,8 @@ class Router:
         self,
         query: str,
         latency_hist: Optional[np.ndarray] = None,  # [n_servers, T] ms
+        server_load: Optional[np.ndarray] = None,   # [n_servers] utilization
+                                                    # rho = demand / capacity
     ) -> Decision:
         qtext, sl = self._preprocess(query)
         cand_servers, cand_tools, scores = self._candidates(qtext)
@@ -219,6 +229,14 @@ class Router:
         else:
             N = np.zeros_like(C)
             S = C
+
+        if self.uses_load and server_load is not None and self.cfg.gamma != 0.0:
+            rho = np.asarray(server_load, np.float32)
+            rho = rho[self.index.tool_server[cand_tools]]
+            U = np.asarray(
+                load_penalty(rho, self.cfg.load_knee, self.cfg.load_sharp)
+            )
+            S = S - self.cfg.gamma * U
 
         best = int(np.argmax(S))
         tool_idx = int(cand_tools[best])
@@ -255,11 +273,25 @@ class SonarRouter(PragRouter):
     uses_network = True
 
 
+class SonarLBRouter(SonarRouter):
+    """SONAR-LB: SONAR + a load term closing the demand->latency loop.
+
+    S(i) = alpha*C(i) + beta*N(i) - gamma*U(rho_i)  with U the convex
+    utilization penalty (core.qos.load_penalty) of the candidate's host
+    server.  With `server_load=None` (or gamma=0) this is exactly SONAR —
+    the load term is a pure extension, so all parity guarantees carry over.
+    """
+
+    name = "SONAR-LB"
+    uses_load = True
+
+
 ALGORITHMS = {
     "rag": RagRouter,
     "rerank_rag": RerankRagRouter,
     "prag": PragRouter,
     "sonar": SonarRouter,
+    "sonar_lb": SonarLBRouter,
 }
 
 

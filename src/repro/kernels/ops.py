@@ -94,15 +94,19 @@ def fused_select(
     val_scores: jax.Array,   # [n_q, n_tools] softmax-value scores (== sel
                              # except under rerank)
     tool_qos: jax.Array,     # [n_q, n_tools] or [n_tools] per-tool N (Eq. 7)
+    tool_load: Optional[jax.Array] = None,  # [n_q, n_tools] or [n_tools]
+                                            # per-tool load penalty U
     *,
     k: int,
     alpha: float,
     beta: float,
+    gamma: float = 0.0,
     temp: float = 1.0,
     interpret: Optional[bool] = None,
 ):
     """Winning (tool_idx, C, N, S) per query; exact match of the scalar
-    candidate->softmax->fuse->argmax tail of `Router.select`."""
+    candidate->softmax->fuse->argmax tail of `Router.select` (with the
+    SONAR-LB load term when tool_load/gamma are given)."""
     n_q, n_t = sel_scores.shape
     k = min(k, n_t)
     per_query_qos = tool_qos.ndim == 2
@@ -111,6 +115,14 @@ def fused_select(
     qos = jnp.asarray(tool_qos, jnp.float32)
     if not per_query_qos:
         qos = qos[None, :]
+    if tool_load is None:
+        load = jnp.zeros((1, n_t), jnp.float32)
+        per_query_load = False
+    else:
+        load = jnp.asarray(tool_load, jnp.float32)
+        per_query_load = load.ndim == 2
+        if not per_query_load:
+            load = load[None, :]
 
     sel = _pad_to(_pad_to(sel, 1, 128, value=_sel.NEG), 0, _sel.QUERY_TILE,
                   value=_sel.NEG)
@@ -119,10 +131,15 @@ def fused_select(
     qos = _pad_to(qos, 1, 128)
     if per_query_qos:
         qos = _pad_to(qos, 0, _sel.QUERY_TILE)
+    load = _pad_to(load, 1, 128)
+    if per_query_load:
+        load = _pad_to(load, 0, _sel.QUERY_TILE)
     idx, c, n, s = _sel.fused_select_pallas(
-        sel, val, qos,
-        k=k, alpha=float(alpha), beta=float(beta), temp=float(temp),
-        per_query_qos=per_query_qos, interpret=_auto_interpret(interpret),
+        sel, val, qos, load,
+        k=k, alpha=float(alpha), beta=float(beta), gamma=float(gamma),
+        temp=float(temp),
+        per_query_qos=per_query_qos, per_query_load=per_query_load,
+        interpret=_auto_interpret(interpret),
     )
     return idx[:n_q], c[:n_q], n[:n_q], s[:n_q]
 

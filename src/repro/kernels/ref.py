@@ -18,28 +18,36 @@ def fused_select_ref(
     sel_scores: jax.Array,   # [n_q, n_tools], invalid = -inf/NEG
     val_scores: jax.Array,   # [n_q, n_tools]
     tool_qos: jax.Array,     # [n_q, n_tools] or [n_tools]
+    tool_load: jax.Array | None = None,  # [n_q, n_tools] or [n_tools] — U
     *,
     k: int,
     alpha: float,
     beta: float,
+    gamma: float = 0.0,
     temp: float = 1.0,
 ):
     """Pure-jnp oracle for kernels/select_fuse: stage-2 top-k (ties -> lower
-    index), Eq. 5 softmax over the valid candidates, Eq. 8 fusion, argmax."""
+    index), Eq. 5 softmax over the valid candidates, Eq. 8 fusion (plus the
+    SONAR-LB load term -gamma*U), argmax."""
     sel = jnp.maximum(sel_scores.astype(jnp.float32), NEG)
     k = min(k, sel.shape[-1])
     top_v, top_i = jax.lax.top_k(sel, k)                     # [n_q, k]
     valid = top_v > NEG / 2.0
     val = jnp.take_along_axis(val_scores.astype(jnp.float32), top_i, axis=-1)
     val = jnp.where(valid, val, NEG)
-    if tool_qos.ndim == 1:
-        n = tool_qos.astype(jnp.float32)[top_i]
-    else:
-        n = jnp.take_along_axis(tool_qos.astype(jnp.float32), top_i, axis=-1)
+
+    def _gather(per_tool):
+        per_tool = per_tool.astype(jnp.float32)
+        if per_tool.ndim == 1:
+            return per_tool[top_i]
+        return jnp.take_along_axis(per_tool, top_i, axis=-1)
+
+    n = _gather(tool_qos)
+    u = _gather(tool_load) if tool_load is not None else jnp.zeros_like(n)
     z = (val - jnp.max(val, axis=-1, keepdims=True)) / temp
     e = jnp.exp(z)
     c = e / jnp.maximum(e.sum(axis=-1, keepdims=True), 1e-30)
-    s = jnp.where(valid, alpha * c + beta * n, NEG)
+    s = jnp.where(valid, alpha * c + beta * n - gamma * u, NEG)
     best = jnp.argmax(s, axis=-1)                            # first max wins
     take = lambda a: jnp.take_along_axis(a, best[:, None], axis=-1)[:, 0]
     return take(top_i), take(c), take(n), take(s)

@@ -45,19 +45,20 @@ NEG = -1e30         # finite -inf stand-in (avoids inf-inf NaNs in VMEM math)
 
 
 def _select_kernel(
-    sel_ref, val_ref, qos_ref, idx_ref, c_ref, n_ref, s_ref,
-    *, k: int, alpha: float, beta: float, temp: float,
+    sel_ref, val_ref, qos_ref, load_ref, idx_ref, c_ref, n_ref, s_ref,
+    *, k: int, alpha: float, beta: float, gamma: float, temp: float,
 ):
     sel = sel_ref[...].astype(jnp.float32)   # [QT, T_pad]
     val = val_ref[...].astype(jnp.float32)   # [QT, T_pad]
     qos = qos_ref[...].astype(jnp.float32)   # [QT or 1, T_pad]
+    load = load_ref[...].astype(jnp.float32)  # [QT or 1, T_pad] — U penalty
     QT, T_pad = sel.shape
 
     lane = jax.lax.broadcasted_iota(jnp.float32, (QT, T_pad), 1)
 
     # --- k-step extraction: peel the row maximum k times (ties -> lowest
     # index, matching a stable descending argsort) ---
-    cand_val, cand_qos, cand_idx = [], [], []
+    cand_val, cand_qos, cand_load, cand_idx = [], [], [], []
     cur = sel
     for _ in range(k):
         m = jnp.max(cur, axis=-1, keepdims=True)                    # [QT, 1]
@@ -67,9 +68,11 @@ def _select_kernel(
         onehot = (lane == idx).astype(jnp.float32)
         v = jnp.sum(val * onehot, axis=-1, keepdims=True)
         n = jnp.sum(qos * onehot, axis=-1, keepdims=True)
+        u = jnp.sum(load * onehot, axis=-1, keepdims=True)
         valid = m > NEG / 2.0
         cand_val.append(jnp.where(valid, v, NEG))
         cand_qos.append(n)
+        cand_load.append(u)
         cand_idx.append(idx)
         cur = jnp.where(onehot > 0.0, NEG, cur)
 
@@ -83,15 +86,15 @@ def _select_kernel(
         denom = denom + e
     denom = jnp.maximum(denom, 1e-30)
 
-    # --- Eq. 8 fusion + Eq. 9 argmax (strict > keeps the earliest winner,
-    # matching np.argmax over the rank-ordered candidate list) ---
+    # --- Eq. 8 fusion (+ SONAR-LB load term) + Eq. 9 argmax (strict > keeps
+    # the earliest winner, matching np.argmax over the rank-ordered list) ---
     best_s = jnp.full((QT, 1), NEG, jnp.float32)
     best_c = jnp.zeros((QT, 1), jnp.float32)
     best_n = jnp.zeros((QT, 1), jnp.float32)
     best_i = jnp.zeros((QT, 1), jnp.float32)
-    for v, e, n, i in zip(cand_val, exps, cand_qos, cand_idx):
+    for v, e, n, u, i in zip(cand_val, exps, cand_qos, cand_load, cand_idx):
         c = e / denom
-        s = alpha * c + beta * n
+        s = alpha * c + beta * n - gamma * u
         s = jnp.where(v > NEG / 2.0, s, NEG)
         take = s > best_s
         best_c = jnp.where(take, c, best_c)
@@ -107,37 +110,49 @@ def _select_kernel(
 
 @functools.partial(
     jax.jit,
-    static_argnames=("k", "alpha", "beta", "temp", "per_query_qos", "interpret"),
+    static_argnames=(
+        "k", "alpha", "beta", "gamma", "temp",
+        "per_query_qos", "per_query_load", "interpret",
+    ),
 )
 def fused_select_pallas(
     sel: jax.Array,   # [n_q_pad, T_pad] f32, NEG-padded
     val: jax.Array,   # [n_q_pad, T_pad] f32
     qos: jax.Array,   # [n_q_pad or 1, T_pad] f32
+    load: jax.Array,  # [n_q_pad or 1, T_pad] f32 — per-tool U penalty
     *,
     k: int,
     alpha: float,
     beta: float,
+    gamma: float,
     temp: float,
     per_query_qos: bool,
+    per_query_load: bool,
     interpret: bool = False,
 ):
     n_q, T_pad = sel.shape
     assert n_q % QUERY_TILE == 0 and T_pad % 128 == 0
     grid = (n_q // QUERY_TILE,)
-    qos_spec = (
-        pl.BlockSpec((QUERY_TILE, T_pad), lambda i: (i, 0))
-        if per_query_qos
-        else pl.BlockSpec((1, T_pad), lambda i: (0, 0))
-    )
+
+    def _row_spec(per_query: bool) -> pl.BlockSpec:
+        return (
+            pl.BlockSpec((QUERY_TILE, T_pad), lambda i: (i, 0))
+            if per_query
+            else pl.BlockSpec((1, T_pad), lambda i: (0, 0))
+        )
+
     out_spec = pl.BlockSpec((QUERY_TILE, 1), lambda i: (i, 0))
     out_shape = jax.ShapeDtypeStruct((n_q, 1), jnp.float32)
     idx, c, n, s = pl.pallas_call(
-        functools.partial(_select_kernel, k=k, alpha=alpha, beta=beta, temp=temp),
+        functools.partial(
+            _select_kernel, k=k, alpha=alpha, beta=beta, gamma=gamma, temp=temp
+        ),
         grid=grid,
         in_specs=[
             pl.BlockSpec((QUERY_TILE, T_pad), lambda i: (i, 0)),
             pl.BlockSpec((QUERY_TILE, T_pad), lambda i: (i, 0)),
-            qos_spec,
+            _row_spec(per_query_qos),
+            _row_spec(per_query_load),
         ],
         out_specs=[out_spec, out_spec, out_spec, out_spec],
         out_shape=[
@@ -145,5 +160,5 @@ def fused_select_pallas(
             out_shape, out_shape, out_shape,
         ],
         interpret=interpret,
-    )(sel, val, qos)
+    )(sel, val, qos, load)
     return idx[:, 0], c[:, 0], n[:, 0], s[:, 0]

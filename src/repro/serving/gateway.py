@@ -24,7 +24,7 @@ import numpy as np
 from repro.core import latency as latlib
 from repro.core.batch_routing import BatchRoutingEngine
 from repro.core.dataset import Server, Tool
-from repro.core.routing import RoutingConfig, SonarRouter
+from repro.core.routing import ALGORITHMS, RoutingConfig, SonarRouter  # noqa: F401
 
 ARCH_CAPABILITIES = {
     "dense": "general purpose text generation chat completion dense transformer",
@@ -74,23 +74,30 @@ class SonarGateway:
         history: int = 64,
         executor: Optional[Callable] = None,   # (replica_idx, request) -> latency_ms
         use_kernels: bool = False,
+        algo: str = "sonar",                   # "sonar" | "sonar_lb"
+        slots_per_replica: int = 4,            # capacity behind the load term
+        lb_chunk: int = 8,                     # load-aware batch routing chunk
     ):
-        import jax
-
         self.replicas = list(replicas)
-        self.router = SonarRouter(self.replicas, cfg)
+        self.algo = algo.lower().replace("-", "_")
+        self.router = ALGORITHMS[self.algo](self.replicas, cfg)
+        assert self.router.uses_network, "the gateway routes on telemetry"
         self.history = history
         self.executor = executor
         self.use_kernels = use_kernels
+        self.lb_chunk = lb_chunk
         self._engine: Optional[BatchRoutingEngine] = None
         n = len(self.replicas)
+        # in-flight accounting: callers running concurrent traffic use
+        # begin()/finish() so the utilization the load term sees tracks
+        # outstanding work; route()/route_batch() keep their own counts.
+        self.in_flight = np.zeros(n, np.float32)
+        self.capacity = float(max(slots_per_replica, 1))
         if profiles is None:
             profiles = [latlib.ideal_profile() for _ in range(n)]
         packed = latlib.pack_profiles(profiles)
         steps = latlib.trace_horizon_steps()
-        self.traces = np.asarray(
-            latlib.generate_traces_jit(jax.random.PRNGKey(seed), packed, steps)
-        )
+        self.traces = latlib.generate_traces_cached(seed, packed, steps)
         self.telemetry = self.traces[:, :history].copy()
         self.t = history
         self.stats: list = []
@@ -101,8 +108,40 @@ class SonarGateway:
         self.telemetry[idx, -1] = latency_ms
         self.t += 1
 
+    def _utilization(self) -> np.ndarray:
+        return self.in_flight / self.capacity
+
+    # -- concurrent dispatch accounting (SONAR-LB) --------------------------
+    def begin(self, request_text: str) -> RouteResult:
+        """Route and dispatch without completing: the pick is counted
+        in-flight until `finish` is called.  This is the API a concurrent
+        front door drives; `route` is the synchronous convenience."""
+        decision = self.router.select(
+            request_text, self.telemetry, self._utilization()
+        )
+        idx = decision.server_idx
+        self.in_flight[idx] += 1.0
+        return RouteResult(
+            replica_idx=idx, latency_ms=0.0, ok=True,
+            expertise=decision.expertise, network=decision.network,
+        )
+
+    def finish(self, replica_idx: int, latency_ms: float) -> RouteResult:
+        """Complete a begun dispatch: record telemetry, release the slot."""
+        self.in_flight[replica_idx] = max(self.in_flight[replica_idx] - 1.0, 0.0)
+        ok = latency_ms < latlib.OFFLINE_MS
+        self._observe(replica_idx, latency_ms)
+        res = RouteResult(
+            replica_idx=replica_idx, latency_ms=latency_ms, ok=ok,
+            expertise=0.0, network=0.0,
+        )
+        self.stats.append(res)
+        return res
+
     def route(self, request_text: str) -> RouteResult:
-        decision = self.router.select(request_text, self.telemetry)
+        decision = self.router.select(
+            request_text, self.telemetry, self._utilization()
+        )
         idx = decision.server_idx
         if self.executor is not None:
             latency = float(self.executor(idx, request_text))
@@ -118,34 +157,50 @@ class SonarGateway:
         return res
 
     def engine(self) -> BatchRoutingEngine:
-        """The batched SONAR engine over this fleet (built once, lazily).
+        """The batched engine over this fleet (built once, lazily).
         Shares the scalar router's compiled ToolIndex so both paths score
         the exact same corpus."""
         if self._engine is None:
             self._engine = BatchRoutingEngine(
-                self.replicas, self.router.cfg, algo="sonar",
+                self.replicas, self.router.cfg, algo=self.algo,
                 index=self.router.index,
             )
         return self._engine
 
     def route_batch(self, request_texts: Sequence[str]) -> list:
-        """Fleet-scale batched routing: the whole request batch runs through
-        the jit-compiled engine (two-stage BM25 + Pallas QoS + fused
-        selection) against one telemetry snapshot; executions are then
-        recorded in arrival order (feed-forward, Sec. III-B)."""
+        """Fleet-scale batched routing: the request batch runs through the
+        jit-compiled engine (two-stage BM25 + Pallas QoS + fused selection)
+        against one telemetry snapshot; executions are then recorded in
+        arrival order (feed-forward, Sec. III-B).
+
+        With a load-aware algorithm the batch is routed in `lb_chunk`-sized
+        chunks: each chunk's picks are counted in-flight before the next
+        chunk routes, so one hot batch spreads across replicas instead of
+        herding onto the single top-scored one."""
         if not self.use_kernels:
             return [self.route(t) for t in request_texts]
-        decisions = self.engine().route_texts(request_texts, self.telemetry)
+        eng = self.engine()
+        picks: list = []
+        step = self.lb_chunk if self.router.uses_load else len(request_texts)
+        step = max(step, 1)
+        for lo in range(0, len(request_texts), step):
+            chunk = request_texts[lo : lo + step]
+            dec = eng.route_texts(chunk, self.telemetry, self._utilization())
+            for qi in range(len(chunk)):
+                idx = int(dec.server_idx[qi])
+                self.in_flight[idx] += 1.0
+                picks.append(
+                    (idx, float(dec.expertise[qi]), float(dec.network[qi]))
+                )
         out = []
-        for qi in range(len(request_texts)):
-            idx = int(decisions.server_idx[qi])
+        for idx, expertise, network in picks:
             latency = float(self.traces[idx, min(self.t, self.traces.shape[1] - 1)])
             self._observe(idx, latency)
+            self.in_flight[idx] = max(self.in_flight[idx] - 1.0, 0.0)
             res = RouteResult(
                 replica_idx=idx, latency_ms=latency,
                 ok=latency < latlib.OFFLINE_MS,
-                expertise=float(decisions.expertise[qi]),
-                network=float(decisions.network[qi]),
+                expertise=expertise, network=network,
             )
             self.stats.append(res)
             out.append(res)

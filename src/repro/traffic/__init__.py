@@ -1,0 +1,19 @@
+"""Fleet traffic subsystem: open-loop arrival processes, per-server
+queue/capacity stations, and the discrete-event simulator that closes the
+load->latency loop around the routing stack (SONAR vs SONAR-LB)."""
+from repro.traffic.arrivals import (  # noqa: F401
+    ARRIVAL_PROCESSES,
+    diurnal_arrivals,
+    flash_crowd_arrivals,
+    merge_arrivals,
+    mmpp_arrivals,
+    poisson_arrivals,
+    thinned_arrivals,
+)
+from repro.traffic.fleet import ideal_platform, replica_fleet  # noqa: F401
+from repro.traffic.queueing import QueueConfig, ServerQueue  # noqa: F401
+from repro.traffic.simulator import (  # noqa: F401
+    FleetTrafficSim,
+    Request,
+    TrafficReport,
+)

@@ -1,0 +1,174 @@
+"""Open-loop arrival processes for the fleet traffic simulator.
+
+Every generator maps a jax PRNG key to a sorted array of arrival times
+(seconds) on [0, horizon_s) — fully deterministic given the key, so traffic
+traces are reproducible the same way the network-state traces of
+`core.latency` are.  Four canonical shapes:
+
+  poisson      — homogeneous Poisson (exponential inter-arrivals)
+  diurnal      — inhomogeneous Poisson, sinusoidally-modulated rate
+                 (the paper's fluctuating network state, seen from the
+                 demand side instead of the latency side)
+  mmpp         — 2-state Markov-modulated Poisson (bursty: calm/burst
+                 phases with exponential dwell times)
+  flash_crowd  — base Poisson plus an exponentially-decaying spike at t0
+                 (breaking-news / thundering-herd demand)
+
+All non-homogeneous processes are built by thinning a homogeneous process
+at the peak rate (Lewis & Shedler), so they compose: any nonnegative
+`rate_fn(t)` bounded by `peak_rate` defines a valid process via
+`thinned_arrivals`.  `merge_arrivals` superimposes streams (the
+superposition of Poisson-type processes is the sum of their rates).
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import numpy as np
+
+__all__ = [
+    "poisson_arrivals",
+    "diurnal_arrivals",
+    "mmpp_arrivals",
+    "flash_crowd_arrivals",
+    "thinned_arrivals",
+    "merge_arrivals",
+    "ARRIVAL_PROCESSES",
+]
+
+
+def _homogeneous(key: jax.Array, rate: float, horizon_s: float) -> np.ndarray:
+    """Homogeneous Poisson arrival times on [0, horizon) at `rate` req/s."""
+    if rate <= 0.0 or horizon_s <= 0.0:
+        return np.zeros((0,), np.float64)
+    times: list[np.ndarray] = []
+    t0 = 0.0
+    # draw in chunks until the cumulative sum clears the horizon
+    mean_n = rate * horizon_s
+    chunk = int(mean_n + 6.0 * np.sqrt(mean_n) + 16.0)
+    while t0 < horizon_s:
+        key, sub = jax.random.split(key)
+        gaps = np.asarray(
+            jax.random.exponential(sub, (chunk,), dtype=np.float32), np.float64
+        ) / rate
+        t = t0 + np.cumsum(gaps)
+        times.append(t)
+        t0 = float(t[-1])
+    out = np.concatenate(times)
+    return out[out < horizon_s]
+
+
+def thinned_arrivals(
+    key: jax.Array,
+    rate_fn: Callable[[np.ndarray], np.ndarray],
+    peak_rate: float,
+    horizon_s: float,
+) -> np.ndarray:
+    """Inhomogeneous Poisson with intensity rate_fn(t) <= peak_rate, by
+    thinning a homogeneous process at the peak rate."""
+    k_base, k_thin = jax.random.split(key)
+    t = _homogeneous(k_base, peak_rate, horizon_s)
+    if t.size == 0:
+        return t
+    u = np.asarray(
+        jax.random.uniform(k_thin, (t.size,), dtype=np.float32), np.float64
+    )
+    keep = u * peak_rate < np.maximum(rate_fn(t), 0.0)
+    return t[keep]
+
+
+def poisson_arrivals(key: jax.Array, rate: float, horizon_s: float) -> np.ndarray:
+    return _homogeneous(key, rate, horizon_s)
+
+
+def diurnal_arrivals(
+    key: jax.Array,
+    rate: float,
+    horizon_s: float,
+    depth: float = 0.6,
+    period_s: float = 24 * 3600.0,
+    phase: float = 0.0,
+) -> np.ndarray:
+    """rate(t) = rate * (1 + depth*sin(2*pi*t/period + phase)); mean = rate."""
+    depth = float(np.clip(depth, 0.0, 1.0))
+
+    def rate_fn(t):
+        return rate * (1.0 + depth * np.sin(2.0 * np.pi * t / period_s + phase))
+
+    return thinned_arrivals(key, rate_fn, rate * (1.0 + depth), horizon_s)
+
+
+def mmpp_arrivals(
+    key: jax.Array,
+    rate: float,
+    horizon_s: float,
+    burst_factor: float = 5.0,
+    calm_mean_s: float = 120.0,
+    burst_mean_s: float = 20.0,
+) -> np.ndarray:
+    """2-state MMPP with mean rate `rate`: calm/burst phases with exponential
+    dwell times; the burst rate is `burst_factor` x the calm rate, with the
+    calm rate solved so the stationary mean equals `rate`."""
+    frac_burst = burst_mean_s / (calm_mean_s + burst_mean_s)
+    r_calm = rate / (1.0 - frac_burst + burst_factor * frac_burst)
+    r_burst = burst_factor * r_calm
+
+    # sample alternating dwell times until the horizon is covered
+    k_dwell, k_thin = jax.random.split(key)
+    switches, t0, burst = [0.0], 0.0, False
+    while t0 < horizon_s:
+        k_dwell, sub = jax.random.split(k_dwell)
+        mean = burst_mean_s if burst else calm_mean_s
+        dwell = float(jax.random.exponential(sub, (), dtype=np.float32)) * mean
+        t0 += max(dwell, 1e-6)
+        switches.append(t0)
+        burst = not burst
+    switches_arr = np.asarray(switches)
+
+    def rate_fn(t):
+        # phase index = number of completed dwells; even -> calm, odd -> burst
+        phase = np.searchsorted(switches_arr, t, side="right") - 1
+        return np.where(phase % 2 == 1, r_burst, r_calm)
+
+    return thinned_arrivals(k_thin, rate_fn, r_burst, horizon_s)
+
+
+def flash_crowd_arrivals(
+    key: jax.Array,
+    rate: float,
+    horizon_s: float,
+    spike_factor: float = 8.0,
+    spike_at_s: float | None = None,
+    decay_s: float | None = None,
+) -> np.ndarray:
+    """Base Poisson at `rate` plus a flash crowd at `spike_at_s` (default:
+    1/3 into the horizon): instantaneously `spike_factor` x the base rate,
+    decaying exponentially with time constant `decay_s` (default horizon/8)."""
+    t_spike = horizon_s / 3.0 if spike_at_s is None else spike_at_s
+    tau = horizon_s / 8.0 if decay_s is None else decay_s
+
+    def rate_fn(t):
+        spike = np.where(
+            t >= t_spike,
+            spike_factor * rate * np.exp(-(t - t_spike) / tau),
+            0.0,
+        )
+        return rate + spike
+
+    return thinned_arrivals(key, rate_fn, rate * (1.0 + spike_factor), horizon_s)
+
+
+def merge_arrivals(*streams: np.ndarray) -> np.ndarray:
+    """Superimpose arrival streams into one sorted stream."""
+    if not streams:
+        return np.zeros((0,), np.float64)
+    return np.sort(np.concatenate(streams))
+
+
+ARRIVAL_PROCESSES: dict = {
+    "poisson": poisson_arrivals,
+    "diurnal": diurnal_arrivals,
+    "mmpp": mmpp_arrivals,
+    "flash_crowd": flash_crowd_arrivals,
+}

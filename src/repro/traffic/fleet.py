@@ -1,0 +1,51 @@
+"""Canonical fleets for traffic experiments.
+
+A pool of *identical* websearch replicas is the adversarial case for
+load-blind routing (paper Sec. V-A runs identical backends): semantic
+scores tie, QoS ties on a healthy network, so argmax herds every request
+onto one replica until its observed latency degrades — exactly the
+collapse `benchmarks/offered_load.py` measures.
+"""
+from __future__ import annotations
+
+from repro.core import latency as L
+from repro.core.dataset import Server, Tool, WEBSEARCH
+from repro.core.platform import NetMCPPlatform
+
+
+def replica_fleet(n: int) -> list:
+    """n equivalently-capable websearch replicas (identical descriptions)."""
+    return [
+        Server(
+            name=f"websearch-replica-{i}",
+            domain=WEBSEARCH,
+            description=(
+                "web search engine for live internet information retrieval"
+            ),
+            tools=[
+                Tool(
+                    "web_search",
+                    "search the web for real-time information news and facts",
+                )
+            ],
+        )
+        for i in range(n)
+    ]
+
+
+def ideal_platform(
+    servers: list,
+    seed: int = 0,
+    horizon_s: float = 900.0,
+    dt_s: float = 1.0,
+) -> NetMCPPlatform:
+    """Healthy network for every replica, at a 1 s observation tick so the
+    feed-forward loop is responsive on traffic timescales."""
+    return NetMCPPlatform(
+        servers,
+        profiles=[L.ideal_profile() for _ in servers],
+        scenario="ideal",
+        seed=seed,
+        horizon_s=horizon_s,
+        dt_s=dt_s,
+    )

@@ -1,0 +1,344 @@
+"""Discrete-event fleet traffic simulator with a closed load->latency loop.
+
+The platform's network traces (`core.latency`) are *exogenous*: routing
+decisions never changed what the router observed, so at offered loads past
+a single server's capacity SONAR herds every request onto the top-scored
+replica.  This simulator closes the loop:
+
+  request completion latency = queueing wait + (inflated) service + network
+
+and that total is fed forward into `platform.observed` at the completion
+tick — the paper's feed-forward recording (Sec. III-B), now carrying
+endogenous queueing delay.  Queue overflows are recorded as offline events
+(the paper's hard clamp), which is exactly the signal SONAR's outage
+penalty reacts to.
+
+Mechanics
+  - virtual clock in ms; event heap of (time, seq, kind, payload)
+  - ARRIVAL  — route the request (any `Router`, incl. SONAR-LB with the
+               live utilization vector, or a plain callable) and offer it
+               to the chosen station (`traffic.queueing.ServerQueue`)
+  - FINISH   — complete a service, start the queued head (work
+               conservation), record the feed-forward observation
+  - HEDGE    — if the request is still waiting `hedge_ms` after arrival,
+               dispatch a duplicate copy (first completion wins; queued
+               losers are cancelled, in-service losers waste capacity)
+
+Retry budget: queue drops consume from a per-request budget — each drop
+records an offline observation and re-routes immediately (the agent loop's
+exception handling, seen from the fleet side); a request with no live copy
+and no budget left fails.
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import math
+from typing import Callable, Optional, Sequence, Union
+
+import jax
+import numpy as np
+
+from repro.core import latency as L
+from repro.core.platform import NetMCPPlatform
+from repro.core.routing import Router
+from repro.traffic.queueing import QueueConfig, ServerQueue
+
+_ARRIVAL, _FINISH, _HEDGE = 0, 1, 2
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    text: str
+    t_arrival_ms: float
+    budget: int                  # remaining retry/hedge budget
+    done: bool = False
+    failed: bool = False
+    live_copies: int = 0
+    n_routes: int = 0
+    n_drops: int = 0
+    n_hedges: int = 0
+    hedged: bool = False
+    t_start_ms: float = math.nan    # service start of the winning copy
+    t_finish_ms: float = math.nan   # client-side completion (incl. network)
+    service_ms: float = math.nan    # inflated service time of the winner
+    net_ms: float = math.nan        # network latency of the winner
+    server_idx: int = -1            # winning server
+
+
+class _Dispatch:
+    """One copy of a request offered to one station."""
+
+    __slots__ = ("req", "server", "draw_ms", "service_ms", "t_dispatch_ms",
+                 "t_start_ms", "started")
+
+    def __init__(self, req: Request, server: int, draw_ms: float, now_ms: float):
+        self.req = req
+        self.server = server
+        self.draw_ms = draw_ms          # raw sampled service time
+        self.service_ms = 0.0           # inflated at service start
+        self.t_dispatch_ms = now_ms
+        self.t_start_ms = math.nan
+        self.started = False
+
+
+@dataclasses.dataclass
+class TrafficReport:
+    n_offered: int
+    n_completed: int
+    n_failed: int
+    n_drop_events: int
+    n_hedges: int
+    goodput_rps: float            # completed (within deadline, if set) / s
+    p50_ms: float
+    p99_ms: float
+    mean_ms: float
+    per_server_served: list
+    max_share: float              # share of completions on the busiest server
+    mean_utilization: float
+    requests: list                # list[Request] for invariant checks
+
+    def row(self, name: str) -> str:
+        return (
+            f"{name},goodput={self.goodput_rps:.2f}rps,"
+            f"p50={self.p50_ms:.0f}ms,p99={self.p99_ms:.0f}ms,"
+            f"failed={self.n_failed},drops={self.n_drop_events},"
+            f"max_share={self.max_share:.2f}"
+        )
+
+
+RouteFn = Callable[[str, np.ndarray, np.ndarray], int]
+
+
+class FleetTrafficSim:
+    """Drives open-loop arrivals through routing + queueing + the network.
+
+    `router` is either a scalar `Router` (its `select` receives the live
+    latency history and utilization vector) or a plain callable
+    ``(text, latency_hist, server_load) -> server_idx`` for synthetic
+    policies (round-robin, least-loaded) in tests.
+    """
+
+    def __init__(
+        self,
+        platform: NetMCPPlatform,
+        router: Union[Router, RouteFn],
+        queue_cfg: QueueConfig = QueueConfig(),
+        *,
+        hedge_ms: Optional[float] = None,
+        retry_budget: int = 2,
+        deadline_ms: Optional[float] = None,
+        seed: int = 0,
+    ):
+        self.platform = platform
+        self.router = router
+        self.queues = [ServerQueue(queue_cfg) for _ in platform.servers]
+        self.hedge_ms = hedge_ms
+        self.retry_budget = retry_budget
+        self.deadline_ms = deadline_ms
+        self.seed = seed
+        self._heap: list = []
+        self._seq = 0
+        self._draws: np.ndarray = np.zeros((0,))
+        self._draw_i = 0
+
+    # -- helpers -------------------------------------------------------------
+    def _tick(self, t_ms: float) -> int:
+        return int(np.clip(t_ms / 1000.0 / self.platform.dt_s,
+                           0, self.platform.n_steps - 1))
+
+    def _push(self, t_ms: float, kind: int, payload) -> None:
+        heapq.heappush(self._heap, (t_ms, self._seq, kind, payload))
+        self._seq += 1
+
+    def _loads(self) -> np.ndarray:
+        return np.asarray([q.utilization for q in self.queues], np.float32)
+
+    def _next_draw(self) -> float:
+        d = float(self._draws[self._draw_i % self._draws.size])
+        self._draw_i += 1
+        return d
+
+    def _route(self, text: str, now_ms: float) -> int:
+        hist = self.platform.latency_window(self._tick(now_ms))
+        loads = self._loads()
+        if isinstance(self.router, Router):
+            return self.router.select(text, hist, loads).server_idx
+        return int(self.router(text, hist, loads))
+
+    # -- event handlers ------------------------------------------------------
+    def _dispatch(self, req: Request, now_ms: float, exclude: frozenset = frozenset()):
+        server = self._route(req.text, now_ms)
+        req.n_routes += 1
+        if server in exclude:
+            # hedge copies must land on a *different* station; fall back to
+            # the least-utilized non-excluded server (infrastructure-level
+            # placement, independent of the routing algorithm)
+            loads = self._loads()
+            order = np.argsort(loads, kind="stable")
+            server = next(
+                (int(s) for s in order if int(s) not in exclude), -1
+            )
+            if server < 0:      # every station excluded: nowhere to hedge
+                return
+        disp = _Dispatch(req, server, self._next_draw(), now_ms)
+        q = self.queues[server]
+        outcome = q.offer(disp, now_ms)
+        if outcome == "start":
+            req.live_copies += 1
+            self._start_service(disp, now_ms)
+        elif outcome == "queued":
+            req.live_copies += 1
+            if self.hedge_ms is not None and not req.hedged:
+                self._push(now_ms + self.hedge_ms, _HEDGE, req)
+        else:  # dropped — waiting room full
+            req.n_drops += 1
+            # overflow is an outage event: feed it forward so network-aware
+            # routers see the saturated station (the closed loop)
+            self.platform.record_observation(
+                server, self._tick(now_ms), L.OFFLINE_MS
+            )
+            if req.budget > 0:
+                req.budget -= 1
+                self._dispatch(req, now_ms, exclude)
+            elif req.live_copies == 0 and not req.done:
+                req.failed = True
+
+    def _start_service(self, disp: _Dispatch, now_ms: float) -> None:
+        q = self.queues[disp.server]
+        disp.service_ms = q.service_time(disp.draw_ms)
+        q.record_service(disp.service_ms)
+        disp.t_start_ms = now_ms
+        disp.started = True
+        self._push(now_ms + disp.service_ms, _FINISH, disp)
+
+    def _finish(self, disp: _Dispatch, now_ms: float) -> None:
+        q = self.queues[disp.server]
+        nxt = q.finish(now_ms)
+        if nxt is not None:
+            self._start_service(nxt, now_ms)
+        req = disp.req
+        req.live_copies -= 1
+        if req.done:
+            return                      # a hedge sibling already won
+        req.done = True
+        net_ms = self.platform.latency_at(disp.server, self._tick(now_ms))
+        req.t_start_ms = disp.t_start_ms
+        req.t_finish_ms = now_ms + net_ms
+        req.service_ms = disp.service_ms
+        req.net_ms = net_ms
+        req.server_idx = disp.server
+        # feed-forward: the *client-observed* latency, queueing included
+        self.platform.record_observation(
+            disp.server, self._tick(req.t_finish_ms),
+            req.t_finish_ms - req.t_arrival_ms,
+        )
+        # cancel queued siblings (in-service ones run to completion as
+        # wasted work, as real hedged requests do)
+        for oq in self.queues:
+            for item in list(oq.waiting):
+                if item.req is req:
+                    if oq.cancel_waiting(item):
+                        req.live_copies -= 1
+
+    def _hedge(self, req: Request, now_ms: float) -> None:
+        if req.done or req.failed or req.budget <= 0:
+            return
+        waiting = any(
+            item.req is req for q in self.queues for item in q.waiting
+        )
+        if not waiting:
+            return                      # already in service (or dropped out)
+        hosts = frozenset(
+            i for i, q in enumerate(self.queues)
+            for item in q.waiting if item.req is req
+        )
+        if len(hosts) >= len(self.queues):
+            return                      # no other station to hedge onto
+        req.budget -= 1
+        req.n_hedges += 1
+        req.hedged = True
+        self._dispatch(req, now_ms, hosts)
+
+    # -- driver --------------------------------------------------------------
+    def run(
+        self,
+        arrivals_s: np.ndarray,
+        texts: Sequence[str],
+    ) -> TrafficReport:
+        """Simulate one arrival stream; texts are cycled over the arrivals."""
+        arrivals_s = np.sort(np.asarray(arrivals_s, np.float64))
+        n = arrivals_s.size
+        # pre-sample every service draw from one jax stream (deterministic)
+        n_draws = max(n * (2 + self.retry_budget), 1)
+        self._draws = np.asarray(
+            jax.random.exponential(
+                jax.random.PRNGKey(self.seed), (n_draws,), dtype=np.float32
+            ),
+            np.float64,
+        ) * self.queues[0].cfg.base_service_ms
+        self._draw_i = 0
+
+        requests = [
+            Request(
+                rid=i, text=texts[i % len(texts)],
+                t_arrival_ms=1000.0 * t, budget=self.retry_budget,
+            )
+            for i, t in enumerate(arrivals_s)
+        ]
+        self._heap, self._seq = [], 0
+        for req in requests:
+            self._push(req.t_arrival_ms, _ARRIVAL, req)
+
+        while self._heap:
+            t_ms, _, kind, payload = heapq.heappop(self._heap)
+            if kind == _ARRIVAL:
+                self._dispatch(payload, t_ms)
+            elif kind == _FINISH:
+                self._finish(payload, t_ms)
+            else:
+                self._hedge(payload, t_ms)
+
+        return self._report(requests, arrivals_s)
+
+    def _report(self, requests: list, arrivals_s: np.ndarray) -> TrafficReport:
+        done = [r for r in requests if r.done]
+        lat = np.asarray([r.t_finish_ms - r.t_arrival_ms for r in done])
+        if self.deadline_ms is not None:
+            good = [r for r in done if r.t_finish_ms - r.t_arrival_ms <= self.deadline_ms]
+        else:
+            good = done
+        horizon_s = float(arrivals_s[-1]) if arrivals_s.size else 0.0
+        span_s = max(
+            horizon_s,
+            max((r.t_finish_ms for r in done), default=0.0) / 1000.0,
+            1e-9,
+        )
+        served = np.zeros(len(self.queues), np.int64)
+        for r in done:
+            served[r.server_idx] += 1
+        n_drops = int(sum(q.stats.dropped for q in self.queues))
+        # normalize every station's busy integral by the common sim end time
+        # (a queue's own clock stops at its last event, which would inflate
+        # utilization for servers that went idle early)
+        t_end_ms = max((q._last_t_ms for q in self.queues), default=0.0)
+        utils = [
+            q.stats.busy_ms / max(q.cfg.capacity * t_end_ms, 1e-9)
+            for q in self.queues
+        ]
+        return TrafficReport(
+            n_offered=len(requests),
+            n_completed=len(done),
+            n_failed=sum(r.failed for r in requests),
+            n_drop_events=n_drops,
+            n_hedges=sum(r.n_hedges for r in requests),
+            goodput_rps=len(good) / span_s,
+            p50_ms=float(np.percentile(lat, 50)) if lat.size else 0.0,
+            p99_ms=float(np.percentile(lat, 99)) if lat.size else 0.0,
+            mean_ms=float(lat.mean()) if lat.size else 0.0,
+            per_server_served=[int(s) for s in served],
+            max_share=float(served.max() / max(served.sum(), 1)),
+            mean_utilization=float(np.mean(utils)) if utils else 0.0,
+            requests=requests,
+        )

@@ -11,7 +11,9 @@ from repro.kernels import ops, ref
 SERVERS = dataset.build_server_pool(seed=0)
 QUERY_TEXTS = [q.text for q in dataset.build_query_dataset(n=64, seed=1)]
 ALL_SCENARIOS = list(platform.SCENARIOS)
-ALGOS = ["rag", "rerank_rag", "prag", "sonar"]
+# sonar_lb with no server_load supplied must collapse to sonar exactly —
+# including it here asserts the load term is a pure extension
+ALGOS = ["rag", "rerank_rag", "prag", "sonar", "sonar_lb"]
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,417 @@
+"""Traffic subsystem: arrival-process determinism, queue invariants
+(work conservation, M/M/1 sojourn, Little's law), load-aware routing
+parity across the three paths, hedging, and the herding regression."""
+import jax
+import numpy as np
+import pytest
+
+from repro.core import dataset, platform, routing
+from repro.core.agent import Agent
+from repro.core.batch_routing import make_engine
+from repro.core.routing import RoutingConfig
+from repro.kernels import ops, ref
+from repro.traffic import (
+    ARRIVAL_PROCESSES,
+    FleetTrafficSim,
+    QueueConfig,
+    diurnal_arrivals,
+    flash_crowd_arrivals,
+    ideal_platform,
+    merge_arrivals,
+    mmpp_arrivals,
+    poisson_arrivals,
+    replica_fleet,
+)
+
+SERVERS = dataset.build_server_pool(seed=0)
+QUERY_TEXTS = [q.text for q in dataset.build_query_dataset(n=64, seed=1)]
+
+
+# ---------------------------------------------------------------------------
+# Arrival processes
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", sorted(ARRIVAL_PROCESSES))
+def test_arrival_processes_seeded_deterministic(name):
+    gen = ARRIVAL_PROCESSES[name]
+    a = gen(jax.random.PRNGKey(3), 5.0, 200.0)
+    b = gen(jax.random.PRNGKey(3), 5.0, 200.0)
+    c = gen(jax.random.PRNGKey(4), 5.0, 200.0)
+    np.testing.assert_array_equal(a, b)
+    assert a.size > 0 and not (
+        a.size == c.size and np.array_equal(a, c)
+    ), "different keys must give different streams"
+    assert (np.diff(a) >= 0).all() and a[0] >= 0.0 and a[-1] < 200.0
+
+
+def test_poisson_rate_and_exponential_gaps():
+    arr = poisson_arrivals(jax.random.PRNGKey(0), 10.0, 2000.0)
+    assert arr.size == pytest.approx(20000, rel=0.05)
+    gaps = np.diff(arr)
+    # exponential: mean ~ 1/rate, CV ~ 1
+    assert gaps.mean() == pytest.approx(0.1, rel=0.05)
+    assert gaps.std() / gaps.mean() == pytest.approx(1.0, rel=0.1)
+
+
+def test_diurnal_peak_vs_trough():
+    period = 400.0
+    # phase 0: peak around t=period/4, trough around 3*period/4
+    arr = diurnal_arrivals(
+        jax.random.PRNGKey(1), 8.0, 40 * period, depth=0.8, period_s=period
+    )
+    phase = np.mod(arr, period) / period
+    peak = ((phase > 0.0) & (phase < 0.5)).sum()
+    trough = ((phase > 0.5) & (phase < 1.0)).sum()
+    assert peak > 1.5 * trough
+
+
+def test_mmpp_burstier_than_poisson():
+    key = jax.random.PRNGKey(2)
+    mmpp = mmpp_arrivals(key, 6.0, 4000.0, burst_factor=8.0)
+    pois = poisson_arrivals(key, 6.0, 4000.0)
+    assert mmpp.size == pytest.approx(pois.size, rel=0.25)
+
+    def dispersion(arr):  # index of dispersion of 10 s counts
+        counts = np.bincount((arr // 10.0).astype(int))
+        return counts.var() / counts.mean()
+
+    assert dispersion(pois) < 2.0          # Poisson: ~1
+    assert dispersion(mmpp) > 2.0 * dispersion(pois)
+
+
+def test_flash_crowd_spikes_then_decays():
+    arr = flash_crowd_arrivals(
+        jax.random.PRNGKey(5), 4.0, 300.0, spike_factor=10.0, spike_at_s=100.0,
+        decay_s=30.0,
+    )
+    before = ((arr > 40.0) & (arr < 100.0)).sum() / 60.0
+    spike = ((arr >= 100.0) & (arr < 130.0)).sum() / 30.0
+    late = (arr >= 250.0).sum() / 50.0
+    assert spike > 3.0 * before            # the crowd arrives
+    assert late < 2.0 * before             # and decays away
+
+
+def test_merge_arrivals_superimposes():
+    a = poisson_arrivals(jax.random.PRNGKey(0), 3.0, 100.0)
+    b = poisson_arrivals(jax.random.PRNGKey(1), 3.0, 100.0)
+    m = merge_arrivals(a, b)
+    assert m.size == a.size + b.size and (np.diff(m) >= 0).all()
+
+
+# ---------------------------------------------------------------------------
+# Queue invariants (trivial routing: pure queueing dynamics)
+# ---------------------------------------------------------------------------
+
+def _single_server_sim(capacity=1, queue_limit=10_000, service_ms=200.0,
+                       inflation=0.0, seed=0):
+    servers = replica_fleet(1)
+    plat = ideal_platform(servers, seed=0, horizon_s=4000.0)
+    return FleetTrafficSim(
+        plat, lambda text, hist, load: 0,
+        QueueConfig(capacity=capacity, queue_limit=queue_limit,
+                    base_service_ms=service_ms, inflation=inflation),
+        retry_budget=0, seed=seed,
+    )
+
+
+def test_simulator_deterministic_and_conserves_requests():
+    arr = poisson_arrivals(jax.random.PRNGKey(0), 6.0, 60.0)
+    reports = []
+    for _ in range(2):
+        servers = replica_fleet(4)
+        plat = ideal_platform(servers, seed=0)
+        router = routing.make_router(
+            "sonar_lb", servers, RoutingConfig(gamma=0.35, top_s=4, top_k=4)
+        )
+        sim = FleetTrafficSim(
+            plat, router, QueueConfig(capacity=2, queue_limit=8),
+            retry_budget=2, seed=1,
+        )
+        reports.append(sim.run(arr, QUERY_TEXTS[:4]))
+    r1, r2 = reports
+    assert r1.per_server_served == r2.per_server_served
+    assert r1.goodput_rps == r2.goodput_rps and r1.p99_ms == r2.p99_ms
+    assert r1.n_completed + r1.n_failed == r1.n_offered
+
+
+def test_work_conservation_and_capacity():
+    """No request waits while a slot is free; occupancy never exceeds c."""
+    sim = _single_server_sim(capacity=3, service_ms=250.0)
+    arr = poisson_arrivals(jax.random.PRNGKey(7), 9.0, 120.0)
+    rep = sim.run(arr, ["q"])
+    done = [r for r in rep.requests if r.done]
+    assert len(done) == rep.n_offered       # unbounded queue: all complete
+    starts = np.asarray([r.t_start_ms for r in done])
+    ends = starts + np.asarray([r.service_ms for r in done])
+    arrivals = np.asarray([r.t_arrival_ms for r in done])
+
+    def occupancy(t):
+        return int(((starts <= t) & (ends > t)).sum())
+
+    for r in done:
+        assert occupancy(r.t_start_ms - 1e-6) <= 3
+        if r.t_start_ms > r.t_arrival_ms + 1e-9:   # it waited...
+            assert occupancy(r.t_start_ms - 1e-6) == 3  # ...only at capacity
+    # busy-time integral == sum of service durations (everything drained)
+    q = sim.queues[0]
+    assert q.stats.busy_ms == pytest.approx(q.stats.service_ms_sum, rel=1e-9)
+    _ = arrivals
+
+
+def test_mm1_sojourn_matches_theory():
+    """M/M/1 at rho=0.6: mean sojourn = 1/(mu - lambda) = 500 ms."""
+    sim = _single_server_sim(capacity=1, service_ms=200.0)   # mu = 5/s
+    arr = poisson_arrivals(jax.random.PRNGKey(11), 3.0, 1500.0)  # lambda = 3/s
+    rep = sim.run(arr, ["q"])
+    done = [r for r in rep.requests if r.done]
+    sojourn = np.asarray(
+        [(r.t_start_ms + r.service_ms) - r.t_arrival_ms for r in done]
+    )
+    assert sojourn.mean() == pytest.approx(500.0, rel=0.2)
+
+
+def test_littles_law_on_long_poisson_run():
+    """N_bar = lambda_eff * W_bar, with N_bar measured by time sampling."""
+    sim = _single_server_sim(capacity=2, service_ms=300.0)
+    arr = poisson_arrivals(jax.random.PRNGKey(13), 4.0, 1000.0)  # rho = 0.6
+    rep = sim.run(arr, ["q"])
+    done = [r for r in rep.requests if r.done]
+    arrivals = np.asarray([r.t_arrival_ms for r in done])
+    departs = np.asarray([r.t_start_ms + r.service_ms for r in done])
+    T = departs.max()
+    grid = np.arange(0.0, T, 1000.0)
+    n_bar = np.mean(
+        [(np.sum((arrivals <= t) & (departs > t))) for t in grid]
+    )
+    w_bar_s = np.mean(departs - arrivals) / 1000.0
+    lam_eff = len(done) / (T / 1000.0)
+    assert n_bar == pytest.approx(lam_eff * w_bar_s, rel=0.15)
+
+
+def test_service_time_inflation_under_load():
+    q = QueueConfig(capacity=4, inflation=2.0, base_service_ms=100.0)
+    from repro.traffic.queueing import ServerQueue
+
+    sq = ServerQueue(q)
+    assert sq.service_time(100.0) == pytest.approx(100.0)     # idle
+    sq.in_service = 4
+    assert sq.service_time(100.0) == pytest.approx(300.0)     # rho=1 -> 3x
+
+
+# ---------------------------------------------------------------------------
+# Load-aware routing parity (scalar == batched == kernel path)
+# ---------------------------------------------------------------------------
+
+def test_load_aware_parity_scalar_vs_batched():
+    plat = platform.NetMCPPlatform(SERVERS, scenario="hybrid", seed=1)
+    hist = plat.latency_window(3000)
+    rng = np.random.default_rng(0)
+    load = rng.random(len(SERVERS)).astype(np.float32) * 2.0
+    cfg = RoutingConfig(gamma=0.5)
+    router = routing.make_router("sonar_lb", SERVERS, cfg)
+    for use_kernels in (False, True):
+        engine = make_engine("sonar_lb", SERVERS, cfg, use_kernels=use_kernels)
+        dec = engine.route_texts(QUERY_TEXTS, hist, load)
+        for i, q in enumerate(QUERY_TEXTS):
+            d = router.select(q, hist, load)
+            assert (d.server_idx, d.tool_idx) == (
+                int(dec.server_idx[i]), int(dec.tool_idx[i])
+            ), f"kernels={use_kernels} query {i}"
+
+
+def test_load_term_changes_picks_and_off_means_sonar():
+    plat = platform.NetMCPPlatform(SERVERS, scenario="hybrid", seed=1)
+    hist = plat.latency_window(3000)
+    e_sonar = make_engine("sonar", SERVERS)
+    e_lb = make_engine("sonar_lb", SERVERS)
+    base = e_sonar.route_texts(QUERY_TEXTS, hist)
+    off = e_lb.route_texts(QUERY_TEXTS, hist)        # no load vector
+    np.testing.assert_array_equal(base.server_idx, off.server_idx)
+    np.testing.assert_array_equal(base.tool_idx, off.tool_idx)
+    # saturate every currently-picked server: picks must move
+    load = np.zeros(len(SERVERS), np.float32)
+    load[np.unique(np.asarray(base.server_idx))] = 4.0
+    on = e_lb.route_texts(QUERY_TEXTS, hist, load)
+    assert (np.asarray(on.server_idx) != np.asarray(base.server_idx)).any()
+
+
+def test_fused_select_kernel_load_term_matches_oracle():
+    rng = np.random.default_rng(42)
+    n_q, n_t = 24, 120
+    sel = rng.standard_normal((n_q, n_t)).astype(np.float32) * 3
+    sel = np.where(rng.random((n_q, n_t)) < 0.4, sel, -np.inf)
+    qos = rng.random((n_t,)).astype(np.float32) * 2 - 1
+    load = rng.random((n_q, n_t)).astype(np.float32) * 3
+    import jax.numpy as jnp
+
+    got = ops.fused_select(
+        jnp.asarray(sel), jnp.asarray(sel), jnp.asarray(qos), jnp.asarray(load),
+        k=8, alpha=0.4, beta=0.4, gamma=0.3,
+    )
+    want = ref.fused_select_ref(
+        jnp.asarray(sel), jnp.asarray(sel), jnp.asarray(qos), jnp.asarray(load),
+        k=8, alpha=0.4, beta=0.4, gamma=0.3,
+    )
+    assert (np.asarray(got[0]) == np.asarray(want[0])).all()
+    for g, w in zip(got[1:], want[1:]):
+        np.testing.assert_allclose(np.asarray(g), np.asarray(w),
+                                   rtol=1e-5, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# Hedging + retry budget
+# ---------------------------------------------------------------------------
+
+def test_agent_hedging_races_runner_up():
+    plat = platform.NetMCPPlatform(SERVERS, scenario="high_latency", seed=3)
+    router = routing.make_router("prag", SERVERS)
+    queries = dataset.build_query_dataset(n=10, seed=0)
+    base = Agent(plat, router).run_task(queries[0], 1000)
+    plat2 = platform.NetMCPPlatform(SERVERS, scenario="high_latency", seed=3)
+    router2 = routing.make_router("prag", SERVERS)
+    hedged = Agent(
+        plat2, router2, hedge_ms=100.0, retry_budget=2
+    ).run_task(queries[0], 1000)
+    assert hedged.n_calls > base.n_calls          # the duplicate was fired
+    assert hedged.completion_ms <= base.completion_ms
+
+
+def test_agent_defaults_unchanged_without_hedging():
+    plat = platform.NetMCPPlatform(SERVERS, scenario="hybrid", seed=1)
+    router = routing.make_router("sonar", SERVERS)
+    queries = dataset.build_query_dataset(n=8, seed=0)
+    a = Agent(plat, router).run_benchmark(queries, ticks_per_query=60)
+    plat2 = platform.NetMCPPlatform(SERVERS, scenario="hybrid", seed=1)
+    router2 = routing.make_router("sonar", SERVERS)
+    b = Agent(plat2, router2, hedge_ms=None, retry_budget=None).run_benchmark(
+        queries, ticks_per_query=60
+    )
+    for x, y in zip(a, b):
+        assert x.completion_ms == y.completion_ms and x.n_calls == y.n_calls
+
+
+def test_simulator_hedging_rescues_herded_tail():
+    """Hedging pays off exactly where requests sit behind a herded queue
+    while other replicas idle — i.e. under a load-blind router: the
+    duplicate escapes the hot server and cuts the tail (at the cost of a
+    little wasted work, as real tail-at-scale hedging does)."""
+    servers = replica_fleet(4)
+    cfg = RoutingConfig(top_s=4, top_k=4)
+    arr = poisson_arrivals(jax.random.PRNGKey(3), 6.0, 45.0)
+    reports = {}
+    for hedge in (None, 600.0):
+        plat = ideal_platform(servers, seed=0)
+        router = routing.make_router("sonar", servers, cfg)
+        sim = FleetTrafficSim(
+            plat, router,
+            QueueConfig(capacity=2, queue_limit=8, base_service_ms=500.0,
+                        inflation=1.0),
+            hedge_ms=hedge, retry_budget=2, seed=1,
+        )
+        reports[hedge] = sim.run(arr, QUERY_TEXTS[:4])
+    hedged, plain = reports[600.0], reports[None]
+    assert hedged.n_hedges > 0
+    assert hedged.p99_ms < plain.p99_ms
+    assert hedged.n_completed >= 0.9 * plain.n_completed
+
+
+def test_hedging_on_single_replica_fleet_is_a_noop():
+    """Nowhere to hedge to: the simulator must skip the hedge (and not
+    crash) when every station already hosts a copy."""
+    servers = replica_fleet(1)
+    plat = ideal_platform(servers, seed=0)
+    sim = FleetTrafficSim(
+        plat, lambda text, hist, load: 0,
+        QueueConfig(capacity=1, queue_limit=50, base_service_ms=400.0),
+        hedge_ms=100.0, retry_budget=2, seed=0,
+    )
+    arr = poisson_arrivals(jax.random.PRNGKey(0), 4.0, 30.0)
+    rep = sim.run(arr, ["q"])
+    assert rep.n_hedges == 0
+    assert rep.n_completed + rep.n_failed == rep.n_offered
+
+
+# ---------------------------------------------------------------------------
+# Herding regression: load-blind collapse vs SONAR-LB spreading
+# ---------------------------------------------------------------------------
+
+def _burst_report(algo, n_simultaneous=12, n_replicas=6):
+    servers = replica_fleet(n_replicas)
+    plat = ideal_platform(servers, seed=0)
+    cfg = RoutingConfig(gamma=0.35, top_s=n_replicas, top_k=n_replicas)
+    router = routing.make_router(algo, servers, cfg)
+    sim = FleetTrafficSim(
+        plat, router,
+        QueueConfig(capacity=2, queue_limit=n_simultaneous, base_service_ms=400.0),
+        retry_budget=0, seed=1,
+    )
+    return sim.run(np.zeros(n_simultaneous), QUERY_TEXTS[:1])
+
+
+def test_simultaneous_burst_herds_without_load_term():
+    """The signature failure: an instantaneous burst of identical requests
+    all lands on the single top-scored replica when routing is load-blind
+    (no completions yet, so the feed-forward loop cannot help), while
+    SONAR-LB spreads it across the fleet."""
+    blind = _burst_report("sonar")
+    lb = _burst_report("sonar_lb")
+    assert blind.max_share == 1.0              # total herding
+    assert lb.max_share <= 0.5                 # spread across the fleet
+    assert lb.p99_ms < blind.p99_ms
+
+
+def test_offered_load_past_saturation_regression():
+    """Sustained overload of one server's capacity: SONAR-LB strictly wins
+    goodput and p99 and fails less (tiny version of benchmarks/offered_load)."""
+    servers = replica_fleet(4)
+    cfg = RoutingConfig(gamma=0.35, top_s=4, top_k=4)
+    arr = poisson_arrivals(jax.random.PRNGKey(0), 8.0, 45.0)  # sat = 4 rps
+    reports = {}
+    for algo in ("sonar", "sonar_lb"):
+        plat = ideal_platform(servers, seed=0)
+        router = routing.make_router(algo, servers, cfg)
+        sim = FleetTrafficSim(
+            plat, router,
+            QueueConfig(capacity=2, queue_limit=8, base_service_ms=500.0,
+                        inflation=1.0),
+            retry_budget=2, seed=0,
+        )
+        reports[algo] = sim.run(arr, QUERY_TEXTS[:4])
+    blind, lb = reports["sonar"], reports["sonar_lb"]
+    assert lb.goodput_rps > blind.goodput_rps
+    assert lb.p99_ms < blind.p99_ms
+    assert lb.n_failed <= blind.n_failed
+    assert lb.n_drop_events < blind.n_drop_events
+
+
+# ---------------------------------------------------------------------------
+# Gateway load-awareness
+# ---------------------------------------------------------------------------
+
+def test_gateway_load_aware_batch_spreads():
+    from repro.serving.gateway import SonarGateway, replica_pool
+
+    archs = [("qwen2-7b", "dense")] * 8
+    texts = ["generate a chat completion response"] * 32
+    blind = SonarGateway(replica_pool(archs), use_kernels=True, algo="sonar")
+    lb = SonarGateway(
+        replica_pool(archs), use_kernels=True, algo="sonar_lb",
+        slots_per_replica=4, lb_chunk=8,
+    )
+    picks_blind = {r.replica_idx for r in blind.route_batch(texts)}
+    picks_lb = {r.replica_idx for r in lb.route_batch(texts)}
+    assert len(picks_blind) == 1               # herds on one replica
+    assert len(picks_lb) >= 3                  # spreads chunk by chunk
+    assert np.all(lb.in_flight == 0.0)         # accounting drains
+
+
+def test_gateway_begin_finish_accounting():
+    from repro.serving.gateway import SonarGateway, replica_pool
+
+    archs = [("qwen2-7b", "dense")] * 4
+    gw = SonarGateway(replica_pool(archs), algo="sonar_lb", slots_per_replica=2)
+    picks = [gw.begin("generate text").replica_idx for _ in range(4)]
+    assert len(set(picks)) >= 2                # in-flight pushes traffic away
+    for idx in picks:
+        gw.finish(idx, 25.0)
+    assert np.all(gw.in_flight == 0.0)
