@@ -1,0 +1,216 @@
+"""Chaos-recovery sweep: failover-aware SONAR-FT vs SONAR / SONAR-LB /
+semantic-only PRAG under injected faults.
+
+For each fault intensity the same episode workload (websearch queries
+spread uniformly over the horizon, scalar call-chat agent with retries) is
+driven against an identical-replica fleet with the `standard_fault_mix`
+injected: a correlated partition of the semantically top-ranked group
+*under a telemetry blackout* (monitoring keeps replaying healthy samples
+and feed-forward failure recordings are dropped), crash/restart churn, a
+flapping server, and a gradually-degrading server hidden behind its own
+blackout.
+
+Telemetry-trusting routers (SONAR, SONAR-LB) keep re-picking the stale-
+healthy-looking dead group every retry and burn their turn budget; the
+semantic-only baseline never even sees failures.  SONAR-FT discounts the
+stale QoS toward neutral and masks servers whose calls failed, so episodes
+fail over inside one turn.  Reported per (algorithm, intensity):
+
+  ssr          task success rate (%)
+  failures     total failed tool calls across the workload
+  al_ms        mean latency of executed calls
+  recovery_s   degraded seconds: total width of workload time-bins whose
+               success rate sits below 95% from the first fault onset on
+               (0 when service never degrades)
+
+  PYTHONPATH=src:. python benchmarks/chaos_recovery.py            # full
+  PYTHONPATH=src:. python benchmarks/chaos_recovery.py --smoke    # CI
+  PYTHONPATH=src:. python benchmarks/chaos_recovery.py --json out.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+import numpy as np
+
+from repro.chaos import build_schedule, standard_fault_mix
+from repro.core import latency as L
+from repro.core.agent import Agent, spread_start_ticks
+from repro.core.dataset import Query
+from repro.core.platform import NetMCPPlatform
+from repro.core.routing import RoutingConfig, make_router
+from repro.traffic import replica_fleet
+
+QUERY_TEXTS = [
+    "search the web for current news about the economy",
+    "look up live information online about the election",
+    "find real-time facts on the internet about the weather",
+    "web search for fresh articles about machine learning",
+]
+ALGOS = ("prag", "sonar", "sonar_lb", "sonar_ft")
+
+
+def _queries(n: int) -> list:
+    return [
+        Query(text=QUERY_TEXTS[i % len(QUERY_TEXTS)], intent="websearch",
+              answer="ok")
+        for i in range(n)
+    ]
+
+
+def _recovery_s(
+    records: list, ticks: np.ndarray, dt_s: float, fault_start_s: float,
+    horizon_s: float, n_bins: int = 24,
+) -> float:
+    """Degraded service time: sum of bin widths (seconds) with success rate
+    < 95% among bins at/after the first fault onset."""
+    starts_s = ticks * dt_s
+    edges = np.linspace(0.0, horizon_s, n_bins + 1)
+    degraded = 0.0
+    for lo, hi in zip(edges[:-1], edges[1:]):
+        if hi <= fault_start_s:
+            continue
+        in_bin = (starts_s >= lo) & (starts_s < hi)
+        if not in_bin.any():
+            continue
+        ok = np.mean([records[i].success for i in np.flatnonzero(in_bin)])
+        if ok < 0.95:
+            degraded += hi - lo
+    return float(degraded)
+
+
+def run_point(
+    algo: str,
+    intensity: float,
+    *,
+    n_replicas: int,
+    horizon_s: float,
+    n_queries: int,
+    max_turns: int,
+    seed: int,
+) -> dict:
+    servers = replica_fleet(n_replicas)
+    dt_s = 1.0
+    n_steps = L.trace_horizon_steps(horizon_s, dt_s)
+    faults = standard_fault_mix(intensity, n_replicas, horizon_s)
+    chaos = (
+        build_schedule(faults, n_replicas, n_steps, dt_s, seed=seed)
+        if faults else None
+    )
+    plat = NetMCPPlatform(
+        servers,
+        profiles=[L.ideal_profile() for _ in servers],
+        scenario="ideal", seed=seed, horizon_s=horizon_s, dt_s=dt_s,
+        chaos=chaos,
+    )
+    cfg = RoutingConfig(top_s=n_replicas, top_k=n_replicas)
+    agent = Agent(plat, make_router(algo, servers, cfg), max_turns=max_turns)
+    queries = _queries(n_queries)
+    ticks_per_query = max((plat.n_steps - max_turns - 1) // n_queries, 1)
+    # one tick assignment drives both the episodes and the recovery-time
+    # binning, so the metric can never silently diverge from the workload
+    ticks = spread_start_ticks(
+        n_queries, plat.n_steps, max_turns, agent.ticks_per_turn,
+        ticks_per_query=ticks_per_query,
+    )
+    records = [agent.run_task(q, int(t)) for q, t in zip(queries, ticks)]
+    lat = [x for r in records for x in r.call_latencies_ms]
+    # recovery binning starts at the earliest fault onset in the mix
+    fault_start_s = (
+        min(f.start_s for f in faults) if faults else horizon_s
+    )
+    return {
+        "algo": algo,
+        "intensity": intensity,
+        "n_queries": n_queries,
+        "ssr": 100.0 * float(np.mean([r.success for r in records])),
+        "failures": int(sum(r.n_failures for r in records)),
+        "al_ms": float(np.mean(lat)) if lat else 0.0,
+        "recovery_s": _recovery_s(
+            records, ticks, dt_s, fault_start_s, horizon_s
+        ),
+    }
+
+
+def main(
+    print_fn=print,
+    *,
+    smoke: bool = False,
+    seed: int = 0,
+) -> dict:
+    if smoke:
+        n_replicas, horizon_s, n_queries, max_turns = 6, 600.0, 60, 4
+        intensities = [0.0, 0.5, 1.0]
+    else:
+        n_replicas, horizon_s, n_queries, max_turns = 6, 900.0, 160, 4
+        intensities = [0.0, 0.3, 0.6, 1.0]
+    results: dict = {
+        "n_replicas": n_replicas,
+        "horizon_s": horizon_s,
+        "n_queries": n_queries,
+        "intensities": intensities,
+        "points": [],
+    }
+    for intensity in intensities:
+        for algo in ALGOS:
+            p = run_point(
+                algo, intensity,
+                n_replicas=n_replicas, horizon_s=horizon_s,
+                n_queries=n_queries, max_turns=max_turns, seed=seed,
+            )
+            results["points"].append(p)
+            print_fn(
+                f"chaos_recovery,x={intensity:.1f},algo={algo} "
+                f"ssr={p['ssr']:.1f}% failures={p['failures']} "
+                f"al={p['al_ms']:.0f}ms recovery={p['recovery_s']:.0f}s"
+            )
+    return results
+
+
+def check(results: dict) -> None:
+    """Acceptance gates: SONAR-FT >= SONAR and >= SONAR-LB on success rate
+    and failure count at EVERY sweep point (the zero-fault point holds by
+    byte-identity of the decisions), strictly better at the highest
+    intensity, and it beats the semantic-only baseline too."""
+    by_x: dict = {}
+    for p in results["points"]:
+        by_x.setdefault(p["intensity"], {})[p["algo"]] = p
+    for x, algos in sorted(by_x.items()):
+        ft = algos["sonar_ft"]
+        for base in ("sonar", "sonar_lb", "prag"):
+            b = algos[base]
+            assert ft["ssr"] >= b["ssr"], (
+                f"x={x}: SONAR-FT ssr {ft['ssr']} < {base} {b['ssr']}"
+            )
+            assert ft["failures"] <= b["failures"], (
+                f"x={x}: SONAR-FT failures {ft['failures']} > "
+                f"{base} {b['failures']}"
+            )
+    x_max = max(by_x)
+    ft = by_x[x_max]["sonar_ft"]
+    for base in ("sonar", "sonar_lb", "prag"):
+        b = by_x[x_max][base]
+        assert ft["ssr"] > b["ssr"], (
+            f"x={x_max}: SONAR-FT must strictly beat {base} on ssr"
+        )
+        assert ft["failures"] < b["failures"], (
+            f"x={x_max}: SONAR-FT must strictly beat {base} on failures"
+        )
+        assert ft["recovery_s"] <= b["recovery_s"], (
+            f"x={x_max}: SONAR-FT recovery {ft['recovery_s']}s > "
+            f"{base} {b['recovery_s']}s"
+        )
+
+
+if __name__ == "__main__":
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--smoke", action="store_true",
+                        help="small fleet / short horizon for CI")
+    parser.add_argument("--json", metavar="PATH", default=None)
+    args = parser.parse_args()
+    res = main(smoke=args.smoke)
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(res, f, indent=2)
+    check(res)

@@ -55,6 +55,12 @@ def _install_hypothesis_fallback() -> None:
         elements = list(elements)
         return _Strategy(lambda rng: elements[int(rng.integers(len(elements)))])
 
+    def booleans():
+        return _Strategy(lambda rng: bool(rng.integers(2)))
+
+    def just(value):
+        return _Strategy(lambda rng: value)
+
     def lists(elements, min_size=0, max_size=10):
         def draw(rng):
             n = int(rng.integers(min_size, max_size + 1))
@@ -123,6 +129,7 @@ def _install_hypothesis_fallback() -> None:
     for name, obj in [
         ("integers", integers), ("floats", floats), ("sampled_from", sampled_from),
         ("lists", lists), ("text", text), ("tuples", tuples),
+        ("booleans", booleans), ("just", just),
     ]:
         setattr(st_mod, name, obj)
     extra_mod = types.ModuleType("hypothesis.extra")
@@ -146,3 +153,19 @@ try:
     import hypothesis  # noqa: F401
 except ImportError:  # pragma: no cover - depends on the environment
     _install_hypothesis_fallback()
+else:
+    # Fixed-seed CI profile: derandomized (the same example sequence every
+    # run, so property-suite failures bisect cleanly), no deadline (CPU
+    # interpret-mode Pallas runs are slow), bounded example count.
+    # Activated by HYPOTHESIS_PROFILE=ci in the CI workflow.
+    hypothesis.settings.register_profile(
+        "ci",
+        max_examples=25,
+        derandomize=True,
+        deadline=None,
+        database=None,
+        print_blob=False,
+    )
+    _profile = os.environ.get("HYPOTHESIS_PROFILE")
+    if _profile:
+        hypothesis.settings.load_profile(_profile)

@@ -1,0 +1,17 @@
+"""Chaos fault-injection subsystem: deterministic, jax-seeded fault models
+(crash/restart, gradual degradation, correlated partitions, flapping,
+telemetry blackouts) compiled into dense schedules that inject into both
+the static trace platform and the discrete-event traffic simulator."""
+from repro.chaos.faults import (  # noqa: F401
+    FAULT_KINDS,
+    CrashRestartFault,
+    DegradationFault,
+    FlappingFault,
+    PartitionFault,
+    TelemetryBlackoutFault,
+)
+from repro.chaos.schedule import (  # noqa: F401
+    ChaosSchedule,
+    build_schedule,
+    standard_fault_mix,
+)

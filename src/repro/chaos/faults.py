@@ -1,0 +1,200 @@
+"""Fault models for the chaos-injection subsystem.
+
+The paper's core claim is that semantic-only MCP routing is fragile under
+*server failures*, yet the seed repo only modelled the latency half of the
+story (five network states) — failures appeared solely as trace-level
+outage intervals.  This module provides first-class fault models, each a
+frozen spec compiled into deterministic per-(server, tick) masks by
+``repro.chaos.schedule.build_schedule``:
+
+  CrashRestartFault      — two-state semi-Markov crash/repair process with
+                           exponential MTTF/MTTR (the classic availability
+                           model); the server is hard-down while crashed.
+  DegradationFault       — gradual performance decay: the server's latency
+                           is multiplied by a factor that ramps linearly
+                           from 1 to ``max_factor`` over ``ramp_s`` (cache
+                           rot, memory leak, noisy neighbour), optionally
+                           restored at ``end_s``.
+  PartitionFault         — correlated regional partition: a whole server
+                           *group* goes down together for one interval
+                           (shared zone / upstream link failure).
+  FlappingFault          — rapid up/down oscillation (a crash-looping
+                           deploy): square wave with ``period_s`` and
+                           ``duty`` fraction spent down.
+  TelemetryBlackoutFault — monitoring outage: the *observed* history stops
+                           updating (frozen at the last fresh sample) while
+                           the server itself keeps running — and possibly
+                           keeps degrading.  Feed-forward writes during the
+                           blackout are dropped.
+
+All stochastic masks are jax-seeded (PRNGKey + fold_in per fault per
+server), so a fault schedule is exactly reproducible from ``seed`` the same
+way the network traces of ``core.latency`` are.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class CrashRestartFault:
+    """Exponential MTTF/MTTR crash-restart process on each listed server."""
+
+    servers: Tuple[int, ...]
+    mttf_s: float                   # mean time to failure (up-dwell)
+    mttr_s: float                   # mean time to repair (down-dwell)
+    start_s: float = 0.0            # no crashes before this time
+
+
+@dataclasses.dataclass(frozen=True)
+class DegradationFault:
+    """Latency multiplier ramping 1 -> max_factor over [start, start+ramp]."""
+
+    servers: Tuple[int, ...]
+    start_s: float
+    ramp_s: float
+    max_factor: float = 4.0
+    end_s: Optional[float] = None   # restored (factor 1) from here; None = never
+
+
+@dataclasses.dataclass(frozen=True)
+class PartitionFault:
+    """Correlated regional partition: the whole group is down together."""
+
+    servers: Tuple[int, ...]
+    start_s: float
+    duration_s: float
+
+
+@dataclasses.dataclass(frozen=True)
+class FlappingFault:
+    """Square-wave up/down oscillation (duty = fraction of a period down)."""
+
+    servers: Tuple[int, ...]
+    period_s: float
+    duty: float = 0.5
+    start_s: float = 0.0
+    end_s: Optional[float] = None
+
+
+@dataclasses.dataclass(frozen=True)
+class TelemetryBlackoutFault:
+    """Observed history freezes for the window; the server keeps running."""
+
+    servers: Tuple[int, ...]
+    start_s: float
+    duration_s: float
+
+
+FAULT_KINDS = (
+    CrashRestartFault,
+    DegradationFault,
+    PartitionFault,
+    FlappingFault,
+    TelemetryBlackoutFault,
+)
+
+
+# ---------------------------------------------------------------------------
+# Stochastic mask synthesis (jax-seeded, deterministic)
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("n_steps",))
+def _crash_restart_mask(
+    key: jax.Array,
+    mttf_s: jax.Array,
+    mttr_s: jax.Array,
+    start_step: jax.Array,
+    n_steps: int,
+    dt_s: float,
+) -> jax.Array:
+    """One server's crash/repair on-off process -> bool [n_steps] (True=down).
+
+    Up-dwell is geometric with per-step hazard 1-exp(-dt/MTTF) (the
+    discretized exponential); down-dwell is drawn exponential with mean
+    MTTR.  The stationary availability is MTTF/(MTTF+MTTR), matching the
+    continuous-time model as dt -> 0.
+    """
+    hazard = 1.0 - jnp.exp(-dt_s / jnp.maximum(mttf_s, 1e-6))
+    mean_repair_steps = jnp.maximum(mttr_s / dt_s, 1.0)
+
+    def step(remaining, inputs):
+        t_idx, key_t = inputs
+        k_enter, k_dur = jax.random.split(key_t)
+        can_fail = t_idx >= start_step
+        fail = (
+            (remaining <= 0.0)
+            & can_fail
+            & (jax.random.uniform(k_enter) < hazard)
+        )
+        dur = jnp.maximum(
+            jax.random.exponential(k_dur) * mean_repair_steps, 1.0
+        )
+        remaining = jnp.where(fail, dur, jnp.maximum(remaining - 1.0, 0.0))
+        return remaining, remaining > 0.0
+
+    keys = jax.random.split(key, n_steps)
+    steps = jnp.arange(n_steps, dtype=jnp.float32)
+    _, down = jax.lax.scan(step, jnp.float32(0.0), (steps, keys))
+    return down
+
+
+def crash_restart_masks(
+    key: jax.Array,
+    fault: CrashRestartFault,
+    n_steps: int,
+    dt_s: float,
+) -> np.ndarray:
+    """Independent crash processes for every server of the fault ->
+    bool [len(servers), n_steps]."""
+    keys = jax.random.split(key, len(fault.servers))
+    start_step = jnp.float32(fault.start_s / dt_s)
+    masks = jax.vmap(
+        lambda k: _crash_restart_mask(
+            k, jnp.float32(fault.mttf_s), jnp.float32(fault.mttr_s),
+            start_step, n_steps, dt_s,
+        )
+    )(keys)
+    return np.asarray(masks)
+
+
+# ---------------------------------------------------------------------------
+# Deterministic (clock-driven) masks
+# ---------------------------------------------------------------------------
+
+def window_mask(
+    n_steps: int, dt_s: float, start_s: float, end_s: Optional[float]
+) -> np.ndarray:
+    """bool [n_steps]: True inside [start_s, end_s)."""
+    t = np.arange(n_steps, dtype=np.float64) * dt_s
+    m = t >= start_s
+    if end_s is not None:
+        m &= t < end_s
+    return m
+
+
+def flapping_mask(fault: FlappingFault, n_steps: int, dt_s: float) -> np.ndarray:
+    """bool [n_steps]: down during the trailing `duty` fraction of each period."""
+    t = np.arange(n_steps, dtype=np.float64) * dt_s
+    active = window_mask(n_steps, dt_s, fault.start_s, fault.end_s)
+    phase = np.mod(t - fault.start_s, fault.period_s) / fault.period_s
+    duty = float(np.clip(fault.duty, 0.0, 1.0))
+    return active & (phase >= 1.0 - duty)
+
+
+def degradation_factor(
+    fault: DegradationFault, n_steps: int, dt_s: float
+) -> np.ndarray:
+    """f32 [n_steps] latency multiplier: 1 -> max_factor over the ramp."""
+    t = np.arange(n_steps, dtype=np.float64) * dt_s
+    ramp = np.clip((t - fault.start_s) / max(fault.ramp_s, dt_s), 0.0, 1.0)
+    factor = 1.0 + (fault.max_factor - 1.0) * ramp
+    if fault.end_s is not None:
+        factor = np.where(t >= fault.end_s, 1.0, factor)
+    return factor.astype(np.float32)

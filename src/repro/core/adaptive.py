@@ -58,9 +58,19 @@ class AdaptiveSonarRouter:
     def index(self):
         return self._router.index
 
-    def select(self, query: str, latency_hist: Optional[np.ndarray] = None) -> Decision:
+    def select(
+        self,
+        query: str,
+        latency_hist: Optional[np.ndarray] = None,
+        server_load: Optional[np.ndarray] = None,
+        telemetry_age_s: Optional[np.ndarray] = None,
+        failed_mask: Optional[np.ndarray] = None,
+    ) -> Decision:
         self._router.cfg = self.cfg
-        return self._router.select(query, latency_hist)
+        return self._router.select(
+            query, latency_hist, server_load,
+            telemetry_age_s=telemetry_age_s, failed_mask=failed_mask,
+        )
 
     # Feedback --------------------------------------------------------------
     def observe(self, latency_ms: float, online: bool):

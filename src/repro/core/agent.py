@@ -101,10 +101,22 @@ class Agent:
         success = False
         t = t_idx
         budget = self.retry_budget if self.retry_budget is not None else -1
+        # SONAR-FT: servers whose calls failed this episode are masked out
+        # of subsequent re-routes (the failover loop), and the router sees
+        # the platform's telemetry ages so stale histories are discounted.
+        uses_staleness = getattr(self.router, "uses_staleness", False)
+        uses_failover = getattr(self.router, "uses_failover", False)
+        failed: Optional[np.ndarray] = None
 
         for _turn in range(self.max_turns):
             hist = self.platform.latency_window(t)
-            decision = self.router.select(query.text, hist)
+            decision = self.router.select(
+                query.text, hist,
+                telemetry_age_s=(
+                    self.platform.telemetry_age_s(t) if uses_staleness else None
+                ),
+                failed_mask=failed,
+            )
             decisions.append(decision)
             sl_total += decision.select_latency_ms
             wall_ms += decision.select_latency_ms
@@ -130,6 +142,10 @@ class Agent:
                     self.router.observe(alt_result.latency_ms, alt_result.online)
                 if not alt_result.online:
                     n_fail += 1
+                    if uses_failover:      # the hedge server is known-dead
+                        if failed is None:
+                            failed = np.zeros(len(self.platform.servers), bool)
+                        failed[alt.server_idx] = True
                 hedged_ms = self.hedge_ms + alt_result.latency_ms
                 if alt_result.online and (
                     not result.online or hedged_ms < result.latency_ms
@@ -144,6 +160,10 @@ class Agent:
 
             if not result.online:
                 n_fail += 1       # server failure event (FR numerator)
+                if uses_failover:
+                    if failed is None:
+                        failed = np.zeros(len(self.platform.servers), bool)
+                    failed[decision.server_idx] = True
                 if budget == 0:
                     break         # retry budget exhausted: give up
                 budget -= 1 if budget > 0 else 0
@@ -250,12 +270,27 @@ class BatchAgent:
         sl_total = np.zeros(n, dtype=np.float64)
         per_turn: list = []          # (active_mask, decisions, latencies)
         latencies: list = [[] for _ in range(n)]
+        # SONAR-FT: per-query failed-server masks grown across turns, and
+        # per-query telemetry ages — mirroring the scalar Agent exactly.
+        uses_staleness = getattr(self.engine, "uses_staleness", False)
+        uses_failover = getattr(self.engine, "uses_failover", False)
+        failed = (
+            np.zeros((n, len(plat.servers)), bool) if uses_failover else None
+        )
 
         for _turn in range(self.max_turns):
             # route the FULL batch every turn (constant shapes -> one XLA
             # compile); results are applied only to still-active tasks.
             windows = plat.latency_windows(t_vec)
-            dec = self.engine.route(batch, windows)
+            dec = self.engine.route(
+                batch, windows,
+                telemetry_age_s=(
+                    plat.telemetry_ages_s(t_vec) if uses_staleness else None
+                ),
+                failed_mask=(
+                    failed if (failed is not None and failed.any()) else None
+                ),
+            )
 
             t_clip = np.clip(t_vec, 0, plat.n_steps - 1)
             lat = plat.traces[dec.server_idx, t_clip]
@@ -263,12 +298,18 @@ class BatchAgent:
             ok = online & (domains[dec.server_idx] == intents)
 
             # feed-forward recording for executed (active) calls only
-            plat.observed[dec.server_idx[active], t_clip[active]] = lat[active]
+            # (blackout-gated by the platform under chaos)
+            plat.record_observations(
+                dec.server_idx[active], t_clip[active], lat[active]
+            )
 
             sl_total[active] += sl_per_decision
             wall_ms[active] += sl_per_decision + lat[active] + self.chat_turn_ms
             n_fail[active & ~online] += 1
             success[active & online] = ok[active & online]
+            if failed is not None:
+                died = np.flatnonzero(active & ~online)
+                failed[died, dec.server_idx[died]] = True
             for i in np.flatnonzero(active):
                 latencies[i].append(float(lat[i]))
             per_turn.append((active.copy(), dec, lat))

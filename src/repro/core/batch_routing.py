@@ -43,7 +43,12 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.dataset import Server
-from repro.core.qos import QosParams, load_penalty, network_score
+from repro.core.qos import (
+    QosParams,
+    load_penalty,
+    network_score,
+    staleness_discount,
+)
 from repro.core.routing import (
     ALGORITHMS,
     BM25_STAGE_MS,
@@ -92,8 +97,8 @@ class BatchDecisions:
     jax.jit,
     static_argnames=(
         "top_s", "top_k", "alpha", "beta", "gamma", "load_knee", "load_sharp",
-        "temp", "use_network", "use_load", "rerank", "use_kernels",
-        "qos_params", "interpret",
+        "temp", "stale_half_life", "use_network", "use_load", "use_staleness",
+        "use_failover", "rerank", "use_kernels", "qos_params", "interpret",
     ),
 )
 def _route_pipeline(
@@ -105,6 +110,8 @@ def _route_pipeline(
     tool_server: jax.Array,       # [n_tools] i32
     latency_hist: Optional[jax.Array],  # [n_servers, T] or [n_q, n_servers, T]
     server_load: Optional[jax.Array],   # [n_servers] or [n_q, n_servers] rho
+    telemetry_age: Optional[jax.Array],  # [n_servers] or [n_q, n_servers] s
+    dead_mask: Optional[jax.Array],      # [n_servers] or [n_q, n_servers] 0/1
     *,
     top_s: int,
     top_k: int,
@@ -114,8 +121,11 @@ def _route_pipeline(
     load_knee: float,
     load_sharp: float,
     temp: float,
+    stale_half_life: float,
     use_network: bool,
     use_load: bool,
+    use_staleness: bool,
+    use_failover: bool,
     rerank: bool,
     use_kernels: bool,
     qos_params: QosParams,
@@ -129,6 +139,14 @@ def _route_pipeline(
         s_scores = ops.bm25_scores(q_server, w_server, interpret=interpret)
     else:
         s_scores = q_server @ w_server.T
+    # SONAR-FT: demote known-failed servers below every live one before
+    # the top-s, so failover escapes an all-dead candidate set (mirrors
+    # the scalar `_candidates` masking; NEG ties re-fill in index order)
+    if use_failover and dead_mask is not None:
+        dm_server = dead_mask.astype(jnp.float32)
+        if dm_server.ndim == 1:
+            dm_server = dm_server[None, :]
+        s_scores = jnp.where(dm_server > 0.0, NEG, s_scores)
     _, cand_servers = jax.lax.top_k(s_scores, min(top_s, n_servers))
     member = jnp.any(
         cand_servers[:, :, None] == jnp.arange(n_servers)[None, None, :], axis=1
@@ -161,13 +179,22 @@ def _route_pipeline(
             else:
                 n_server = network_score(flat, qos_params)
             n_server = n_server.reshape(n_q, n_servers)
-            tool_qos = jnp.take(n_server, tool_server, axis=1)  # [n_q, n_tools]
         else:
             if use_kernels:
                 n_server = ops.qos_scores(latency_hist, qos_params,
                                           interpret=interpret)
             else:
                 n_server = network_score(latency_hist, qos_params)
+        # SONAR-FT staleness discount: elementwise per-server multiply
+        # commutes with the per-tool gather below, so this matches the
+        # scalar router's per-candidate discount bit-for-bit.
+        if use_staleness and telemetry_age is not None:
+            n_server = n_server * staleness_discount(
+                telemetry_age, stale_half_life
+            )
+        if n_server.ndim == 2:
+            tool_qos = jnp.take(n_server, tool_server, axis=1)  # [n_q, n_tools]
+        else:
             tool_qos = n_server[tool_server]                # [n_tools]
         eff_alpha, eff_beta = alpha, beta
     else:
@@ -187,16 +214,26 @@ def _route_pipeline(
         tool_load = jnp.zeros((n_tools,), jnp.float32)
         eff_gamma = 0.0
 
+    # -- SONAR-FT failed-server mask, broadcast to the host server's tools --
+    if use_failover and dead_mask is not None:
+        dm = dead_mask.astype(jnp.float32)
+        if dm.ndim == 2:                                    # [n_q, n_servers]
+            tool_dead = jnp.take(dm, tool_server, axis=1)   # [n_q, n_tools]
+        else:
+            tool_dead = dm[tool_server]                     # [n_tools]
+    else:
+        tool_dead = None
+
     # -- fused candidate top-k + Eq. 5 softmax + Eq. 8 fusion + argmax --
     if use_kernels:
         tool_idx, c, n, s = ops.fused_select(
-            sel, val, tool_qos, tool_load,
+            sel, val, tool_qos, tool_load, tool_dead,
             k=top_k, alpha=eff_alpha, beta=eff_beta, gamma=eff_gamma,
             temp=temp, interpret=interpret,
         )
     else:
         tool_idx, c, n, s = kref.fused_select_ref(
-            sel, val, tool_qos, tool_load,
+            sel, val, tool_qos, tool_load, tool_dead,
             k=top_k, alpha=eff_alpha, beta=eff_beta, gamma=eff_gamma,
             temp=temp,
         )
@@ -232,6 +269,8 @@ class BatchRoutingEngine:
         self.uses_prediction = router_cls.uses_prediction
         self.uses_network = router_cls.uses_network
         self.uses_load = router_cls.uses_load
+        self.uses_staleness = router_cls.uses_staleness
+        self.uses_failover = router_cls.uses_failover
         self.rerank = router_cls.rerank
         self.use_kernels = use_kernels
         self.interpret = interpret
@@ -281,6 +320,10 @@ class BatchRoutingEngine:
                                                     # [n_q, n_servers, T]
         server_load: Optional[np.ndarray] = None,   # [n_servers] shared or
                                                     # [n_q, n_servers] rho
+        telemetry_age_s: Optional[np.ndarray] = None,  # [n_servers] shared or
+                                                       # [n_q, n_servers]
+        failed_mask: Optional[np.ndarray] = None,   # [n_servers] shared or
+                                                    # [n_q, n_servers] bool
     ) -> BatchDecisions:
         if batch.n == 0:
             z = np.zeros((0,), np.float32)
@@ -295,6 +338,12 @@ class BatchRoutingEngine:
         load = None
         if self.uses_load and server_load is not None and self.cfg.gamma != 0.0:
             load = jnp.asarray(server_load, jnp.float32)
+        age = None
+        if self.uses_staleness and telemetry_age_s is not None:
+            age = jnp.asarray(telemetry_age_s, jnp.float32)
+        dead = None
+        if self.uses_failover and failed_mask is not None:
+            dead = jnp.asarray(failed_mask, jnp.float32)
         server_idx, tool_idx, c, n, s = _route_pipeline(
             jnp.asarray(batch.q_server),
             jnp.asarray(batch.q_tool),
@@ -304,6 +353,8 @@ class BatchRoutingEngine:
             self._tool_server,
             lat,
             load,
+            age,
+            dead,
             top_s=self.cfg.top_s,
             top_k=self.cfg.top_k,
             alpha=self.cfg.alpha,
@@ -312,8 +363,11 @@ class BatchRoutingEngine:
             load_knee=self.cfg.load_knee,
             load_sharp=self.cfg.load_sharp,
             temp=self.cfg.expertise_temp,
+            stale_half_life=self.cfg.stale_half_life_s,
             use_network=self.uses_network and lat is not None,
             use_load=load is not None,
+            use_staleness=age is not None,
+            use_failover=dead is not None,
             rerank=self.rerank,
             use_kernels=self.use_kernels,
             qos_params=self.cfg.qos,
@@ -333,8 +387,60 @@ class BatchRoutingEngine:
         queries: Sequence[str],
         latency_hist: Optional[np.ndarray] = None,
         server_load: Optional[np.ndarray] = None,
+        telemetry_age_s: Optional[np.ndarray] = None,
+        failed_mask: Optional[np.ndarray] = None,
     ) -> BatchDecisions:
-        return self.route(self.encode(queries), latency_hist, server_load)
+        return self.route(
+            self.encode(queries), latency_hist, server_load,
+            telemetry_age_s, failed_mask,
+        )
+
+    def route_failover(
+        self,
+        batch: EncodedBatch,
+        latency_hist: Optional[np.ndarray] = None,
+        server_load: Optional[np.ndarray] = None,
+        telemetry_age_s: Optional[np.ndarray] = None,
+        alive: Optional[np.ndarray] = None,      # [n_servers] or
+                                                 # [n_q, n_servers] bool
+        failed_mask: Optional[np.ndarray] = None,
+        budget: Optional[int] = None,
+    ) -> tuple[BatchDecisions, np.ndarray]:
+        """Vectorized failover loop: route the batch, probe every pick
+        against `alive`, mask the dead picks per query and re-route — at
+        most `budget` extra rounds.  Queries whose masks did not grow
+        reproduce their decision exactly (identical inputs), so this is the
+        batched mirror of `Router.select_failover`.  Returns the final
+        decisions and the per-query failover counts."""
+        budget = self.cfg.failover_budget if budget is None else int(budget)
+        n = batch.n
+        n_servers = int(self._w_server.shape[0])
+        mask = np.zeros((n, n_servers), bool)
+        if failed_mask is not None:
+            mask |= np.asarray(failed_mask, bool)
+        up = None if alive is None else np.asarray(alive, bool)
+        failovers = np.zeros(n, np.int64)
+        dec = self.route(
+            batch, latency_hist, server_load, telemetry_age_s,
+            mask if mask.any() else None,
+        )
+        if up is None or n == 0:
+            return dec, failovers
+        for _ in range(budget):
+            picks = np.asarray(dec.server_idx)
+            if up.ndim == 2:
+                pick_up = up[np.arange(n), picks]
+            else:
+                pick_up = up[picks]
+            todo = ~pick_up & (failovers < budget)
+            if not todo.any():
+                break
+            mask[np.flatnonzero(todo), picks[todo]] = True
+            failovers[todo] += 1
+            dec = self.route(
+                batch, latency_hist, server_load, telemetry_age_s, mask
+            )
+        return dec, failovers
 
 
 def make_engine(

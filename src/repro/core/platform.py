@@ -11,7 +11,12 @@ The platform binds together
     and is exercised in tests with a fake transport),
   - feed-forward recording: every executed call appends its *actual* latency
     to the host server's observed history so future routing decisions see
-    up-to-date performance data (paper Sec. III-B, last paragraph).
+    up-to-date performance data (paper Sec. III-B, last paragraph),
+  - optional chaos injection (repro.chaos): a compiled fault schedule
+    overlays crashes/partitions/degradation on the ground-truth traces,
+    freezes the observed histories during telemetry blackouts (dropping
+    feed-forward writes), and exposes `is_alive` / `telemetry_age_s` to
+    failover-aware consumers.
 """
 from __future__ import annotations
 
@@ -200,6 +205,8 @@ class NetMCPPlatform:
         history_window: int = 64,
         live_transport: Optional[Callable] = None,
         profiles: Optional[list] = None,
+        chaos=None,   # Optional[repro.chaos.ChaosSchedule] (duck-typed to
+                      # avoid a core -> chaos import cycle)
     ):
         assert mode in ("sim", "live")
         self.servers = list(servers)
@@ -217,8 +224,21 @@ class NetMCPPlatform:
         # [n_servers, T] ms — ground-truth network state (memoized per
         # (seed, profiles, horizon); the returned array is read-only)
         self.traces = L.generate_traces_cached(seed, packed, n_steps, dt_s)
-        # Observed histories: monitoring prefix + feed-forward call records.
-        self.observed = self.traces.copy()
+        self.chaos = chaos
+        if chaos is not None:
+            assert chaos.down.shape == (len(self.servers), n_steps), (
+                f"chaos schedule shape {chaos.down.shape} != "
+                f"({len(self.servers)}, {n_steps})"
+            )
+            # fault-injected ground truth: downtime pins at the offline
+            # severity, degradation multiplies the base trace
+            self.traces = chaos.apply_to_traces(self.traces)
+            self.traces.setflags(write=False)
+            # monitoring view: frozen (forward-filled) during blackouts
+            self.observed = chaos.apply_staleness(self.traces)
+        else:
+            # Observed histories: monitoring prefix + feed-forward records.
+            self.observed = self.traces.copy()
         self.n_steps = n_steps
 
     # -- network-state queries ------------------------------------------------
@@ -253,6 +273,33 @@ class NetMCPPlatform:
         t_idx = int(np.clip(t_idx, 0, self.n_steps - 1))
         return float(self.traces[server_idx, t_idx])
 
+    # -- chaos-state queries -------------------------------------------------
+    def is_alive(self, server_idx: int, t_idx: int) -> bool:
+        """False while the server is crashed/partitioned (chaos `down`)."""
+        if self.chaos is None:
+            return True
+        return bool(self.chaos.alive_at(t_idx)[server_idx])
+
+    def alive_mask(self, t_idx: int) -> np.ndarray:
+        """bool [n_servers] — which servers answer at tick t."""
+        if self.chaos is None:
+            return np.ones(len(self.servers), bool)
+        return self.chaos.alive_at(t_idx)
+
+    def telemetry_age_s(self, t_idx: int) -> np.ndarray:
+        """f32 [n_servers] — seconds since each server's last fresh
+        telemetry sample (zero without chaos / outside blackouts).  This is
+        what SONAR-FT's staleness discount decays with."""
+        if self.chaos is None:
+            return np.zeros(len(self.servers), np.float32)
+        return self.chaos.age_s(t_idx)
+
+    def telemetry_ages_s(self, t_indices: np.ndarray) -> np.ndarray:
+        """f32 [n_q, n_servers] — vectorized `telemetry_age_s`."""
+        if self.chaos is None:
+            return np.zeros((len(t_indices), len(self.servers)), np.float32)
+        return self.chaos.ages_s(t_indices)
+
     def record_observation(
         self, server_idx: int, t_idx: int, latency_ms: float
     ) -> None:
@@ -260,8 +307,26 @@ class NetMCPPlatform:
         latency into the server's history so future routing decisions see
         it.  The traffic simulator records queueing-inclusive completion
         latencies (and offline events for queue overflows) through this,
-        which is what closes the load->latency loop."""
+        which is what closes the load->latency loop.  During a telemetry
+        blackout the write is dropped — the monitoring store is what is
+        down, so even the agent's own failure observations never land."""
         t_idx = int(np.clip(t_idx, 0, self.n_steps - 1))
+        if self.chaos is not None and self.chaos.stale_at(server_idx, t_idx):
+            return
+        self.observed[server_idx, t_idx] = latency_ms
+
+    def record_observations(
+        self, server_idx: np.ndarray, t_idx: np.ndarray, latency_ms: np.ndarray
+    ) -> None:
+        """Vectorized feed-forward recording with the same blackout gating
+        (used by the batched episode driver)."""
+        server_idx = np.asarray(server_idx, np.int64)
+        t_idx = np.clip(np.asarray(t_idx, np.int64), 0, self.n_steps - 1)
+        latency_ms = np.asarray(latency_ms)
+        if self.chaos is not None:
+            keep = ~self.chaos.stale[server_idx, t_idx]
+            server_idx, t_idx = server_idx[keep], t_idx[keep]
+            latency_ms = latency_ms[keep]
         self.observed[server_idx, t_idx] = latency_ms
 
     # -- execution --------------------------------------------------------------

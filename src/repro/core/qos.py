@@ -146,6 +146,28 @@ network_score_jit = jax.jit(network_score, static_argnums=(1,))
 
 
 # ---------------------------------------------------------------------------
+# Staleness discount (SONAR-FT extension of Eq. 7)
+# ---------------------------------------------------------------------------
+
+def staleness_discount(
+    age_s: jnp.ndarray, half_life_s: float = 180.0
+) -> jnp.ndarray:
+    """Confidence weight in (0, 1] for telemetry that is `age_s` seconds old.
+
+    SONAR-FT fuses N' = w * N with w = 0.5 ** (age / half_life): fresh
+    telemetry (age 0) gives w = 1.0 exactly, so the discounted score is
+    bit-identical to SONAR/SONAR-LB; a blacked-out server's frozen history
+    decays toward a *neutral* network opinion (N' -> 0) instead of being
+    trusted — a healthy-looking stale replica no longer outranks a
+    fresh-telemetry one.  Pure elementwise f32 math, shared verbatim by the
+    scalar router, the jit batched pipeline and the Pallas selection path,
+    preserving three-way argmax identity.
+    """
+    a = jnp.maximum(jnp.asarray(age_s, jnp.float32), 0.0)
+    return jnp.float32(0.5) ** (a / jnp.float32(half_life_s))
+
+
+# ---------------------------------------------------------------------------
 # Load penalty (SONAR-LB extension of Eq. 8)
 # ---------------------------------------------------------------------------
 

@@ -25,7 +25,13 @@ import numpy as np
 
 from repro.core import bm25
 from repro.core.dataset import Server, WEBSEARCH
-from repro.core.qos import DEFAULT_QOS, QosParams, load_penalty, network_score
+from repro.core.qos import (
+    DEFAULT_QOS,
+    QosParams,
+    load_penalty,
+    network_score,
+    staleness_discount,
+)
 
 # Simulated component latencies (ms) — calibrated to Fig. 7's SL axis.
 LLM_CALL_MS = 300.0          # one short LLM call (predict / translate)
@@ -130,6 +136,13 @@ class RoutingConfig:
     gamma: float = 0.35            # load weight
     load_knee: float = 0.75        # utilization where the penalty turns convex
     load_sharp: float = 4.0        # superlinear coefficient past the knee
+    # Failover-aware extension (SONAR-FT): the QoS term is discounted by
+    # telemetry age, N' = staleness_discount(age) * N (age 0 => exactly
+    # SONAR/SONAR-LB), and servers in a failed-mask are excluded from the
+    # final argmax.  `failover_budget` bounds the re-route loop of
+    # `select_failover` / `BatchRoutingEngine.route_failover`.
+    stale_half_life_s: float = 180.0
+    failover_budget: int = 2
     # Softmax temperature of Eq. 5 ("amplifies the relative differences
     # between expert tools and non-expert tools").
     expertise_temp: float = 1.0
@@ -168,6 +181,8 @@ class Router:
     uses_prediction = False
     uses_network = False
     uses_load = False
+    uses_staleness = False
+    uses_failover = False
     rerank = False
 
     def __init__(self, servers: Sequence[Server], cfg: RoutingConfig = RoutingConfig()):
@@ -182,9 +197,17 @@ class Router:
         # RAG baseline still pays one LLM call for translation (Sec. V-B).
         return query, LLM_CALL_MS
 
-    def _candidates(self, qtext: str):
-        """Stage 1 (Eq. 1-2) then stage 2 (Eq. 3-4) -> candidate tool ids."""
+    def _candidates(self, qtext: str, failed_mask: Optional[np.ndarray] = None):
+        """Stage 1 (Eq. 1-2) then stage 2 (Eq. 3-4) -> candidate tool ids.
+
+        Known-failed servers (SONAR-FT failover) are demoted below every
+        live server *before* the stage-1 top-s, so the failover loop can
+        escape a candidate set whose members are all dead — when fewer
+        than top_s servers remain alive, dead ones re-fill the tail in
+        index order and the post-fusion argmax mask still excludes them."""
         s_scores = self.index.server_scores(qtext)
+        if failed_mask is not None:
+            s_scores = np.where(np.asarray(failed_mask, bool), -np.inf, s_scores)
         top_s = min(self.cfg.top_s, len(s_scores))
         cand_servers = np.argsort(-s_scores, kind="stable")[:top_s]
         in_cand = np.isin(self.index.tool_server, cand_servers)
@@ -207,10 +230,16 @@ class Router:
         latency_hist: Optional[np.ndarray] = None,  # [n_servers, T] ms
         server_load: Optional[np.ndarray] = None,   # [n_servers] utilization
                                                     # rho = demand / capacity
+        telemetry_age_s: Optional[np.ndarray] = None,  # [n_servers] seconds
+                                                       # since last fresh sample
+        failed_mask: Optional[np.ndarray] = None,   # [n_servers] bool: True =
+                                                    # known-failed, exclude
     ) -> Decision:
         qtext, sl = self._preprocess(query)
-        cand_servers, cand_tools, scores = self._candidates(qtext)
+        fm = failed_mask if self.uses_failover else None
+        cand_servers, cand_tools, scores = self._candidates(qtext, fm)
         sl += 2 * BM25_STAGE_MS
+        cand_hosts = self.index.tool_server[cand_tools]
 
         if self.rerank:
             # LLM rerank: re-score candidates against the canonical intent
@@ -223,8 +252,13 @@ class Router:
         C = self._expertise(scores)
 
         if self.uses_network and latency_hist is not None:
-            hist = latency_hist[self.index.tool_server[cand_tools]]
+            hist = latency_hist[cand_hosts]
             N = np.asarray(network_score(hist, self.cfg.qos))
+            if self.uses_staleness and telemetry_age_s is not None:
+                age = np.asarray(telemetry_age_s, np.float32)[cand_hosts]
+                N = np.asarray(
+                    staleness_discount(age, self.cfg.stale_half_life_s)
+                ) * N
             S = self.cfg.alpha * C + self.cfg.beta * N
         else:
             N = np.zeros_like(C)
@@ -232,11 +266,18 @@ class Router:
 
         if self.uses_load and server_load is not None and self.cfg.gamma != 0.0:
             rho = np.asarray(server_load, np.float32)
-            rho = rho[self.index.tool_server[cand_tools]]
+            rho = rho[cand_hosts]
             U = np.asarray(
                 load_penalty(rho, self.cfg.load_knee, self.cfg.load_sharp)
             )
             S = S - self.cfg.gamma * U
+
+        if self.uses_failover and failed_mask is not None:
+            # known-failed servers are removed from the argmax but keep
+            # their softmax mass, so surviving candidates score identically
+            # to the unmasked run (argmax parity with the fused kernel)
+            dead = np.asarray(failed_mask, bool)[cand_hosts]
+            S = np.where(dead, -np.inf, S)
 
         best = int(np.argmax(S))
         tool_idx = int(cand_tools[best])
@@ -250,6 +291,41 @@ class Router:
             candidate_servers=[int(s) for s in cand_servers],
             candidate_tools=[int(t) for t in cand_tools],
         )
+
+    def select_failover(
+        self,
+        query: str,
+        latency_hist: Optional[np.ndarray] = None,
+        server_load: Optional[np.ndarray] = None,
+        telemetry_age_s: Optional[np.ndarray] = None,
+        alive: Optional[np.ndarray] = None,      # [n_servers] bool probe result
+        failed_mask: Optional[np.ndarray] = None,
+        budget: Optional[int] = None,
+    ) -> tuple[Decision, int]:
+        """Failover loop (SONAR-FT): route, probe the pick against `alive`,
+        and on a dead pick re-route with that server masked out — at most
+        `budget` (default cfg.failover_budget) extra routes.  Returns the
+        final decision and the number of failovers taken.  With every
+        server alive this is exactly one `select` call."""
+        budget = self.cfg.failover_budget if budget is None else int(budget)
+        n_servers = len(self.index.servers)
+        mask = (
+            np.zeros(n_servers, bool)
+            if failed_mask is None
+            else np.array(failed_mask, bool).copy()
+        )
+        up = None if alive is None else np.asarray(alive, bool)
+        failovers = 0
+        while True:
+            d = self.select(
+                query, latency_hist, server_load,
+                telemetry_age_s=telemetry_age_s,
+                failed_mask=mask if mask.any() else None,
+            )
+            if up is None or up[d.server_idx] or failovers >= budget:
+                return d, failovers
+            mask[d.server_idx] = True
+            failovers += 1
 
 
 class RagRouter(Router):
@@ -286,12 +362,38 @@ class SonarLBRouter(SonarRouter):
     uses_load = True
 
 
+class SonarFTRouter(SonarLBRouter):
+    """SONAR-FT: failover-aware SONAR-LB for faulty fleets.
+
+    Two pure extensions of the fusion (Eq. 8):
+
+      1. staleness-discounted QoS — N'(i) = w(age_i) * N(i) with
+         w = 0.5 ** (age / half_life): a server whose telemetry is frozen
+         (monitoring blackout) decays toward a neutral network opinion
+         instead of being trusted, so a healthy-*looking* dead replica
+         stops outranking fresh ones;
+      2. failed-server masking — candidates hosted on servers in
+         `failed_mask` score -inf in the final argmax, which is what the
+         `select_failover` retry loop (and the Agent / traffic simulator /
+         gateway failure paths) grow as calls fail.
+
+    With fresh telemetry (age 0 / None) and no failed mask this is exactly
+    SONAR-LB — and with no load vector, exactly SONAR — so every parity
+    guarantee carries through all three routing paths.
+    """
+
+    name = "SONAR-FT"
+    uses_staleness = True
+    uses_failover = True
+
+
 ALGORITHMS = {
     "rag": RagRouter,
     "rerank_rag": RerankRagRouter,
     "prag": PragRouter,
     "sonar": SonarRouter,
     "sonar_lb": SonarLBRouter,
+    "sonar_ft": SonarFTRouter,
 }
 
 

@@ -96,6 +96,8 @@ def fused_select(
     tool_qos: jax.Array,     # [n_q, n_tools] or [n_tools] per-tool N (Eq. 7)
     tool_load: Optional[jax.Array] = None,  # [n_q, n_tools] or [n_tools]
                                             # per-tool load penalty U
+    tool_dead: Optional[jax.Array] = None,  # [n_q, n_tools] or [n_tools]
+                                            # >0 = failed server (SONAR-FT)
     *,
     k: int,
     alpha: float,
@@ -106,7 +108,8 @@ def fused_select(
 ):
     """Winning (tool_idx, C, N, S) per query; exact match of the scalar
     candidate->softmax->fuse->argmax tail of `Router.select` (with the
-    SONAR-LB load term when tool_load/gamma are given)."""
+    SONAR-LB load term when tool_load/gamma are given, and the SONAR-FT
+    failed-server argmax exclusion when tool_dead is given)."""
     n_q, n_t = sel_scores.shape
     k = min(k, n_t)
     per_query_qos = tool_qos.ndim == 2
@@ -115,14 +118,16 @@ def fused_select(
     qos = jnp.asarray(tool_qos, jnp.float32)
     if not per_query_qos:
         qos = qos[None, :]
-    if tool_load is None:
-        load = jnp.zeros((1, n_t), jnp.float32)
-        per_query_load = False
-    else:
-        load = jnp.asarray(tool_load, jnp.float32)
-        per_query_load = load.ndim == 2
-        if not per_query_load:
-            load = load[None, :]
+
+    def _row_arg(x):
+        if x is None:
+            return jnp.zeros((1, n_t), jnp.float32), False
+        x = jnp.asarray(x, jnp.float32)
+        per_query = x.ndim == 2
+        return (x if per_query else x[None, :]), per_query
+
+    load, per_query_load = _row_arg(tool_load)
+    dead, per_query_dead = _row_arg(tool_dead)
 
     sel = _pad_to(_pad_to(sel, 1, 128, value=_sel.NEG), 0, _sel.QUERY_TILE,
                   value=_sel.NEG)
@@ -134,11 +139,15 @@ def fused_select(
     load = _pad_to(load, 1, 128)
     if per_query_load:
         load = _pad_to(load, 0, _sel.QUERY_TILE)
+    dead = _pad_to(dead, 1, 128)
+    if per_query_dead:
+        dead = _pad_to(dead, 0, _sel.QUERY_TILE)
     idx, c, n, s = _sel.fused_select_pallas(
-        sel, val, qos, load,
+        sel, val, qos, load, dead,
         k=k, alpha=float(alpha), beta=float(beta), gamma=float(gamma),
         temp=float(temp),
         per_query_qos=per_query_qos, per_query_load=per_query_load,
+        per_query_dead=per_query_dead,
         interpret=_auto_interpret(interpret),
     )
     return idx[:n_q], c[:n_q], n[:n_q], s[:n_q]

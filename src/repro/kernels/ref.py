@@ -19,6 +19,8 @@ def fused_select_ref(
     val_scores: jax.Array,   # [n_q, n_tools]
     tool_qos: jax.Array,     # [n_q, n_tools] or [n_tools]
     tool_load: jax.Array | None = None,  # [n_q, n_tools] or [n_tools] — U
+    tool_dead: jax.Array | None = None,  # [n_q, n_tools] or [n_tools] — >0
+                                         # excludes the tool from the argmax
     *,
     k: int,
     alpha: float,
@@ -28,7 +30,10 @@ def fused_select_ref(
 ):
     """Pure-jnp oracle for kernels/select_fuse: stage-2 top-k (ties -> lower
     index), Eq. 5 softmax over the valid candidates, Eq. 8 fusion (plus the
-    SONAR-LB load term -gamma*U), argmax."""
+    SONAR-LB load term -gamma*U and the SONAR-FT failed-server mask), argmax.
+    Dead candidates keep their softmax mass (they are excluded from the
+    *argmax* only), matching the scalar router's post-fusion masking; if
+    every candidate is masked/invalid the top-selection candidate wins."""
     sel = jnp.maximum(sel_scores.astype(jnp.float32), NEG)
     k = min(k, sel.shape[-1])
     top_v, top_i = jax.lax.top_k(sel, k)                     # [n_q, k]
@@ -48,6 +53,8 @@ def fused_select_ref(
     e = jnp.exp(z)
     c = e / jnp.maximum(e.sum(axis=-1, keepdims=True), 1e-30)
     s = jnp.where(valid, alpha * c + beta * n - gamma * u, NEG)
+    if tool_dead is not None:
+        s = jnp.where(_gather(tool_dead) > 0.0, NEG, s)
     best = jnp.argmax(s, axis=-1)                            # first max wins
     take = lambda a: jnp.take_along_axis(a, best[:, None], axis=-1)[:, 0]
     return take(top_i), take(c), take(n), take(s)

@@ -19,14 +19,20 @@ Inputs per query row
                     (candidates are *chosen* by `sel` but *valued* by `val`).
   qos  [n_tools]  — per-tool network score N (Eq. 7), broadcast from the
                     host server; zeros when the algorithm is semantic-only.
+  load [n_tools]  — per-tool utilization penalty U (SONAR-LB); zeros off.
+  dead [n_tools]  — >0 marks tools on known-failed servers (SONAR-FT
+                    failover mask); they keep softmax mass but are excluded
+                    from the final argmax.  Zeros off.
 
 Outputs per query row: winning global tool index + (C, N, S) at the winner.
 
 Selection semantics replicate the scalar `Router.select` exactly:
 top-k ties break toward the lower tool index (stable argsort), the softmax
 normalizes over the valid candidate set only, candidates whose selection
-score is NEG (fewer than k valid tools) are excluded from the argmax, and
-the final argmax tie-breaks toward the earlier (higher-ranked) candidate.
+score is NEG (fewer than k valid tools) or whose server is dead are
+excluded from the argmax, the final argmax tie-breaks toward the earlier
+(higher-ranked) candidate, and when *every* candidate is excluded the
+top-selection candidate is returned (np.argmax over all -inf picks 0).
 
 Gather-free trick: per-candidate values come from one-hot reductions over
 the stripe (sum(onehot * row)) instead of dynamic gathers, which keeps the
@@ -45,20 +51,22 @@ NEG = -1e30         # finite -inf stand-in (avoids inf-inf NaNs in VMEM math)
 
 
 def _select_kernel(
-    sel_ref, val_ref, qos_ref, load_ref, idx_ref, c_ref, n_ref, s_ref,
+    sel_ref, val_ref, qos_ref, load_ref, dead_ref,
+    idx_ref, c_ref, n_ref, s_ref,
     *, k: int, alpha: float, beta: float, gamma: float, temp: float,
 ):
     sel = sel_ref[...].astype(jnp.float32)   # [QT, T_pad]
     val = val_ref[...].astype(jnp.float32)   # [QT, T_pad]
     qos = qos_ref[...].astype(jnp.float32)   # [QT or 1, T_pad]
     load = load_ref[...].astype(jnp.float32)  # [QT or 1, T_pad] — U penalty
+    dead = dead_ref[...].astype(jnp.float32)  # [QT or 1, T_pad] — failover mask
     QT, T_pad = sel.shape
 
     lane = jax.lax.broadcasted_iota(jnp.float32, (QT, T_pad), 1)
 
     # --- k-step extraction: peel the row maximum k times (ties -> lowest
     # index, matching a stable descending argsort) ---
-    cand_val, cand_qos, cand_load, cand_idx = [], [], [], []
+    cand_val, cand_qos, cand_load, cand_dead, cand_idx = [], [], [], [], []
     cur = sel
     for _ in range(k):
         m = jnp.max(cur, axis=-1, keepdims=True)                    # [QT, 1]
@@ -69,10 +77,12 @@ def _select_kernel(
         v = jnp.sum(val * onehot, axis=-1, keepdims=True)
         n = jnp.sum(qos * onehot, axis=-1, keepdims=True)
         u = jnp.sum(load * onehot, axis=-1, keepdims=True)
+        d = jnp.sum(dead * onehot, axis=-1, keepdims=True)
         valid = m > NEG / 2.0
         cand_val.append(jnp.where(valid, v, NEG))
         cand_qos.append(n)
         cand_load.append(u)
+        cand_dead.append(d)
         cand_idx.append(idx)
         cur = jnp.where(onehot > 0.0, NEG, cur)
 
@@ -86,16 +96,22 @@ def _select_kernel(
         denom = denom + e
     denom = jnp.maximum(denom, 1e-30)
 
-    # --- Eq. 8 fusion (+ SONAR-LB load term) + Eq. 9 argmax (strict > keeps
-    # the earliest winner, matching np.argmax over the rank-ordered list) ---
+    # --- Eq. 8 fusion (+ SONAR-LB load term + SONAR-FT dead mask) + Eq. 9
+    # argmax (strict > keeps the earliest winner, matching np.argmax over
+    # the rank-ordered list).  Seeded with candidate 0 at score NEG so an
+    # all-excluded row returns the top-selection candidate, exactly like
+    # np.argmax over an all--inf vector (and like the jnp oracle). ---
     best_s = jnp.full((QT, 1), NEG, jnp.float32)
-    best_c = jnp.zeros((QT, 1), jnp.float32)
-    best_n = jnp.zeros((QT, 1), jnp.float32)
-    best_i = jnp.zeros((QT, 1), jnp.float32)
-    for v, e, n, u, i in zip(cand_val, exps, cand_qos, cand_load, cand_idx):
+    best_c = exps[0] / denom
+    best_n = cand_qos[0]
+    best_i = cand_idx[0]
+    for v, e, n, u, d, i in zip(
+        cand_val, exps, cand_qos, cand_load, cand_dead, cand_idx
+    ):
         c = e / denom
         s = alpha * c + beta * n - gamma * u
         s = jnp.where(v > NEG / 2.0, s, NEG)
+        s = jnp.where(d > 0.0, NEG, s)
         take = s > best_s
         best_c = jnp.where(take, c, best_c)
         best_n = jnp.where(take, n, best_n)
@@ -112,7 +128,7 @@ def _select_kernel(
     jax.jit,
     static_argnames=(
         "k", "alpha", "beta", "gamma", "temp",
-        "per_query_qos", "per_query_load", "interpret",
+        "per_query_qos", "per_query_load", "per_query_dead", "interpret",
     ),
 )
 def fused_select_pallas(
@@ -120,6 +136,7 @@ def fused_select_pallas(
     val: jax.Array,   # [n_q_pad, T_pad] f32
     qos: jax.Array,   # [n_q_pad or 1, T_pad] f32
     load: jax.Array,  # [n_q_pad or 1, T_pad] f32 — per-tool U penalty
+    dead: jax.Array,  # [n_q_pad or 1, T_pad] f32 — >0 excludes from argmax
     *,
     k: int,
     alpha: float,
@@ -128,6 +145,7 @@ def fused_select_pallas(
     temp: float,
     per_query_qos: bool,
     per_query_load: bool,
+    per_query_dead: bool,
     interpret: bool = False,
 ):
     n_q, T_pad = sel.shape
@@ -153,6 +171,7 @@ def fused_select_pallas(
             pl.BlockSpec((QUERY_TILE, T_pad), lambda i: (i, 0)),
             _row_spec(per_query_qos),
             _row_spec(per_query_load),
+            _row_spec(per_query_dead),
         ],
         out_specs=[out_spec, out_spec, out_spec, out_spec],
         out_shape=[
@@ -160,5 +179,5 @@ def fused_select_pallas(
             out_shape, out_shape, out_shape,
         ],
         interpret=interpret,
-    )(sel, val, qos, load)
+    )(sel, val, qos, load, dead)
     return idx[:, 0], c[:, 0], n[:, 0], s[:, 0]

@@ -74,9 +74,11 @@ class SonarGateway:
         history: int = 64,
         executor: Optional[Callable] = None,   # (replica_idx, request) -> latency_ms
         use_kernels: bool = False,
-        algo: str = "sonar",                   # "sonar" | "sonar_lb"
+        algo: str = "sonar",                   # "sonar" | "sonar_lb" | "sonar_ft"
         slots_per_replica: int = 4,            # capacity behind the load term
         lb_chunk: int = 8,                     # load-aware batch routing chunk
+        eject_after: int = 3,                  # consecutive failures -> ejected
+        probe_prob: float = 0.15,              # per-request re-admission probe
     ):
         self.replicas = list(replicas)
         self.algo = algo.lower().replace("-", "_")
@@ -93,6 +95,16 @@ class SonarGateway:
         # outstanding work; route()/route_batch() keep their own counts.
         self.in_flight = np.zeros(n, np.float32)
         self.capacity = float(max(slots_per_replica, 1))
+        # health tracking (SONAR-FT): a replica with `eject_after`
+        # consecutive failed calls is ejected (masked out of routing);
+        # each subsequent request re-admits it as a candidate with
+        # probability `probe_prob` (a canary probe), and one success fully
+        # readmits it.  Only failover-aware algorithms consume the mask.
+        self.eject_after = int(eject_after)
+        self.probe_prob = float(probe_prob)
+        self.fail_streak = np.zeros(n, np.int64)
+        self.ejected = np.zeros(n, bool)
+        self._probe_rng = np.random.default_rng(seed ^ 0x5EED)
         if profiles is None:
             profiles = [latlib.ideal_profile() for _ in range(n)]
         packed = latlib.pack_profiles(profiles)
@@ -111,13 +123,46 @@ class SonarGateway:
     def _utilization(self) -> np.ndarray:
         return self.in_flight / self.capacity
 
+    # -- health tracking (SONAR-FT ejection + probe re-admission) -----------
+    def _health_mask(self, n_requests: Optional[int] = None) -> Optional[np.ndarray]:
+        """failed-mask for the next routing decision: ejected replicas are
+        excluded unless the request probes them.  The probe is drawn per
+        *request* — scalar callers get a [n_replicas] mask, `route_batch`
+        passes `n_requests` and gets an independent [n_requests,
+        n_replicas] row per request (the batched engine broadcasts
+        per-query masks), so the re-admission rate stays `probe_prob` per
+        request regardless of chunking.  Never masks the whole fleet for
+        any request (a single-replica pool with its replica ejected must
+        still route — the request *is* the probe)."""
+        if not self.router.uses_failover or not self.ejected.any():
+            return None
+        rows = 1 if n_requests is None else n_requests
+        probe = (
+            self._probe_rng.random((rows, len(self.ejected))) < self.probe_prob
+        )
+        mask = self.ejected[None, :] & ~probe
+        mask[mask.all(axis=1)] = False
+        if not mask.any():
+            return None
+        return mask[0] if n_requests is None else mask
+
+    def _record_outcome(self, idx: int, ok: bool) -> None:
+        if ok:
+            self.fail_streak[idx] = 0
+            self.ejected[idx] = False           # probe succeeded: readmit
+        else:
+            self.fail_streak[idx] += 1
+            if self.fail_streak[idx] >= self.eject_after:
+                self.ejected[idx] = True
+
     # -- concurrent dispatch accounting (SONAR-LB) --------------------------
     def begin(self, request_text: str) -> RouteResult:
         """Route and dispatch without completing: the pick is counted
         in-flight until `finish` is called.  This is the API a concurrent
         front door drives; `route` is the synchronous convenience."""
         decision = self.router.select(
-            request_text, self.telemetry, self._utilization()
+            request_text, self.telemetry, self._utilization(),
+            failed_mask=self._health_mask(),
         )
         idx = decision.server_idx
         self.in_flight[idx] += 1.0
@@ -130,6 +175,7 @@ class SonarGateway:
         """Complete a begun dispatch: record telemetry, release the slot."""
         self.in_flight[replica_idx] = max(self.in_flight[replica_idx] - 1.0, 0.0)
         ok = latency_ms < latlib.OFFLINE_MS
+        self._record_outcome(replica_idx, ok)
         self._observe(replica_idx, latency_ms)
         res = RouteResult(
             replica_idx=replica_idx, latency_ms=latency_ms, ok=ok,
@@ -140,7 +186,8 @@ class SonarGateway:
 
     def route(self, request_text: str) -> RouteResult:
         decision = self.router.select(
-            request_text, self.telemetry, self._utilization()
+            request_text, self.telemetry, self._utilization(),
+            failed_mask=self._health_mask(),
         )
         idx = decision.server_idx
         if self.executor is not None:
@@ -148,6 +195,7 @@ class SonarGateway:
         else:
             latency = float(self.traces[idx, min(self.t, self.traces.shape[1] - 1)])
         ok = latency < latlib.OFFLINE_MS
+        self._record_outcome(idx, ok)
         self._observe(idx, latency)
         res = RouteResult(
             replica_idx=idx, latency_ms=latency, ok=ok,
@@ -176,16 +224,27 @@ class SonarGateway:
         With a load-aware algorithm the batch is routed in `lb_chunk`-sized
         chunks: each chunk's picks are counted in-flight before the next
         chunk routes, so one hot batch spreads across replicas instead of
-        herding onto the single top-scored one."""
+        herding onto the single top-scored one.  A single-replica pool
+        skips the chunking: there is nothing to spread to, and chunk-by-
+        chunk in-flight feedback would only inflate the utilization signal
+        (every earlier chunk still counted outstanding) and distort the
+        recorded scores."""
+        if not request_texts:
+            return []                 # nothing to route: do not build the
+                                      # engine or touch accounting state
         if not self.use_kernels:
             return [self.route(t) for t in request_texts]
         eng = self.engine()
         picks: list = []
-        step = self.lb_chunk if self.router.uses_load else len(request_texts)
+        chunked = self.router.uses_load and len(self.replicas) > 1
+        step = self.lb_chunk if chunked else len(request_texts)
         step = max(step, 1)
         for lo in range(0, len(request_texts), step):
             chunk = request_texts[lo : lo + step]
-            dec = eng.route_texts(chunk, self.telemetry, self._utilization())
+            dec = eng.route_texts(
+                chunk, self.telemetry, self._utilization(),
+                failed_mask=self._health_mask(len(chunk)),
+            )
             for qi in range(len(chunk)):
                 idx = int(dec.server_idx[qi])
                 self.in_flight[idx] += 1.0
@@ -195,11 +254,12 @@ class SonarGateway:
         out = []
         for idx, expertise, network in picks:
             latency = float(self.traces[idx, min(self.t, self.traces.shape[1] - 1)])
+            ok = latency < latlib.OFFLINE_MS
+            self._record_outcome(idx, ok)
             self._observe(idx, latency)
             self.in_flight[idx] = max(self.in_flight[idx] - 1.0, 0.0)
             res = RouteResult(
-                replica_idx=idx, latency_ms=latency,
-                ok=latency < latlib.OFFLINE_MS,
+                replica_idx=idx, latency_ms=latency, ok=ok,
                 expertise=expertise, network=network,
             )
             self.stats.append(res)

@@ -28,6 +28,13 @@ Retry budget: queue drops consume from a per-request budget — each drop
 records an offline observation and re-routes immediately (the agent loop's
 exception handling, seen from the fleet side); a request with no live copy
 and no budget left fails.
+
+Chaos faults (repro.chaos, via the platform's schedule): a crashed or
+partitioned station rejects dispatches (connection refused) and loses any
+copy in service when it goes down; both paths record an offline
+observation (blackout permitting), charge the retry budget and re-route
+with the dead server in the request's failed set — which failover-aware
+routers (SONAR-FT) receive as their failed-mask.
 """
 from __future__ import annotations
 
@@ -60,6 +67,9 @@ class Request:
     n_drops: int = 0
     n_hedges: int = 0
     hedged: bool = False
+    # servers observed dead for THIS request (chaos faults); a
+    # failover-aware router gets them as its failed-mask on re-routes
+    failed_servers: set = dataclasses.field(default_factory=set)
     t_start_ms: float = math.nan    # service start of the winning copy
     t_finish_ms: float = math.nan   # client-side completion (incl. network)
     service_ms: float = math.nan    # inflated service time of the winner
@@ -160,25 +170,59 @@ class FleetTrafficSim:
         self._draw_i += 1
         return d
 
-    def _route(self, text: str, now_ms: float) -> int:
-        hist = self.platform.latency_window(self._tick(now_ms))
+    def _route(self, text: str, now_ms: float, failed: set = frozenset()) -> int:
+        tick = self._tick(now_ms)
+        hist = self.platform.latency_window(tick)
         loads = self._loads()
         if isinstance(self.router, Router):
-            return self.router.select(text, hist, loads).server_idx
+            kwargs = {}
+            if getattr(self.router, "uses_staleness", False):
+                kwargs["telemetry_age_s"] = self.platform.telemetry_age_s(tick)
+            if getattr(self.router, "uses_failover", False) and failed:
+                mask = np.zeros(len(self.queues), bool)
+                mask[list(failed)] = True
+                kwargs["failed_mask"] = mask
+            return self.router.select(text, hist, loads, **kwargs).server_idx
         return int(self.router(text, hist, loads))
+
+    def _fail_copy(self, req: Request, server: int, now_ms: float,
+                   exclude: frozenset, server_dead: bool = False) -> None:
+        """One copy was lost — queue overflow or a crashed station: record
+        the outage (blackout permitting), charge the retry budget and
+        re-route — the agent-side exception handler, seen from the fleet.
+        `server_dead` additionally marks the server in the request's
+        failed set (the SONAR-FT failover mask); overflow drops don't,
+        since the station is alive, just saturated."""
+        req.n_drops += 1
+        if server_dead:
+            req.failed_servers.add(server)
+        self.platform.record_observation(
+            server, self._tick(now_ms), L.OFFLINE_MS
+        )
+        if req.budget > 0:
+            req.budget -= 1
+            self._dispatch(req, now_ms, exclude)
+        elif req.live_copies == 0 and not req.done:
+            req.failed = True
 
     # -- event handlers ------------------------------------------------------
     def _dispatch(self, req: Request, now_ms: float, exclude: frozenset = frozenset()):
-        server = self._route(req.text, now_ms)
+        server = self._route(req.text, now_ms, req.failed_servers)
         req.n_routes += 1
+        if not self.platform.is_alive(server, self._tick(now_ms)):
+            # connection refused: the station is crashed or partitioned
+            self._fail_copy(req, server, now_ms, exclude, server_dead=True)
+            return
         if server in exclude:
             # hedge copies must land on a *different* station; fall back to
-            # the least-utilized non-excluded server (infrastructure-level
-            # placement, independent of the routing algorithm)
+            # the least-utilized non-excluded live server (infrastructure-
+            # level placement, independent of the routing algorithm)
             loads = self._loads()
+            alive = self.platform.alive_mask(self._tick(now_ms))
             order = np.argsort(loads, kind="stable")
             server = next(
-                (int(s) for s in order if int(s) not in exclude), -1
+                (int(s) for s in order
+                 if int(s) not in exclude and alive[int(s)]), -1
             )
             if server < 0:      # every station excluded: nowhere to hedge
                 return
@@ -192,18 +236,9 @@ class FleetTrafficSim:
             req.live_copies += 1
             if self.hedge_ms is not None and not req.hedged:
                 self._push(now_ms + self.hedge_ms, _HEDGE, req)
-        else:  # dropped — waiting room full
-            req.n_drops += 1
-            # overflow is an outage event: feed it forward so network-aware
-            # routers see the saturated station (the closed loop)
-            self.platform.record_observation(
-                server, self._tick(now_ms), L.OFFLINE_MS
-            )
-            if req.budget > 0:
-                req.budget -= 1
-                self._dispatch(req, now_ms, exclude)
-            elif req.live_copies == 0 and not req.done:
-                req.failed = True
+        else:  # dropped — waiting room full: an outage event, fed forward
+            # so network-aware routers see the saturated station
+            self._fail_copy(req, server, now_ms, exclude)
 
     def _start_service(self, disp: _Dispatch, now_ms: float) -> None:
         q = self.queues[disp.server]
@@ -222,6 +257,12 @@ class FleetTrafficSim:
         req.live_copies -= 1
         if req.done:
             return                      # a hedge sibling already won
+        if not self.platform.is_alive(disp.server, self._tick(now_ms)):
+            # the station crashed while this copy was in service: the work
+            # (and its response) is lost — treat like a failed call
+            self._fail_copy(req, disp.server, now_ms, frozenset(),
+                            server_dead=True)
+            return
         req.done = True
         net_ms = self.platform.latency_at(disp.server, self._tick(now_ms))
         req.t_start_ms = disp.t_start_ms

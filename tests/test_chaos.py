@@ -1,0 +1,432 @@
+"""Chaos fault-injection subsystem + failover-aware SONAR-FT.
+
+Covers: fault-mask synthesis (determinism, crash availability, partition
+correlation, flapping duty, degradation ramps, blackout staleness),
+injection into the trace platform (ground truth vs frozen observations,
+blackout-gated feed-forward) and the discrete-event simulator (dead-station
+rejection, in-service kill), the SONAR-FT mechanism win under a blacked-out
+partition, scalar/batched episode parity under chaos, and the gateway's
+health tracking (ejection + probe re-admission) with its empty-batch and
+single-replica regression fixes.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.chaos import (
+    CrashRestartFault,
+    DegradationFault,
+    FlappingFault,
+    PartitionFault,
+    TelemetryBlackoutFault,
+    build_schedule,
+    standard_fault_mix,
+)
+from repro.core import latency as L
+from repro.core import routing
+from repro.core.agent import Agent, BatchAgent
+from repro.core.batch_routing import make_engine
+from repro.core.dataset import Query
+from repro.core.platform import NetMCPPlatform
+from repro.core.routing import RoutingConfig
+from repro.serving.gateway import SonarGateway, replica_pool
+from repro.traffic import (
+    FleetTrafficSim,
+    QueueConfig,
+    poisson_arrivals,
+    replica_fleet,
+)
+
+N, HORIZON_S, DT = 6, 900.0, 1.0
+N_STEPS = int(HORIZON_S / DT)
+WEB_QUERIES = [
+    Query(text=t, intent="websearch", answer="ok")
+    for t in (
+        "search the web for current news",
+        "look up live information online",
+        "find real-time facts on the internet",
+        "web search for fresh articles",
+    )
+] * 12
+
+
+def _schedule(faults, seed=0):
+    return build_schedule(faults, N, N_STEPS, DT, seed=seed)
+
+
+def _platform(chaos, seed=0):
+    return NetMCPPlatform(
+        replica_fleet(N),
+        profiles=[L.ideal_profile() for _ in range(N)],
+        scenario="ideal", seed=seed, horizon_s=HORIZON_S, dt_s=DT,
+        chaos=chaos,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Fault-mask synthesis
+# ---------------------------------------------------------------------------
+
+def test_build_schedule_deterministic_and_seed_sensitive():
+    faults = standard_fault_mix(0.8, N, HORIZON_S)
+    a = _schedule(faults, seed=3)
+    b = _schedule(faults, seed=3)
+    c = _schedule(faults, seed=4)
+    np.testing.assert_array_equal(a.down, b.down)
+    np.testing.assert_array_equal(a.stale, b.stale)
+    np.testing.assert_array_equal(a.degrade, b.degrade)
+    assert (a.down != c.down).any()       # crash draws move with the seed
+
+def test_crash_restart_availability_matches_mttf_mttr():
+    """Long-run downtime fraction ~ MTTR / (MTTF + MTTR)."""
+    mttf, mttr = 300.0, 100.0
+    sch = build_schedule(
+        [CrashRestartFault(servers=(0,), mttf_s=mttf, mttr_s=mttr)],
+        1, 40_000, 1.0, seed=0,
+    )
+    frac = sch.down[0].mean()
+    want = mttr / (mttf + mttr)
+    assert frac == pytest.approx(want, rel=0.25)
+
+def test_partition_takes_group_down_together():
+    sch = _schedule(
+        [PartitionFault(servers=(0, 1, 2), start_s=100.0, duration_s=200.0)]
+    )
+    w = slice(int(100 / DT), int(300 / DT))
+    assert sch.down[0, w].all() and sch.down[1, w].all() and sch.down[2, w].all()
+    np.testing.assert_array_equal(sch.down[0], sch.down[1])  # correlated
+    assert not sch.down[3].any()
+    assert not sch.down[0, : int(100 / DT)].any()
+    assert not sch.down[0, int(300 / DT):].any()
+
+def test_flapping_duty_cycle():
+    sch = _schedule(
+        [FlappingFault(servers=(4,), period_s=60.0, duty=0.5, start_s=0.0)]
+    )
+    assert sch.down[4].mean() == pytest.approx(0.5, abs=0.05)
+    # oscillates: many up/down transitions, unlike a single outage window
+    assert np.abs(np.diff(sch.down[4].astype(int))).sum() > 10
+
+def test_degradation_ramps_and_restores():
+    sch = _schedule(
+        [DegradationFault(servers=(5,), start_s=100.0, ramp_s=200.0,
+                          max_factor=5.0, end_s=600.0)]
+    )
+    d = sch.degrade[5]
+    assert d[int(50 / DT)] == 1.0
+    assert d[int(200 / DT)] == pytest.approx(3.0, rel=0.05)   # mid-ramp
+    assert d[int(400 / DT)] == pytest.approx(5.0, rel=1e-6)   # plateau
+    assert d[int(700 / DT)] == 1.0                            # restored
+    assert not sch.down[5].any()                              # degraded != dead
+
+def test_blackout_freezes_observations_and_ages():
+    sch = _schedule(
+        [TelemetryBlackoutFault(servers=(2,), start_s=300.0, duration_s=200.0)]
+    )
+    traces = np.arange(N_STEPS, dtype=np.float32)[None, :].repeat(N, 0)
+    obs = sch.apply_staleness(traces)
+    t0, t1 = int(300 / DT), int(500 / DT)
+    # frozen at the last fresh sample for the whole window
+    assert (obs[2, t0:t1] == traces[2, t0 - 1]).all()
+    np.testing.assert_array_equal(obs[2, :t0], traces[2, :t0])
+    np.testing.assert_array_equal(obs[2, t1:], traces[2, t1:])
+    np.testing.assert_array_equal(obs[0], traces[0])          # others live
+    # ages grow linearly through the blackout, zero elsewhere
+    assert sch.age_s(t0 - 1)[2] == 0.0
+    assert sch.age_s(t0 + 50)[2] == pytest.approx((50 + 1) * DT)
+    assert sch.age_s(t1)[2] == 0.0
+    np.testing.assert_array_equal(sch.ages_s(np.asarray([t0 + 50]))[0],
+                                  sch.age_s(t0 + 50))
+
+def test_standard_fault_mix_intensity_knob():
+    assert standard_fault_mix(0.0, N, HORIZON_S) == []
+    mix = standard_fault_mix(1.0, N, HORIZON_S)
+    kinds = {type(f) for f in mix}
+    assert kinds == {
+        CrashRestartFault, DegradationFault, PartitionFault,
+        FlappingFault, TelemetryBlackoutFault,
+    }
+    assert 0 in mix[0].servers          # partition covers the top-ranked pick
+
+def test_build_schedule_rejects_out_of_range_servers():
+    with pytest.raises(ValueError):
+        build_schedule(
+            [PartitionFault(servers=(9,), start_s=0.0, duration_s=10.0)],
+            4, 100, 1.0,
+        )
+
+
+# ---------------------------------------------------------------------------
+# Platform injection
+# ---------------------------------------------------------------------------
+
+def test_platform_chaos_ground_truth_vs_observed():
+    sch = _schedule([
+        PartitionFault(servers=(0, 1), start_s=300.0, duration_s=200.0),
+        TelemetryBlackoutFault(servers=(0, 1), start_s=250.0, duration_s=300.0),
+        DegradationFault(servers=(5,), start_s=0.0, ramp_s=100.0,
+                         max_factor=4.0),
+    ])
+    plat = _platform(sch)
+    t = int(400 / DT)
+    # ground truth: partitioned servers offline, degraded server inflated
+    assert plat.latency_at(0, t) >= L.OFFLINE_MS
+    assert not plat.is_alive(0, t) and plat.is_alive(3, t)
+    base = _platform(None)
+    assert plat.latency_at(5, t) == pytest.approx(4.0 * base.latency_at(5, t))
+    # observed: the blacked-out partition still LOOKS healthy
+    hist = plat.latency_window(t)
+    assert hist[0, -1] < 100.0
+    assert plat.telemetry_age_s(t)[0] > 100.0
+    assert plat.telemetry_age_s(t)[3] == 0.0
+    np.testing.assert_array_equal(
+        plat.alive_mask(t), ~sch.down[:, t]
+    )
+
+def test_record_observation_dropped_during_blackout():
+    sch = _schedule(
+        [TelemetryBlackoutFault(servers=(1,), start_s=100.0, duration_s=300.0)]
+    )
+    plat = _platform(sch)
+    t = int(200 / DT)
+    frozen = plat.observed[1, t]
+    plat.record_observation(1, t, 999.0)
+    assert plat.observed[1, t] == frozen          # write dropped
+    plat.record_observation(2, t, 999.0)
+    assert plat.observed[2, t] == 999.0           # fresh server records
+    # vectorized path gates identically
+    plat.record_observations(
+        np.asarray([1, 2]), np.asarray([t + 10, t + 10]),
+        np.asarray([888.0, 888.0]),
+    )
+    assert plat.observed[1, t + 10] != 888.0
+    assert plat.observed[2, t + 10] == 888.0
+
+def test_chaos_platform_without_faults_identical_to_plain():
+    empty = build_schedule([], N, N_STEPS, DT)
+    a, b = _platform(empty), _platform(None)
+    np.testing.assert_array_equal(a.traces, b.traces)
+    np.testing.assert_array_equal(a.observed, b.observed)
+    np.testing.assert_array_equal(a.telemetry_age_s(100), np.zeros(N))
+
+
+# ---------------------------------------------------------------------------
+# SONAR-FT mechanism + episode-driver parity
+# ---------------------------------------------------------------------------
+
+def _agent_metrics(algo, chaos, max_turns=4):
+    plat = _platform(chaos)
+    cfg = RoutingConfig(top_s=N, top_k=N)
+    recs = Agent(
+        plat, routing.make_router(algo, plat.servers, cfg),
+        max_turns=max_turns,
+    ).run_benchmark(WEB_QUERIES, ticks_per_query=18)
+    return (
+        float(np.mean([r.success for r in recs])),
+        int(sum(r.n_failures for r in recs)),
+    )
+
+def test_sonar_ft_survives_blacked_out_partition():
+    """The tentpole mechanism: a partition hidden behind a telemetry
+    blackout defeats SONAR (stale-healthy telemetry + dropped feed-forward
+    means every retry re-picks the dead group), while SONAR-FT's staleness
+    discount + failover mask route around it."""
+    sch = _schedule(standard_fault_mix(0.8, N, HORIZON_S))
+    ssr_sonar, fail_sonar = _agent_metrics("sonar", sch)
+    ssr_ft, fail_ft = _agent_metrics("sonar_ft", sch)
+    assert ssr_sonar < 0.9                       # the fault mix does damage
+    assert fail_sonar > 0
+    assert ssr_ft > ssr_sonar
+    assert fail_ft < fail_sonar
+
+def test_failover_escapes_all_dead_candidate_set():
+    """When every stage-1 candidate server is dead, the failover mask must
+    reshape the *candidate set* (not just the final argmax): on a fleet of
+    15 identical replicas with top_s=5, masking the semantic top-5 has to
+    surface the semantically-tied but previously-unranked live replicas."""
+    servers = replica_fleet(15)
+    cfg = RoutingConfig()                          # default top_s=5, top_k=10
+    router = routing.make_router("sonar_ft", servers, cfg)
+    hist = np.full((15, 32), 30.0, np.float32)     # everyone looks healthy
+    base = router.select(WEB_QUERIES[0].text, hist)
+    dead_five = np.zeros(15, bool)
+    dead_five[base.candidate_servers] = True       # kill the whole top-s set
+    alive = ~dead_five
+    # with the full mask known up front, one select escapes immediately
+    d0 = router.select(WEB_QUERIES[0].text, hist, failed_mask=dead_five)
+    assert alive[d0.server_idx], "stage-1 candidates not reshaped by mask"
+    # discovering the dead set one probe at a time costs one failover per
+    # dead candidate; a budget of top_s suffices to walk off the dead set
+    d, failovers = router.select_failover(
+        WEB_QUERIES[0].text, hist, alive=alive, budget=5
+    )
+    assert alive[d.server_idx], "failover returned a dead server"
+    # the batched loop agrees
+    engine = make_engine("sonar_ft", servers, cfg, index=router.index)
+    dec, nf = engine.route_failover(
+        engine.encode([WEB_QUERIES[0].text]), hist, alive=alive, budget=5
+    )
+    assert alive[int(dec.server_idx[0])]
+    assert int(dec.server_idx[0]) == d.server_idx and int(nf[0]) == failovers
+
+
+def test_sonar_ft_equals_sonar_lb_without_faults():
+    for algo_pair in (("sonar_lb", "sonar_ft"),):
+        a = _agent_metrics(algo_pair[0], None)
+        b = _agent_metrics(algo_pair[1], None)
+        assert a == b
+
+def test_hedge_failure_feeds_failover_mask():
+    """A hedge duplicate that dies on a crashed server must enter the
+    SONAR-FT failover mask too: with servers 0 and 1 partitioned behind a
+    blackout, turn 1 burns the primary (0) and the hedge (1), and turn 2
+    must go straight to the live server 2 instead of re-picking the
+    healthy-looking dead hedge target."""
+    plat = NetMCPPlatform(
+        replica_fleet(3),
+        profiles=[L.ideal_profile(), L.ideal_profile(),
+                  L.high_latency_profile()],
+        scenario="ideal", seed=0, horizon_s=HORIZON_S, dt_s=DT,
+        chaos=build_schedule(
+            [PartitionFault(servers=(0, 1), start_s=100.0, duration_s=700.0),
+             TelemetryBlackoutFault(servers=(0, 1), start_s=90.0,
+                                    duration_s=710.0)],
+            3, N_STEPS, DT,
+        ),
+    )
+    router = routing.make_router(
+        "sonar_ft", plat.servers, RoutingConfig(top_s=3, top_k=3)
+    )
+    rec = Agent(
+        plat, router, max_turns=4, hedge_ms=50.0, retry_budget=2
+    ).run_task(WEB_QUERIES[0], int(110 / DT))
+    # turn 1: primary 0 fails, hedge 1 fails; turn 2: live server 2 wins
+    assert rec.success
+    assert rec.final_server_idx == 2
+    assert rec.n_calls == 3 and rec.n_failures == 2
+
+
+def test_batch_agent_matches_scalar_agent_under_chaos():
+    sch = _schedule(standard_fault_mix(1.0, N, HORIZON_S))
+    cfg = RoutingConfig(top_s=N, top_k=N)
+    for algo in ("sonar", "sonar_ft"):
+        p1, p2 = _platform(sch), _platform(sch)
+        recs1 = Agent(
+            p1, routing.make_router(algo, p1.servers, cfg), max_turns=4
+        ).run_benchmark(WEB_QUERIES, ticks_per_query=18)
+        recs2 = BatchAgent(
+            p2, make_engine(algo, p2.servers, cfg), max_turns=4
+        ).run_benchmark(WEB_QUERIES, ticks_per_query=18)
+        for a, b in zip(recs1, recs2):
+            assert (a.final_server_idx, a.n_calls, a.success, a.n_failures) \
+                == (b.final_server_idx, b.n_calls, b.success, b.n_failures)
+
+
+# ---------------------------------------------------------------------------
+# Traffic-simulator injection
+# ---------------------------------------------------------------------------
+
+def _sim_report(algo, chaos, retry_budget=2):
+    plat = _platform(chaos)
+    cfg = RoutingConfig(top_s=N, top_k=N)
+    sim = FleetTrafficSim(
+        plat, routing.make_router(algo, plat.servers, cfg),
+        QueueConfig(capacity=4, queue_limit=16, base_service_ms=200.0),
+        retry_budget=retry_budget, seed=1,
+    )
+    arr = poisson_arrivals(jax.random.PRNGKey(0), 2.0, 600.0)
+    return sim.run(arr, [q.text for q in WEB_QUERIES[:4]])
+
+def test_simulator_dead_station_rejects_and_ft_routes_around():
+    sch = _schedule(standard_fault_mix(0.8, N, HORIZON_S))
+    blind = _sim_report("sonar", sch)
+    ft = _sim_report("sonar_ft", sch)
+    assert blind.n_failed > 0                    # stale-blind herding fails
+    assert ft.n_failed < blind.n_failed
+    assert ft.n_completed > blind.n_completed
+    for rep in (blind, ft):
+        assert rep.n_completed + rep.n_failed == rep.n_offered
+
+def test_simulator_kills_in_service_work_on_crash():
+    """A copy in service when its station crashes is lost, not completed:
+    with no retry budget the request fails."""
+    sch = _schedule(
+        [PartitionFault(servers=(0,), start_s=10.0, duration_s=500.0)]
+    )
+    plat = _platform(sch)
+    sim = FleetTrafficSim(
+        plat, lambda text, hist, load: 0,        # pin everything to server 0
+        QueueConfig(capacity=4, queue_limit=16, base_service_ms=5000.0),
+        retry_budget=0, seed=0,
+    )
+    # arrivals just before the partition: service (5 s) spans the crash
+    rep = sim.run(np.asarray([8.0, 8.5]), ["q"])
+    assert rep.n_failed == 2 and rep.n_completed == 0
+
+def test_simulator_without_chaos_unchanged():
+    """Chaos hooks are inert on a plain platform: same report as before."""
+    rep = _sim_report("sonar", None)
+    assert rep.n_failed == 0
+    assert rep.n_completed == rep.n_offered
+
+
+# ---------------------------------------------------------------------------
+# Gateway health tracking + regression fixes
+# ---------------------------------------------------------------------------
+
+def test_gateway_ejects_failing_replica_and_probes_back():
+    replicas = replica_pool([("yi-6b", "dense")] * 4)
+    profiles = [L.ideal_profile()] + [L.high_latency_profile()] * 3
+    down = {0}
+    executor = lambda idx, text: 1500.0 if idx in down else 360.0
+    gw = SonarGateway(
+        replicas, profiles=profiles, seed=0, algo="sonar_ft",
+        executor=executor, eject_after=2, probe_prob=0.1,
+    )
+    res = [gw.route("generate a chat reply") for _ in range(30)]
+    assert gw.ejected[0]
+    # ejection caps the damage: a couple of real failures + rare probes
+    assert sum(not r.ok for r in res) <= 6
+    down.clear()                                 # replica recovers
+    [gw.route("generate a chat reply") for _ in range(80)]
+    assert not gw.ejected[0]                     # probe readmitted it
+
+def test_gateway_ejection_requires_failover_algo():
+    """Non-FT algorithms never consume the health mask (argmax-identical
+    behaviour to the pre-chaos gateway)."""
+    gw = SonarGateway(replica_pool([("yi-6b", "dense")] * 3), algo="sonar")
+    gw.ejected[:] = True
+    assert gw._health_mask() is None
+
+def test_gateway_single_replica_ejection_still_routes():
+    gw = SonarGateway(
+        replica_pool([("qwen2-7b", "dense")]), algo="sonar_ft",
+        executor=lambda i, t: 1500.0, eject_after=1, probe_prob=0.0,
+    )
+    res = [gw.route("generate") for _ in range(5)]
+    assert [r.replica_idx for r in res] == [0] * 5   # the request IS the probe
+    assert gw.ejected[0]
+
+def test_gateway_route_batch_empty_request_list():
+    """Regression: an empty batch returns [] without building the engine or
+    touching accounting/telemetry state."""
+    gw = SonarGateway(replica_pool([("qwen2-7b", "dense")] * 2),
+                      use_kernels=True, algo="sonar_lb")
+    t0, n0 = gw.t, len(gw.stats)
+    assert gw.route_batch([]) == []
+    assert gw._engine is None
+    assert gw.t == t0 and len(gw.stats) == n0
+    assert np.all(gw.in_flight == 0.0)
+
+def test_gateway_route_batch_single_replica_accounting():
+    """Regression: a single-replica load-aware pool routes the whole batch
+    in one chunk (nothing to spread to), drains in-flight to exactly zero
+    and records every request."""
+    gw = SonarGateway(
+        replica_pool([("qwen2-7b", "dense")]), algo="sonar_lb",
+        use_kernels=True, slots_per_replica=2, lb_chunk=4,
+    )
+    out = gw.route_batch(["generate text"] * 10)
+    assert [r.replica_idx for r in out] == [0] * 10
+    assert np.all(gw.in_flight == 0.0)
+    assert len(gw.stats) == 10 and gw.report()["n"] == 10

@@ -1,0 +1,150 @@
+"""Golden-trace regression fixtures for the stochastic generators.
+
+Frozen-seed synthesized sequences for the five canonical latency states of
+`core.latency` and the four arrival processes of `traffic.arrivals` are
+committed under ``tests/golden/``.  The drift tests regenerate each
+sequence with the same seed and compare against the fixture: any
+unintended change to the synthesis math (profile packing, the outage scan,
+the thinning construction, PRNG plumbing) fails loudly instead of silently
+shifting every downstream benchmark.  A sha256 manifest guards the
+fixtures themselves against accidental edits.
+
+Regenerate (after an *intended* change) with:
+
+    PYTHONPATH=src python tests/test_golden_traces.py --regen
+"""
+import hashlib
+import json
+import pathlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import latency as L
+from repro.traffic.arrivals import ARRIVAL_PROCESSES
+
+GOLDEN_DIR = pathlib.Path(__file__).parent / "golden"
+LATENCY_NPZ = GOLDEN_DIR / "latency_states.npz"
+ARRIVALS_NPZ = GOLDEN_DIR / "arrivals.npz"
+MANIFEST = GOLDEN_DIR / "manifest.json"
+
+# 1024 x 10 s ~ 2.8 h: long enough that the outage state's 30-100 min
+# downtime intervals actually occur in the frozen-seed trace
+LAT_SEED, LAT_STEPS, LAT_DT = 1234, 1024, 10.0
+ARR_SEED, ARR_RATE, ARR_HORIZON = 7, 5.0, 60.0
+
+# Cross-platform slack: XLA may fuse transcendentals differently across
+# versions/backends (ULP-level), but semantic drift moves values by orders
+# of magnitude more than this.
+RTOL, ATOL = 1e-4, 1e-2
+
+
+def synth_latency_states() -> dict:
+    """One frozen-seed trace per canonical network state (Fig. 4)."""
+    names = sorted(L.STATE_FACTORIES)
+    packed = L.pack_profiles([L.STATE_FACTORIES[n]() for n in names])
+    traces = np.asarray(
+        L.generate_traces(
+            jax.random.PRNGKey(LAT_SEED), jnp.asarray(packed),
+            LAT_STEPS, LAT_DT,
+        )
+    )
+    return {n: traces[i].astype(np.float32) for i, n in enumerate(names)}
+
+
+def synth_arrivals() -> dict:
+    """One frozen-seed stream per arrival process."""
+    return {
+        name: np.asarray(
+            ARRIVAL_PROCESSES[name](
+                jax.random.PRNGKey(ARR_SEED), ARR_RATE, ARR_HORIZON
+            ),
+            np.float64,
+        )
+        for name in sorted(ARRIVAL_PROCESSES)
+    }
+
+
+def _sha256(path: pathlib.Path) -> str:
+    return hashlib.sha256(path.read_bytes()).hexdigest()
+
+
+def regen() -> None:
+    GOLDEN_DIR.mkdir(exist_ok=True)
+    np.savez(LATENCY_NPZ, **synth_latency_states())
+    np.savez(ARRIVALS_NPZ, **synth_arrivals())
+    MANIFEST.write_text(
+        json.dumps(
+            {p.name: _sha256(p) for p in (LATENCY_NPZ, ARRIVALS_NPZ)},
+            indent=2,
+        )
+        + "\n"
+    )
+
+
+# ---------------------------------------------------------------------------
+# Drift tests
+# ---------------------------------------------------------------------------
+
+def test_latency_state_traces_match_golden():
+    stored = np.load(LATENCY_NPZ)
+    fresh = synth_latency_states()
+    assert sorted(stored.files) == sorted(fresh), (
+        "canonical latency states changed — regenerate the fixtures if this "
+        "is intentional"
+    )
+    for name in fresh:
+        np.testing.assert_allclose(
+            fresh[name], stored[name], rtol=RTOL, atol=ATOL,
+            err_msg=f"latency state '{name}' drifted from the golden trace",
+        )
+
+
+def test_arrival_streams_match_golden():
+    stored = np.load(ARRIVALS_NPZ)
+    fresh = synth_arrivals()
+    assert sorted(stored.files) == sorted(fresh)
+    for name in fresh:
+        assert fresh[name].shape == stored[name].shape, (
+            f"arrival process '{name}' changed its event count "
+            f"({stored[name].shape} -> {fresh[name].shape})"
+        )
+        np.testing.assert_allclose(
+            fresh[name], stored[name], rtol=RTOL, atol=1e-6,
+            err_msg=f"arrival process '{name}' drifted from the golden stream",
+        )
+
+
+def test_golden_fixture_integrity():
+    """The committed fixture files match the committed checksums — guards
+    against fixtures being edited without regenerating the manifest."""
+    manifest = json.loads(MANIFEST.read_text())
+    for path in (LATENCY_NPZ, ARRIVALS_NPZ):
+        assert manifest[path.name] == _sha256(path), (
+            f"{path.name} does not match its manifest checksum; regenerate "
+            "both together via --regen"
+        )
+
+
+def test_golden_traces_have_expected_state_signatures():
+    """Sanity on the fixtures themselves: each canonical state shows its
+    defining statistic, so the goldens can't silently be garbage."""
+    g = np.load(LATENCY_NPZ)
+    assert g["ideal"].mean() < 60.0
+    assert g["high_latency"].mean() > 250.0
+    assert g["high_jitter"].std() > 50.0
+    assert (g["outage"] >= 999.0).mean() > 0.2          # downtime intervals
+    amp = g["fluctuating"].max() - g["fluctuating"].min()
+    assert amp > 200.0                                  # sinusoidal swing
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--regen", action="store_true")
+    args = ap.parse_args()
+    if args.regen:
+        regen()
+        print(f"regenerated fixtures under {GOLDEN_DIR}")

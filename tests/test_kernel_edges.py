@@ -1,0 +1,154 @@
+"""Edge-case coverage for the routing Pallas kernels.
+
+`kernels/select_fuse` and `kernels/qos_score` are exercised at the shape
+and degeneracy boundaries the fleet benchmarks never hit: fleets that are
+not a multiple of the kernel tile sizes, single-server fleets, fewer tools
+than the requested top-k, and rows where every candidate is invalid or
+masked.  Every case runs with ``interpret=True`` explicitly, so the suite
+passes (and still measures kernel semantics) on backends without Pallas
+Mosaic support.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.qos import DEFAULT_QOS, network_score
+from repro.kernels import ops, ref
+from repro.kernels.qos_score import SERVER_TILE
+from repro.kernels.select_fuse import QUERY_TILE
+
+NEG = ref.NEG
+
+
+def _assert_select_matches(sel, val, qos, load=None, dead=None, **kw):
+    kw.setdefault("alpha", 0.5)
+    kw.setdefault("beta", 0.5)
+    got = ops.fused_select(
+        jnp.asarray(sel), jnp.asarray(val), jnp.asarray(qos),
+        None if load is None else jnp.asarray(load),
+        None if dead is None else jnp.asarray(dead),
+        interpret=True, **kw,
+    )
+    want = ref.fused_select_ref(
+        jnp.asarray(sel), jnp.asarray(val), jnp.asarray(qos),
+        None if load is None else jnp.asarray(load),
+        None if dead is None else jnp.asarray(dead),
+        **kw,
+    )
+    assert (np.asarray(got[0]) == np.asarray(want[0])).all(), "tool_idx"
+    for name, g, w in zip(("C", "N", "S"), got[1:], want[1:]):
+        np.testing.assert_allclose(
+            np.asarray(g), np.asarray(w), rtol=1e-5, atol=1e-6, err_msg=name
+        )
+    return got
+
+
+# ---------------------------------------------------------------------------
+# fused_select edge cases
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n_q,n_t", [
+    (1, 1),        # single query, single tool
+    (3, 130),      # tools just past one 128 lane; queries not a tile multiple
+    (QUERY_TILE + 1, 300),   # queries one past the tile; tools 2x128+44
+    (2, 127),      # tools one short of the lane boundary
+])
+def test_fused_select_off_tile_shapes(n_q, n_t):
+    rng = np.random.default_rng(n_q * 1000 + n_t)
+    sel = rng.standard_normal((n_q, n_t)).astype(np.float32)
+    qos = rng.random((n_t,)).astype(np.float32) * 2 - 1
+    _assert_select_matches(sel, sel, qos, k=min(8, n_t))
+
+
+def test_fused_select_single_server_fleet():
+    """One server, one tool: the only candidate must win with C == 1."""
+    sel = np.asarray([[2.5], [0.1], [-1.0]], np.float32)
+    qos = np.asarray([0.3], np.float32)
+    idx, c, n, s = _assert_select_matches(sel, sel, qos, k=4)
+    assert (np.asarray(idx) == 0).all()
+    np.testing.assert_allclose(np.asarray(c), 1.0, rtol=1e-6)
+
+
+def test_fused_select_fewer_tools_than_k():
+    """k > n_tools: every tool is a candidate; no phantom candidates from
+    the padding lanes may enter the softmax or the argmax."""
+    rng = np.random.default_rng(0)
+    n_q, n_t = 5, 7
+    sel = rng.standard_normal((n_q, n_t)).astype(np.float32)
+    qos = rng.random((n_q, n_t)).astype(np.float32)
+    idx, c, *_ = _assert_select_matches(sel, sel, qos, k=10)
+    # softmax mass sums to one over the n_t real candidates only
+    full = ref.fused_select_ref(
+        jnp.asarray(sel), jnp.asarray(sel), jnp.asarray(qos), k=n_t,
+        alpha=0.5, beta=0.5,
+    )
+    assert (np.asarray(idx) == np.asarray(full[0])).all()
+
+
+def test_fused_select_all_candidates_invalid():
+    """Rows whose stage-2 scores are all -inf (no tool on any candidate
+    server): every path returns the first (rank-0) candidate, mirroring
+    np.argmax over an all--inf score vector."""
+    n_q, n_t = 4, 40
+    sel = np.full((n_q, n_t), -np.inf, np.float32)
+    qos = np.zeros((n_t,), np.float32)
+    idx, c, n, s = _assert_select_matches(sel, sel, qos, k=8)
+    assert (np.asarray(idx) == 0).all()
+    assert (np.asarray(s) <= NEG / 2.0).all()   # fused score flags no winner
+
+
+def test_fused_select_all_candidates_dead():
+    """A fault mask covering the entire fleet: decisions still come back
+    (the top-selection candidate) and match the oracle and the scalar
+    np.argmax semantics."""
+    rng = np.random.default_rng(3)
+    n_q, n_t = 6, 90
+    sel = rng.standard_normal((n_q, n_t)).astype(np.float32) * 2
+    qos = rng.random((n_t,)).astype(np.float32)
+    dead = np.ones((n_t,), np.float32)
+    idx, c, n, s = _assert_select_matches(sel, sel, qos, dead=dead, k=6)
+    top1 = np.argmax(sel, axis=1)
+    assert (np.asarray(idx) == top1).all()
+    assert (np.asarray(s) <= NEG / 2.0).all()
+
+
+def test_fused_select_mixed_dead_and_invalid():
+    rng = np.random.default_rng(9)
+    n_q, n_t = 9, 150
+    sel = rng.standard_normal((n_q, n_t)).astype(np.float32) * 3
+    sel = np.where(rng.random((n_q, n_t)) < 0.5, sel, -np.inf)
+    qos = (rng.random((n_q, n_t)).astype(np.float32)) * 2 - 1
+    load = rng.random((n_t,)).astype(np.float32)
+    dead = (rng.random((n_q, n_t)) < 0.5).astype(np.float32)
+    _assert_select_matches(
+        sel, sel, qos, load=load, dead=dead, k=12, gamma=0.3
+    )
+
+
+# ---------------------------------------------------------------------------
+# qos_score edge cases
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n_servers", [
+    1,                       # single-server fleet
+    SERVER_TILE - 1,         # one short of the tile
+    SERVER_TILE + 44,        # not a multiple of the tile
+])
+@pytest.mark.parametrize("T", [5, 50, 128])
+def test_qos_kernel_off_tile_fleets(n_servers, T):
+    rng = np.random.default_rng(n_servers * 7 + T)
+    lat = rng.uniform(5.0, 900.0, size=(n_servers, T)).astype(np.float32)
+    lat[rng.random(n_servers) < 0.2, -1] = 1200.0       # some offline
+    got = np.asarray(ops.qos_scores(jnp.asarray(lat), interpret=True))
+    want = np.asarray(network_score(jnp.asarray(lat), DEFAULT_QOS))
+    assert got.shape == (n_servers,)
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-5)
+
+
+def test_qos_kernel_single_sample_history():
+    """T == 1: the EWMA carry, trend and CV windows all degenerate."""
+    lat = np.asarray([[30.0], [400.0], [1200.0]], np.float32)
+    got = np.asarray(ops.qos_scores(jnp.asarray(lat), interpret=True))
+    want = np.asarray(network_score(jnp.asarray(lat), DEFAULT_QOS))
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-5)
+    assert got[2] == -1.0                                # offline clamp
