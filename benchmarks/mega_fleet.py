@@ -1,0 +1,219 @@
+"""Mega-fleet routing sweep: fleet size x shard count at 10^5-10^6 servers.
+
+The mesh-sharded engine (`core.mesh_routing.ShardedRoutingEngine`) routes
+query batches over template-tiled fleets — BM25 weights per template
+(expanded-corpus statistics), telemetry per template trace — so neither
+the index nor the history ever densifies to fleet size.  For each
+(fleet_size, n_shards) point the sweep reports routing throughput
+(routes/s and us/query) through the sharded engine; at the smallest
+fleet of the sweep it additionally runs the single-device
+`BatchRoutingEngine` on the densified index/telemetry and asserts the two
+paths pick **identical** (server, tool) per query — the parity gate that
+keeps the distributed path honest.
+
+On a single-device host the shard structure is emulated with bit-identical
+math; set ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` (before
+first jax init) to run the per-shard stages under a real ``shard_map``
+mesh (``--mesh`` asserts one is available).
+
+JSON artifact schema (``--json out.json``)::
+
+  {
+    "config": {"sizes": [...], "shards": [...], "n_queries": ...,
+               "window": ..., "algos": [...], "mesh_devices": ...},
+    "parity": {"size": ..., "algos": [...], "ok": true},
+    "points": [
+      {"algo": ..., "n_servers": ..., "n_tools": ..., "n_shards": ...,
+       "mesh": true|false, "us_per_query": ..., "routes_per_s": ...,
+       "batch_s": ...},
+      ...
+    ]
+  }
+
+  PYTHONPATH=src:. python benchmarks/mega_fleet.py                 # full
+  PYTHONPATH=src:. python benchmarks/mega_fleet.py --smoke         # CI
+  PYTHONPATH=src:. python benchmarks/mega_fleet.py --max           # 1M
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import numpy as np
+
+from repro.core.batch_routing import BatchRoutingEngine
+from repro.core.mesh_routing import ShardedRoutingEngine
+from repro.core.routing import RoutingConfig
+from repro.traffic import mega_fleet_index, mega_platform
+
+QUERY_TEXTS = [
+    "search the web for the latest news about chip supply",
+    "what is the weather forecast for tomorrow morning",
+    "find recent articles about model context protocol",
+    "look up live market information online",
+]
+
+
+def _queries(n: int) -> list:
+    return [QUERY_TEXTS[i % len(QUERY_TEXTS)] + f" variant {i}" for i in range(n)]
+
+
+def build_point(size: int, window: int, seed: int = 0):
+    """Tiled index + tiled platform + compact telemetry for one fleet size."""
+    index = mega_fleet_index(size, seed=seed)
+    plat = mega_platform(size, n_tel_templates=16, seed=seed,
+                         horizon_s=float(4 * window), dt_s=1.0)
+    compact, tel_map = plat.compact_window(2 * window, window=window)
+    rng = np.random.default_rng(seed)
+    load = (rng.random(size) * 1.5).astype(np.float32)
+    age = (rng.random(size) * 400.0).astype(np.float32)
+    mask = rng.random(size) < 0.05
+    return index, compact, tel_map, load, age, mask
+
+
+def time_sharded(
+    algo: str, index, batch, compact, tel_map, load, age, mask,
+    n_shards: int, cfg: RoutingConfig, mesh, n_iter: int,
+):
+    eng = ShardedRoutingEngine(
+        cfg=cfg, algo=algo, n_shards=n_shards, mesh=mesh,
+        use_kernels=False, index=index,
+    )
+    kw = dict(
+        server_load=load, telemetry_age_s=age, failed_mask=mask,
+        telemetry_templates=(compact, tel_map),
+    )
+    dec = eng.route(batch, **kw)                     # warm-up (compile)
+    t0 = time.time()
+    for _ in range(n_iter):
+        dec = eng.route(batch, **kw)
+    dt = (time.time() - t0) / n_iter
+    return eng, dec, dt
+
+
+def parity_gate(
+    algos, index, batch, compact, tel_map, load, age, mask,
+    shards_list, cfg, mesh, queries,
+) -> dict:
+    """Sharded vs densified single-device: identical picks, all algos."""
+    dense = index.densify()
+    hist = compact[tel_map]                          # densified telemetry
+    checked = []
+    for algo in algos:
+        base = BatchRoutingEngine([], cfg, algo=algo, use_kernels=False,
+                                  index=dense)
+        b0 = base.encode(queries)
+        d0 = base.route(b0, hist, load, age, mask)
+        for n_shards in shards_list:
+            eng = ShardedRoutingEngine(
+                cfg=cfg, algo=algo, n_shards=n_shards, mesh=mesh,
+                use_kernels=False, index=index,
+            )
+            d1 = eng.route(
+                batch, server_load=load, telemetry_age_s=age,
+                failed_mask=mask, telemetry_templates=(compact, tel_map),
+            )
+            same = (
+                np.array_equal(d0.server_idx, d1.server_idx)
+                and np.array_equal(d0.tool_idx, d1.tool_idx)
+            )
+            assert same, (
+                f"PARITY FAIL {algo} shards={n_shards}: "
+                f"{d0.server_idx[:8]} vs {d1.server_idx[:8]}"
+            )
+            checked.append((algo, n_shards))
+    return {"checked": len(checked), "algos": list(algos), "ok": True}
+
+
+def main(argv=None) -> dict:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--smoke", action="store_true",
+                        help="CI sizing: one 100k sweep point + parity")
+    parser.add_argument("--max", action="store_true",
+                        help="extend the sweep to 10^6 servers")
+    parser.add_argument("--mesh", action="store_true",
+                        help="require a real multi-device shard_map mesh")
+    parser.add_argument("--json", metavar="PATH", default=None)
+    parser.add_argument("--queries", type=int, default=16)
+    parser.add_argument("--window", type=int, default=32)
+    args = parser.parse_args(argv)
+
+    import jax
+
+    n_dev = len(jax.devices())
+    if args.smoke:
+        sizes, shards_list, algos, n_iter = [100_000], [1, 4], \
+            ["sonar", "sonar_lb", "sonar_ft"], 2
+    else:
+        sizes = [100_000, 250_000] + ([1_000_000] if args.max else [])
+        shards_list = [1, 2, 4, 8]
+        algos = ["sonar", "sonar_lb", "sonar_ft"]
+        n_iter = 3
+    mesh = "auto"
+    if args.mesh:
+        assert n_dev > 1, (
+            "--mesh needs multiple devices; set XLA_FLAGS="
+            "--xla_force_host_platform_device_count=N"
+        )
+
+    cfg = RoutingConfig(top_s=8, top_k=16)
+    queries = _queries(args.queries)
+    points, parity = [], None
+    for size in sizes:
+        index, compact, tel_map, load, age, mask = build_point(
+            size, args.window
+        )
+        eng0 = ShardedRoutingEngine(cfg=cfg, algo="sonar", n_shards=1,
+                                    use_kernels=False, index=index)
+        batch = eng0.encode(queries)
+        if size == min(sizes):
+            parity = parity_gate(
+                algos, index, batch, compact, tel_map, load, age, mask,
+                shards_list, cfg, mesh, queries,
+            )
+            parity["size"] = size
+            print(f"parity gate: {parity['checked']} (algo, shard) points "
+                  f"identical at {size} servers")
+        for algo in algos:
+            for n_shards in shards_list:
+                eng, dec, dt = time_sharded(
+                    algo, index, batch, compact, tel_map, load, age, mask,
+                    n_shards, cfg, mesh, n_iter,
+                )
+                us_q = 1e6 * dt / len(queries)
+                row = {
+                    "algo": algo,
+                    "n_servers": size,
+                    "n_tools": int(index.n_tools),
+                    "n_shards": eng.plan.n_shards,
+                    "mesh": eng.mesh is not None,
+                    "us_per_query": us_q,
+                    "routes_per_s": len(queries) / dt,
+                    "batch_s": dt,
+                }
+                points.append(row)
+                print(
+                    f"mega_fleet,{us_q:.1f},algo={algo} servers={size} "
+                    f"shards={eng.plan.n_shards} mesh={row['mesh']} "
+                    f"routes_per_s={row['routes_per_s']:.1f}"
+                )
+
+    res = {
+        "config": {
+            "sizes": sizes, "shards": shards_list,
+            "n_queries": args.queries, "window": args.window,
+            "algos": algos, "mesh_devices": n_dev,
+        },
+        "parity": parity,
+        "points": points,
+    }
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(res, f, indent=2)
+    return res
+
+
+if __name__ == "__main__":
+    out = main()
+    assert out["parity"] is not None and out["parity"]["ok"]

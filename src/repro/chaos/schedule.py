@@ -121,9 +121,36 @@ def build_schedule(
     seed: int = 0,
     severity_ms: float = OFFLINE_MS,
 ) -> ChaosSchedule:
-    """Compile fault specs into dense masks.  Stochastic faults draw from
-    PRNGKey(seed) folded per fault index, so schedules are reproducible and
-    independent of spec-list mutations elsewhere."""
+    """Compile fault specs into dense per-(server, tick) masks.
+
+    Parameters
+    ----------
+    faults : Sequence
+        Fault specs from `repro.chaos.faults` (crash/restart, degradation,
+        partition, flapping, blackout).
+    n_servers : int
+        Fleet size; mask rows.
+    n_steps : int
+        Trace horizon in ticks; mask columns.
+    dt_s : float
+        Seconds per tick (fault durations in specs are **seconds** and are
+        converted to ticks here).
+    seed : int
+        Stochastic faults draw from PRNGKey(seed) folded per fault index,
+        so schedules are reproducible and independent of spec-list
+        mutations elsewhere; the same (faults, seed) pair always compiles
+        the same schedule.
+    severity_ms : float
+        Latency (ms) pinned onto downed servers (default: the offline
+        clamp).
+
+    Returns
+    -------
+    ChaosSchedule
+        ``down``/``stale`` bool [n_servers, n_steps] and ``degrade`` f32
+        multipliers, plus the alive/age query helpers the platform and
+        simulator consume.
+    """
     down = np.zeros((n_servers, n_steps), bool)
     degrade = np.ones((n_servers, n_steps), np.float32)
     stale = np.zeros((n_servers, n_steps), bool)

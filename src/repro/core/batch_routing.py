@@ -21,12 +21,14 @@ routed repeatedly (e.g. every retry turn of the batched episode driver)
 without touching Python strings again.
 
 Selection parity: for identical inputs the engine is argmax-identical to
-`Router.select` for every algorithm (RAG / RerankRAG / PRAG / SONAR) —
-top-k ties break toward lower indices in both (stable argsort vs
-lax.top_k), invalid candidates (fewer than k tools on candidate servers)
-are excluded from both softmax mass and the final argmax, and the argmax
-tie-breaks toward the higher-ranked candidate.  `tests/test_batch_routing`
-asserts identical (server_idx, tool_idx) across all scenarios x algorithms.
+`Router.select` for every algorithm (all six: RAG / RerankRAG / PRAG /
+SONAR / SONAR-LB / SONAR-FT) — top-k ties break toward lower indices in
+both (stable argsort vs lax.top_k), invalid candidates (fewer than k
+tools on candidate servers) are excluded from both softmax mass and the
+final argmax, and the argmax tie-breaks toward the higher-ranked
+candidate.  `tests/test_batch_routing` asserts identical (server_idx,
+tool_idx) across all scenarios x algorithms, and the mesh-sharded engine
+(`core.mesh_routing`) extends the same guarantee across device shards.
 
 Telemetry can be shared ([n_servers, T] — one snapshot for the whole batch,
 the serving-gateway case) or per-query ([n_q, n_servers, T] — each query
@@ -87,6 +89,57 @@ class BatchDecisions:
 
     def __len__(self) -> int:
         return len(self.server_idx)
+
+
+def encode_for_index(
+    index, uses_prediction: bool, rerank: bool, queries: Sequence[str]
+) -> EncodedBatch:
+    """Encode query strings against an index's corpora.
+
+    The only per-query Python in any batched routing path (strings ->
+    term-count matrices); shared by `BatchRoutingEngine.encode` and the
+    mesh-sharded engine so both paths score byte-identical encodings.
+
+    Parameters
+    ----------
+    index : ToolIndex or TiledFleetIndex
+        Must expose ``server_corpus`` / ``tool_corpus`` with
+        ``encode_queries`` and ``vocab``.
+    uses_prediction : bool
+        Apply the deterministic LLM-preprocess stand-in
+        (`predict_tool_type`) before encoding (PRAG/SONAR family).
+    rerank : bool
+        Also encode the canonical-intent rerank queries (RerankRAG).
+    queries : Sequence[str]
+
+    Returns
+    -------
+    EncodedBatch
+        ``q_server`` [n_q, V_server], ``q_tool`` [n_q, V_tool] f32 term
+        counts, optional ``q_rerank`` [n_q, V_tool], and ``n`` = len(queries).
+    """
+    if uses_prediction:
+        qtexts = [predict_tool_type(q)[1] for q in queries]
+    else:
+        qtexts = list(queries)
+    if not qtexts:
+        v_s = len(index.server_corpus.vocab)
+        v_t = len(index.tool_corpus.vocab)
+        empty = lambda v: np.zeros((0, v), np.float32)  # noqa: E731
+        return EncodedBatch(
+            q_server=empty(v_s), q_tool=empty(v_t),
+            q_rerank=empty(v_t) if rerank else None, n=0,
+        )
+    q_server = index.server_corpus.encode_queries(qtexts)
+    q_tool = index.tool_corpus.encode_queries(qtexts)
+    q_rerank = None
+    if rerank:
+        q_rerank = index.tool_corpus.encode_queries(
+            [predict_tool_type(q)[1] for q in queries]
+        )
+    return EncodedBatch(
+        q_server=q_server, q_tool=q_tool, q_rerank=q_rerank, n=len(queries)
+    )
 
 
 # ---------------------------------------------------------------------------
@@ -282,27 +335,8 @@ class BatchRoutingEngine:
     # -- host side ----------------------------------------------------------
     def encode(self, queries: Sequence[str]) -> EncodedBatch:
         """Strings -> term-count matrices (the only per-query Python)."""
-        if self.uses_prediction:
-            qtexts = [predict_tool_type(q)[1] for q in queries]
-        else:
-            qtexts = list(queries)
-        if not qtexts:
-            v_s = len(self.index.server_corpus.vocab)
-            v_t = len(self.index.tool_corpus.vocab)
-            empty = lambda v: np.zeros((0, v), np.float32)
-            return EncodedBatch(
-                q_server=empty(v_s), q_tool=empty(v_t),
-                q_rerank=empty(v_t) if self.rerank else None, n=0,
-            )
-        q_server = self.index.server_corpus.encode_queries(qtexts)
-        q_tool = self.index.tool_corpus.encode_queries(qtexts)
-        q_rerank = None
-        if self.rerank:
-            q_rerank = self.index.tool_corpus.encode_queries(
-                [predict_tool_type(q)[1] for q in queries]
-            )
-        return EncodedBatch(
-            q_server=q_server, q_tool=q_tool, q_rerank=q_rerank, n=len(queries)
+        return encode_for_index(
+            self.index, self.uses_prediction, self.rerank, queries
         )
 
     def select_latency_ms(self) -> float:
@@ -316,15 +350,41 @@ class BatchRoutingEngine:
     def route(
         self,
         batch: EncodedBatch,
-        latency_hist: Optional[np.ndarray] = None,  # [n_servers, T] shared or
-                                                    # [n_q, n_servers, T]
-        server_load: Optional[np.ndarray] = None,   # [n_servers] shared or
-                                                    # [n_q, n_servers] rho
-        telemetry_age_s: Optional[np.ndarray] = None,  # [n_servers] shared or
-                                                       # [n_q, n_servers]
-        failed_mask: Optional[np.ndarray] = None,   # [n_servers] shared or
-                                                    # [n_q, n_servers] bool
+        latency_hist: Optional[np.ndarray] = None,
+        server_load: Optional[np.ndarray] = None,
+        telemetry_age_s: Optional[np.ndarray] = None,
+        failed_mask: Optional[np.ndarray] = None,
     ) -> BatchDecisions:
+        """Route an encoded batch through the jit pipeline.
+
+        Every telemetry input comes in two shapes: *shared* (one snapshot
+        for the whole batch — the serving-gateway case) or *per-query*
+        (each query routed at its own simulated time — the episode-driver
+        case).
+
+        Parameters
+        ----------
+        batch : EncodedBatch
+            From `encode` — reusable across calls (e.g. retry turns).
+        latency_hist : np.ndarray, optional
+            f32 [n_servers, T] or [n_q, n_servers, T], **ms**, most recent
+            sample last.
+        server_load : np.ndarray, optional
+            f32 [n_servers] or [n_q, n_servers] utilization rho
+            (dimensionless).
+        telemetry_age_s : np.ndarray, optional
+            f32 [n_servers] or [n_q, n_servers], **seconds** since last
+            fresh sample.
+        failed_mask : np.ndarray, optional
+            bool [n_servers] or [n_q, n_servers]; True excludes the
+            server from the argmax (SONAR-FT).
+
+        Returns
+        -------
+        BatchDecisions
+            Struct-of-arrays, each [n_q]; argmax-identical to a scalar
+            `Router.select` loop over the same inputs.  Deterministic.
+        """
         if batch.n == 0:
             z = np.zeros((0,), np.float32)
             return BatchDecisions(

@@ -81,6 +81,51 @@ def build_corpus(docs: Sequence[str], k1: float = K1, b: float = B) -> Bm25Corpu
     return Bm25Corpus(vocab=vocab, weights=weights, n_docs=n_docs)
 
 
+def build_corpus_tiled(
+    docs: Sequence[str], counts: Sequence[int], k1: float = K1, b: float = B
+) -> Bm25Corpus:
+    """Compile a *template-tiled* corpus: one weight row per template doc,
+    with corpus statistics (IDF, average length, ``n_docs``) computed as if
+    template ``i`` were replicated ``counts[i]`` times.
+
+    Scoring a query against row ``i`` therefore equals scoring it against
+    any of the ``counts[i]`` identical expanded documents — which is what
+    lets mega-fleet indexes (`core.mesh_routing.TiledFleetIndex`) route
+    10^5-10^6 identical-replica servers from a template-sized matmul.
+
+    Parameters
+    ----------
+    docs : Sequence[str]
+        The distinct template documents.
+    counts : Sequence[int]
+        Multiplicity of each template in the expanded corpus.
+    """
+    tokenized = [tokenize(d) for d in docs]
+    vocab: dict = {}
+    for toks in tokenized:
+        for t in toks:
+            if t not in vocab:
+                vocab[t] = len(vocab)
+    counts = np.asarray(counts, np.float64)
+    n_docs = float(counts.sum())
+    n_vocab = max(len(vocab), 1)
+
+    tf = np.zeros((len(docs), n_vocab), dtype=np.float32)
+    for i, toks in enumerate(tokenized):
+        for t in toks:
+            tf[i, vocab[t]] += 1.0
+
+    doc_len = tf.sum(axis=1)
+    avg_len = max(float((doc_len * counts).sum() / max(n_docs, 1.0)), 1e-6)
+    df = ((tf > 0) * counts[:, None]).sum(axis=0).astype(np.float32)
+    idf = np.log((n_docs - df + 0.5) / (df + 0.5) + 1.0)
+
+    norm = k1 * (1.0 - b + b * doc_len / avg_len)
+    weights = idf[None, :] * tf * (k1 + 1.0) / (tf + norm[:, None])
+    weights = np.where(tf > 0, weights, 0.0).astype(np.float32)
+    return Bm25Corpus(vocab=vocab, weights=weights, n_docs=int(n_docs))
+
+
 def bm25_scores(weights: jnp.ndarray, qcounts: jnp.ndarray) -> jnp.ndarray:
     """Score queries against the corpus: [n_docs, V] x [n_q, V] -> [n_q, n_docs].
 

@@ -1,0 +1,853 @@
+"""Mesh-sharded SONAR routing engine (the fleet axis distributed over devices).
+
+`BatchRoutingEngine` runs the whole routing decision on one device, which
+caps realistic fleets at ~10^3 servers.  This module partitions the
+**server axis** (and the tool axis, which is grouped by host server) across
+a 1-D jax device mesh (`launch.mesh.make_fleet_mesh`, axis ``"fleet"``) and
+runs a hierarchical two-stage selection:
+
+  1. each shard scores its server slice (stage-1 BM25) and extracts its
+     local top-``min(top_s, S_shard)`` servers;
+  2. a small all-gather merges the per-shard winners; every device takes
+     the same global top-s candidate set (Eq. 2);
+  3. each shard scores its tool slice (stage-2 BM25), masks tools outside
+     the candidate servers, computes its local QoS / load / staleness /
+     dead terms over its telemetry slice, and extracts its local
+     top-``min(top_k, T_shard)`` candidate tools with their metadata;
+  4. a second all-gather merges the per-shard candidate lists and the
+     fused softmax-expertise + QoS-fusion + argmax tail (the Pallas
+     ``select_fuse`` kernel, or its jnp oracle) runs on the merged set.
+
+Selection parity: the result is **bit-identical** to the single-device
+engine for every algorithm.  The global top-k is always a subset of the
+union of the per-shard top-ks, and the merge preserves the single-device
+tie-break order: per-shard candidate lists are value-sorted with ties
+broken toward the lower (local == global, shards are contiguous) index,
+and lists are concatenated in shard order, so "first max" over the merged
+axis is "lowest global index" over the full axis — exactly
+``lax.top_k``'s tie rule.  Because the final candidate values arrive in
+the same order as the single-device extraction, the Eq. 5 softmax
+reduction runs over the same floats in the same order, and the fused
+scores (Eq. 8) and argmax (Eq. 9) are reproduced bit-for-bit.
+``tests/test_mesh_routing.py`` property-tests the argmax identity across
+all six algorithms, and ``benchmarks/mega_fleet.py`` gates on it at 10^5+
+servers.
+
+Shard padding uses ``PAD_NEG`` (strictly below the ``NEG`` mask value), so
+pad servers/tools rank below every real entry — including dead-demoted
+ones — and never perturb the merge.
+
+Mega fleets (10^5-10^6 servers) use a `TiledFleetIndex`: servers are
+instances of a small set of template servers, BM25 weights are stored once
+per template (corpus statistics computed over the *expanded* fleet) and
+per-shard scores are gathered from one small template matmul instead of a
+fleet-sized one.  Telemetry can likewise stay compact: ``route`` accepts
+``telemetry_templates=(compact [M, T], template_map [n_servers])`` and
+computes QoS per template row, then gathers per server — identical scores
+(identical rows), no [n_servers, T] densification anywhere.
+
+With a multi-device mesh the per-shard stages run under ``shard_map``;
+without one (the CPU-test default) the same stage functions run on the
+shard-stacked arrays directly, so the emulated and distributed paths share
+every line of math.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import NamedTuple, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh
+
+from repro.core import bm25
+from repro.core.batch_routing import BatchDecisions, EncodedBatch, encode_for_index
+from repro.core.dataset import Server
+from repro.core.qos import (
+    QosParams,
+    load_penalty,
+    network_score,
+    staleness_discount,
+)
+from repro.core.routing import ALGORITHMS, RoutingConfig, ToolIndex
+from repro.kernels import ops
+from repro.kernels import ref as kref
+
+NEG = kref.NEG
+PAD_NEG = 2.0 * NEG   # pad sentinel: sorts strictly below every real score
+
+
+# ---------------------------------------------------------------------------
+# Tiled index for mega fleets
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class _DenseIndexView:
+    """ToolIndex-compatible view over densified tiled weights (feeds the
+    single-device `BatchRoutingEngine` in parity gates)."""
+
+    server_corpus: bm25.Bm25Corpus
+    tool_corpus: bm25.Bm25Corpus
+    tool_server: np.ndarray
+    n_tools: int
+
+
+class TiledFleetIndex:
+    """Template-tiled two-level BM25 index for 10^5-10^6-server fleets.
+
+    Parameters
+    ----------
+    templates : Sequence[Server]
+        The distinct server templates (descriptions + tools).
+    server_template : np.ndarray
+        int [n_servers] — template id of each fleet server.  Tools of
+        server ``i`` are its template's tools, in template order, so the
+        global tool axis stays grouped by host server (ascending), which
+        the shard plan requires.
+
+    BM25 corpus statistics (IDF, average doc length) are computed as if
+    every template doc were replicated its multiplicity — scoring against
+    the template weights row-equals scoring against the expanded corpus.
+    ``densify()`` materializes the expanded weights for single-device
+    parity runs; routing at scale never does.
+    """
+
+    is_tiled = True
+
+    def __init__(self, templates: Sequence[Server], server_template: np.ndarray):
+        self.templates = list(templates)
+        stpl = np.asarray(server_template, np.int64)
+        assert stpl.min() >= 0 and stpl.max() < len(self.templates)
+        self.n_servers = int(stpl.size)
+        self.server_doc_map = stpl.astype(np.int32)
+        counts = np.bincount(stpl, minlength=len(self.templates))
+        self.server_corpus = bm25.build_corpus_tiled(
+            [s.description for s in self.templates], counts
+        )
+
+        tool_docs, tool_tpl = [], []
+        for mi, s in enumerate(self.templates):
+            for t in s.tools:
+                tool_docs.append(f"{t.name.replace('_', ' ')} {t.description}")
+                tool_tpl.append(mi)
+        tool_tpl = np.asarray(tool_tpl, np.int64)
+        tools_per_tpl = np.bincount(tool_tpl, minlength=len(self.templates))
+        self.tool_corpus = bm25.build_corpus_tiled(
+            tool_docs, counts[tool_tpl]
+        )
+
+        n_per_server = tools_per_tpl[stpl]                     # [n_servers]
+        self.n_tools = int(n_per_server.sum())
+        self.tool_server = np.repeat(
+            np.arange(self.n_servers), n_per_server
+        ).astype(np.int32)
+        # doc id of each fleet tool: template's first tool doc + offset
+        doc0 = np.concatenate([[0], np.cumsum(tools_per_tpl)])[:-1]
+        starts = np.cumsum(n_per_server) - n_per_server
+        within = np.arange(self.n_tools) - np.repeat(starts, n_per_server)
+        self.tool_doc_map = (
+            np.repeat(doc0[stpl], n_per_server) + within
+        ).astype(np.int32)
+
+    def densify(self) -> _DenseIndexView:
+        """Expanded-weights view (for the single-device parity engine)."""
+        sc = bm25.Bm25Corpus(
+            vocab=self.server_corpus.vocab,
+            weights=self.server_corpus.weights[self.server_doc_map],
+            n_docs=self.n_servers,
+        )
+        tc = bm25.Bm25Corpus(
+            vocab=self.tool_corpus.vocab,
+            weights=self.tool_corpus.weights[self.tool_doc_map],
+            n_docs=self.n_tools,
+        )
+        return _DenseIndexView(
+            server_corpus=sc, tool_corpus=tc,
+            tool_server=self.tool_server, n_tools=self.n_tools,
+        )
+
+
+# ---------------------------------------------------------------------------
+# Shard plan (host-side, built once per engine)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class ShardPlan:
+    """Static partition of the server/tool axes into `n_shards` slices.
+
+    Servers are split contiguously ([j*s_pad, (j+1)*s_pad)); each shard's
+    tools are the (contiguous, because `tool_server` is non-decreasing)
+    block hosted on its servers.  Both axes are padded to a common
+    per-shard size; pad entries carry valid=False and score `PAD_NEG`.
+    """
+
+    n_shards: int
+    s_pad: int                    # servers per shard (padded)
+    t_pad: int                    # tools per shard (padded)
+    server_gid: np.ndarray        # [J, s_pad] i32 global server id (clipped)
+    server_valid: np.ndarray      # [J, s_pad] bool
+    tool_gid: np.ndarray          # [J, t_pad] i32 global tool id (clipped)
+    tool_valid: np.ndarray        # [J, t_pad] bool
+    tool_host_global: np.ndarray  # [J, t_pad] i32 host server (global)
+    tool_host_local: np.ndarray   # [J, t_pad] i32 host row in shard slice
+
+
+def make_shard_plan(
+    tool_server: np.ndarray, n_servers: int, n_shards: int
+) -> ShardPlan:
+    tool_server = np.asarray(tool_server, np.int64)
+    assert np.all(np.diff(tool_server) >= 0), "tools must be grouped by server"
+    n_shards = max(1, min(int(n_shards), int(n_servers)))
+    s_pad = -(-n_servers // n_shards)
+    j = np.arange(n_shards)
+    gid = j[:, None] * s_pad + np.arange(s_pad)[None, :]
+    server_valid = gid < n_servers
+    server_gid = np.minimum(gid, n_servers - 1).astype(np.int32)
+
+    t_lo = np.searchsorted(tool_server, j * s_pad, side="left")
+    t_hi = np.searchsorted(
+        tool_server, np.minimum((j + 1) * s_pad, n_servers), side="left"
+    )
+    t_pad = max(int((t_hi - t_lo).max()), 1)
+    tg = t_lo[:, None] + np.arange(t_pad)[None, :]
+    tool_valid = tg < t_hi[:, None]
+    tool_gid = np.minimum(tg, len(tool_server) - 1).astype(np.int32)
+    tool_host_global = tool_server[tool_gid].astype(np.int32)
+    tool_host_local = np.clip(
+        tool_host_global - (j * s_pad)[:, None], 0, s_pad - 1
+    ).astype(np.int32)
+    return ShardPlan(
+        n_shards=n_shards, s_pad=int(s_pad), t_pad=int(t_pad),
+        server_gid=server_gid, server_valid=server_valid,
+        tool_gid=tool_gid, tool_valid=tool_valid,
+        tool_host_global=tool_host_global, tool_host_local=tool_host_local,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Static (hashable) pipeline configuration
+# ---------------------------------------------------------------------------
+
+class _StaticCfg(NamedTuple):
+    n_shards: int
+    top_s: int
+    top_k: int
+    n_servers: int
+    n_tools: int
+    s_keep: int                   # per-shard stage-1 candidates
+    k_keep: int                   # per-shard stage-2 candidates
+    alpha: float
+    beta: float
+    gamma: float
+    load_knee: float
+    load_sharp: float
+    temp: float
+    stale_half_life: float
+    use_network: bool
+    use_load: bool
+    use_staleness: bool
+    use_failover: bool
+    rerank: bool
+    use_kernels: bool
+    interpret: Optional[bool]
+    qos_params: QosParams
+
+
+# ---------------------------------------------------------------------------
+# Per-shard stages.  Every function takes shard-stacked arrays [J, ...]; the
+# emulated path calls them with the full stack, the mesh path calls them
+# under shard_map with J=1 blocks — one implementation, two executions.
+# ---------------------------------------------------------------------------
+
+def _bm25_2d(q: jax.Array, w: jax.Array, sc: _StaticCfg) -> jax.Array:
+    if sc.use_kernels:
+        return ops.bm25_scores(q, w, interpret=sc.interpret)
+    return q @ w.T
+
+
+def _qos_2d(lat: jax.Array, sc: _StaticCfg) -> jax.Array:
+    if sc.use_kernels:
+        return ops.qos_scores(lat, sc.qos_params, interpret=sc.interpret)
+    return network_score(lat, sc.qos_params)
+
+
+def _stage1_stacked(d: dict, sc: _StaticCfg) -> tuple:
+    """Shard-local stage 1: server scores + local top-s.
+
+    Returns (values [J, n_q, s_keep], global server ids [J, n_q, s_keep]).
+    """
+    if "s_pre" in d:
+        s = d["s_pre"]                                   # [J, n_q, s_pad]
+    else:
+        w = d["w_server"]                                # [J, s_pad, V]
+        if sc.use_kernels:
+            J, S, V = w.shape
+            s = _bm25_2d(d["q_server"], w.reshape(J * S, V), sc)
+            s = s.reshape(-1, J, S).transpose(1, 0, 2)
+        else:
+            s = jnp.einsum("qv,jsv->jqs", d["q_server"], w)
+    if sc.use_failover and "dead" in d:
+        s = jnp.where(d["dead"] > 0.0, NEG, s)           # [J, B, s_pad] bcast
+    s = jnp.where(d["server_valid"][:, None, :], s, PAD_NEG)
+    v, li = jax.lax.top_k(s, sc.s_keep)                  # [J, n_q, s_keep]
+    gid = jnp.take_along_axis(
+        jnp.broadcast_to(d["server_gid"][:, None, :], s.shape), li, axis=-1
+    )
+    return v, gid
+
+
+def _stage2_stacked(d: dict, cand_gids: jax.Array, sc: _StaticCfg) -> tuple:
+    """Shard-local stage 2: tool scores masked to the global candidate
+    servers, QoS/load/staleness/dead terms over the shard's telemetry
+    slice, local top-k extraction with metadata.
+
+    Returns six [J, n_q, k_keep] arrays: (sel, val, qos, load, dead, gid).
+    """
+    if "t_pre" in d:
+        t = d["t_pre"]                                   # [J, n_q, t_pad]
+    else:
+        w = d["w_tool"]                                  # [J, t_pad, V]
+        if sc.use_kernels:
+            J, T, V = w.shape
+            t = _bm25_2d(d["q_tool"], w.reshape(J * T, V), sc)
+            t = t.reshape(-1, J, T).transpose(1, 0, 2)
+        else:
+            t = jnp.einsum("qv,jtv->jqt", d["q_tool"], w)
+    J, n_q, t_pad = t.shape
+
+    in_cand = jnp.any(
+        d["tool_host_global"][:, None, :, None]
+        == cand_gids[None, :, None, :],
+        axis=-1,
+    )                                                     # [J, n_q, t_pad]
+    sel = jnp.where(in_cand, t, NEG)
+    sel = jnp.where(d["tool_valid"][:, None, :], sel, PAD_NEG)
+
+    if sc.rerank:
+        if "val_pre" in d:
+            val_full = d["val_pre"]
+        elif sc.use_kernels:
+            w = d["w_tool"]
+            val_full = _bm25_2d(
+                d["q_rerank"], w.reshape(J * t_pad, -1), sc
+            ).reshape(-1, J, t_pad).transpose(1, 0, 2)
+        else:
+            val_full = jnp.einsum("qv,jtv->jqt", d["q_rerank"], d["w_tool"])
+    else:
+        val_full = sel
+
+    host_l = d["tool_host_local"]                         # [J, t_pad]
+
+    def per_tool(per_server):                             # [J, B, s_pad] ->
+        B = per_server.shape[1]                           # [J, B, t_pad]
+        idx = jnp.broadcast_to(host_l[:, None, :], (J, B, t_pad))
+        return jnp.take_along_axis(per_server, idx, axis=-1)
+
+    net_active = sc.use_network and ("lat" in d or "qos_pre" in d)
+    if net_active:
+        if "qos_pre" in d:
+            n_server = d["qos_pre"]                       # [J, B, s_pad]
+        elif d["lat"].ndim == 4:                          # per-query windows
+            Jl, B, S, T = d["lat"].shape
+            n_server = _qos_2d(d["lat"].reshape(Jl * B * S, T), sc)
+            n_server = n_server.reshape(Jl, B, S)
+        else:                                             # shared snapshot
+            Jl, S, T = d["lat"].shape
+            n_server = _qos_2d(d["lat"].reshape(Jl * S, T), sc)
+            n_server = n_server.reshape(Jl, 1, S)
+        if sc.use_staleness and "age" in d:
+            n_server = n_server * staleness_discount(
+                d["age"], sc.stale_half_life
+            )
+        tool_qos = per_tool(n_server)
+    else:
+        tool_qos = jnp.zeros((J, 1, t_pad), jnp.float32)
+
+    if sc.use_load and "load" in d:
+        pen = load_penalty(d["load"], sc.load_knee, sc.load_sharp)
+        tool_load = per_tool(pen)
+    else:
+        tool_load = jnp.zeros((J, 1, t_pad), jnp.float32)
+
+    if sc.use_failover and "dead" in d:
+        tool_dead = per_tool(d["dead"])
+    else:
+        tool_dead = jnp.zeros((J, 1, t_pad), jnp.float32)
+
+    v, li = jax.lax.top_k(sel, sc.k_keep)                 # [J, n_q, k_keep]
+
+    def gather(x):                                        # [J, B, t_pad]
+        x = jnp.broadcast_to(x, (J, n_q, t_pad))
+        return jnp.take_along_axis(x, li, axis=-1)
+
+    gid = jnp.take_along_axis(
+        jnp.broadcast_to(d["tool_gid"][:, None, :], (J, n_q, t_pad)),
+        li, axis=-1,
+    )
+    return v, gather(val_full), gather(tool_qos), gather(tool_load), \
+        gather(tool_dead), gid
+
+
+def _packed(stage_fn, layout: tuple, sc: _StaticCfg, *extra):
+    """Positional-args adapter so optional inputs can run under shard_map
+    (which needs one PartitionSpec per positional argument)."""
+
+    def fn(*arrays):
+        return stage_fn(dict(zip(layout, arrays)), *extra, sc)
+
+    return fn
+
+
+# Logical-axis sharding rules (resolved through nn.sharding.logical_to_spec,
+# which enforces the single-use and divisibility invariants): "shard" is the
+# only sharded logical dim, mapped onto the 1-D "fleet" mesh axis; every
+# other dim replicates.
+FLEET_RULES = {"shard": ("fleet",)}
+
+
+def _specs_for(mesh: Mesh, layouts, arrays):
+    from repro.nn.sharding import logical_to_spec
+
+    return tuple(
+        logical_to_spec(names, a.shape, mesh, FLEET_RULES)
+        for names, a in zip(layouts, arrays)
+    )
+
+
+def _run_stage(fn, mesh: Optional[Mesh], arrays, layouts, n_out: int):
+    """Run a per-shard stage: directly on the shard-stacked arrays (no
+    mesh), or under shard_map with specs derived from the logical layouts
+    (a real mesh).  `layouts` holds one tuple of logical dim names per
+    array, e.g. ("shard", None, None)."""
+    if mesh is None:
+        return fn(*arrays)
+    from repro.nn.sharding import logical_to_spec
+
+    out_spec = logical_to_spec(
+        ("shard", None, None), (mesh.devices.size, 1, 1), mesh, FLEET_RULES
+    )
+    return shard_map(
+        fn, mesh=mesh, in_specs=_specs_for(mesh, layouts, arrays),
+        out_specs=tuple([out_spec] * n_out), check_rep=False,
+    )(*arrays)
+
+
+def _flatten_shards(x: jax.Array) -> jax.Array:
+    """[J, n_q, K] -> [n_q, J*K], shard blocks in shard (= global) order."""
+    J, n_q, K = x.shape
+    return jnp.transpose(x, (1, 0, 2)).reshape(n_q, J * K)
+
+
+# ---------------------------------------------------------------------------
+# The jit pipeline
+# ---------------------------------------------------------------------------
+
+# logical layouts (dim names fed to nn.sharding.logical_to_spec)
+_REP2 = (None, None)
+_SH2 = ("shard", None)
+_SH3 = ("shard", None, None)
+_SH4 = ("shard", None, None, None)
+
+
+@functools.partial(jax.jit, static_argnames=("mesh", "sc"))
+def _route_sharded(dyn: dict, *, mesh: Optional[Mesh], sc: _StaticCfg):
+    """Hierarchical sharded routing.  `dyn` key presence selects the input
+    mode (dense vs tiled weights/telemetry, which optional vectors are
+    supplied) — a different key set is a different pytree structure, so jit
+    re-traces exactly when the mode changes."""
+    # -- tiled template scoring (replicated small matmuls + gathers) --
+    pre: dict = {}
+    if "server_doc_map" in dyn:
+        s_full = _bm25_2d(dyn["q_server"], dyn["w_server_t"], sc)
+        pre["s_pre"] = jnp.transpose(
+            jnp.take(s_full, dyn["server_doc_map"], axis=1), (1, 0, 2)
+        )
+    if "tool_doc_map" in dyn:
+        t_full = _bm25_2d(dyn["q_tool"], dyn["w_tool_t"], sc)
+        pre["t_pre"] = jnp.transpose(
+            jnp.take(t_full, dyn["tool_doc_map"], axis=1), (1, 0, 2)
+        )
+        if sc.rerank:
+            v_full = _bm25_2d(dyn["q_rerank"], dyn["w_tool_t"], sc)
+            pre["val_pre"] = jnp.transpose(
+                jnp.take(v_full, dyn["tool_doc_map"], axis=1), (1, 0, 2)
+            )
+    if "lat_t" in dyn:
+        nt = _qos_2d(dyn["lat_t"], sc)[None, :]            # [1, M_t]
+        pre["qos_pre"] = jnp.transpose(
+            jnp.take(nt, dyn["tel_map"], axis=1), (1, 0, 2)
+        )
+
+    # -- stage 1: shard-local server top-s --
+    layout1, specs1 = [], []
+
+    def add1(name, spec):
+        if pre.get(name, dyn.get(name)) is not None:
+            layout1.append(name)
+            specs1.append(spec)
+
+    if "s_pre" in pre:
+        add1("s_pre", _SH3)
+    else:
+        add1("q_server", _REP2)
+        add1("w_server", _SH3)
+    add1("server_gid", _SH2)
+    add1("server_valid", _SH2)
+    add1("dead", _SH3)
+    arrays1 = [pre.get(n, dyn.get(n)) for n in layout1]
+    f1 = _packed(_stage1_stacked, tuple(layout1), sc)
+    v_sh, gid_sh = _run_stage(f1, mesh, arrays1, specs1, 2)
+
+    # -- merge 1: the small all-gather + global top-s (Eq. 2) --
+    top_s = min(sc.top_s, sc.n_servers)
+    _, pos = jax.lax.top_k(_flatten_shards(v_sh), top_s)
+    cand_gids = jnp.take_along_axis(_flatten_shards(gid_sh), pos, axis=-1)
+
+    # -- stage 2: shard-local tool candidates + telemetry terms --
+    layout2, specs2 = [], []
+
+    def add2(name, spec):
+        val = pre.get(name, dyn.get(name))
+        if val is not None:
+            layout2.append(name)
+            specs2.append(spec)
+
+    if "t_pre" in pre:
+        add2("t_pre", _SH3)
+    else:
+        add2("q_tool", _REP2)
+        add2("w_tool", _SH3)
+    if sc.rerank and "t_pre" not in pre:
+        add2("q_rerank", _REP2)
+    if "val_pre" in pre:
+        add2("val_pre", _SH3)
+    add2("tool_host_global", _SH2)
+    add2("tool_host_local", _SH2)
+    add2("tool_gid", _SH2)
+    add2("tool_valid", _SH2)
+    if "qos_pre" in pre:
+        add2("qos_pre", _SH3)
+    elif "lat" in dyn:
+        add2("lat", _SH4 if dyn["lat"].ndim == 4 else _SH3)
+    add2("load", _SH3)
+    add2("age", _SH3)
+    add2("dead", _SH3)
+    arrays2 = [pre.get(n, dyn.get(n)) for n in layout2]
+
+    def f2(*arrs):
+        d = dict(zip(tuple(layout2), arrs))
+        return _stage2_stacked(d, cand_gids, sc)
+
+    if mesh is not None:
+        # candidate set is replicated input to every shard
+        layout2_m = tuple(layout2) + ("cand_gids",)
+        specs2_m = list(specs2) + [_REP2]
+
+        def f2m(*arrs):
+            d = dict(zip(layout2_m, arrs))
+            return _stage2_stacked(d, d["cand_gids"], sc)
+
+        outs = _run_stage(f2m, mesh, arrays2 + [cand_gids], specs2_m, 6)
+    else:
+        outs = f2(*arrays2)
+    sel_c, val_c, qos_c, load_c, dead_c, gid_c = outs
+
+    # -- merge 2: all-gather candidates, fused softmax/fusion/argmax --
+    sel = _flatten_shards(sel_c)
+    val = _flatten_shards(val_c)
+    qos = _flatten_shards(qos_c)
+    load = _flatten_shards(load_c)
+    dead = _flatten_shards(dead_c)
+    gid = _flatten_shards(gid_c)
+
+    net_active = sc.use_network and (
+        "lat" in dyn or "lat_t" in dyn
+    )
+    if net_active:
+        eff_alpha, eff_beta = sc.alpha, sc.beta
+    else:
+        eff_alpha, eff_beta = 1.0, 0.0
+    eff_gamma = sc.gamma if (sc.use_load and "load" in dyn) else 0.0
+    dead_arg = dead if (sc.use_failover and "dead" in dyn) else None
+
+    k_final = min(sc.top_k, sc.n_tools)
+    if sc.use_kernels:
+        pos, c, n, s = ops.fused_select(
+            sel, val, qos, load, dead_arg,
+            k=k_final, alpha=eff_alpha, beta=eff_beta, gamma=eff_gamma,
+            temp=sc.temp, interpret=sc.interpret,
+        )
+    else:
+        pos, c, n, s = kref.fused_select_ref(
+            sel, val, qos, load, dead_arg,
+            k=k_final, alpha=eff_alpha, beta=eff_beta, gamma=eff_gamma,
+            temp=sc.temp,
+        )
+    tool_idx = jnp.take_along_axis(gid, pos[:, None], axis=-1)[:, 0]
+    server_idx = jnp.take(dyn["tool_server"], tool_idx)
+    return server_idx, tool_idx, c, n, s
+
+
+# ---------------------------------------------------------------------------
+# Engine
+# ---------------------------------------------------------------------------
+
+class ShardedRoutingEngine:
+    """Mesh-sharded drop-in for `BatchRoutingEngine` at mega-fleet scale.
+
+    Parameters
+    ----------
+    servers : Sequence[Server], optional
+        The fleet (ignored when `index` is given).
+    cfg : RoutingConfig
+    algo : str
+        One of the six registered algorithms (``rag`` .. ``sonar_ft``).
+    n_shards : int
+        Server-axis partitions.  Clamped to ``n_servers``.
+    mesh : Mesh | "auto" | None
+        A 1-D device mesh with axis ``"fleet"`` of size `n_shards` runs
+        the per-shard stages under ``shard_map``.  ``"auto"`` builds one
+        via `launch.mesh.make_fleet_mesh` when enough devices exist, else
+        falls back to the (bit-identical) single-device emulation.  None
+        always emulates.
+    index : ToolIndex | TiledFleetIndex, optional
+        Pre-built index; a `TiledFleetIndex` enables template-gathered
+        scoring (no fleet-sized weight matrices anywhere).
+    """
+
+    def __init__(
+        self,
+        servers: Optional[Sequence[Server]] = None,
+        cfg: RoutingConfig = RoutingConfig(),
+        algo: str = "sonar",
+        n_shards: int = 1,
+        mesh=None,
+        use_kernels: Optional[bool] = None,
+        interpret: Optional[bool] = None,
+        index=None,
+    ):
+        if use_kernels is None:
+            use_kernels = jax.default_backend() == "tpu"
+        self.cfg = cfg
+        self.algo = algo.lower().replace("-", "_")
+        router_cls = ALGORITHMS[self.algo]
+        self.uses_prediction = router_cls.uses_prediction
+        self.uses_network = router_cls.uses_network
+        self.uses_load = router_cls.uses_load
+        self.uses_staleness = router_cls.uses_staleness
+        self.uses_failover = router_cls.uses_failover
+        self.rerank = router_cls.rerank
+        self.use_kernels = use_kernels
+        self.interpret = interpret
+        if index is None:
+            index = ToolIndex(servers)
+        self.index = index
+        self.tiled = bool(getattr(index, "is_tiled", False))
+        self.n_servers = (
+            index.n_servers if self.tiled else len(index.servers)
+        )
+        self.plan = make_shard_plan(
+            np.asarray(index.tool_server), self.n_servers, n_shards
+        )
+        self.mesh = self._resolve_mesh(mesh)
+
+        # device-resident static arrays
+        self._tool_server = jnp.asarray(index.tool_server, jnp.int32)
+        self._server_gid = jnp.asarray(self.plan.server_gid)
+        self._server_valid = jnp.asarray(self.plan.server_valid)
+        self._tool_gid = jnp.asarray(self.plan.tool_gid)
+        self._tool_valid = jnp.asarray(self.plan.tool_valid)
+        self._tool_host_g = jnp.asarray(self.plan.tool_host_global)
+        self._tool_host_l = jnp.asarray(self.plan.tool_host_local)
+        if self.tiled:
+            self._w_server_t = jnp.asarray(index.server_corpus.weights)
+            self._w_tool_t = jnp.asarray(index.tool_corpus.weights)
+            self._server_doc_sh = jnp.asarray(
+                index.server_doc_map[self.plan.server_gid]
+            )
+            self._tool_doc_sh = jnp.asarray(
+                index.tool_doc_map[self.plan.tool_gid]
+            )
+        else:
+            ws = np.asarray(index.server_corpus.weights)
+            wt = np.asarray(index.tool_corpus.weights)
+            self._w_server_sh = jnp.asarray(ws[self.plan.server_gid])
+            self._w_tool_sh = jnp.asarray(wt[self.plan.tool_gid])
+
+        self._sc = _StaticCfg(
+            n_shards=self.plan.n_shards,
+            top_s=cfg.top_s, top_k=cfg.top_k,
+            n_servers=self.n_servers, n_tools=int(index.n_tools),
+            s_keep=min(cfg.top_s, self.plan.s_pad),
+            k_keep=min(cfg.top_k, self.plan.t_pad),
+            alpha=cfg.alpha, beta=cfg.beta, gamma=cfg.gamma,
+            load_knee=cfg.load_knee, load_sharp=cfg.load_sharp,
+            temp=cfg.expertise_temp,
+            stale_half_life=cfg.stale_half_life_s,
+            use_network=self.uses_network, use_load=self.uses_load,
+            use_staleness=self.uses_staleness,
+            use_failover=self.uses_failover,
+            rerank=self.rerank, use_kernels=use_kernels,
+            interpret=interpret, qos_params=cfg.qos,
+        )
+
+    def _resolve_mesh(self, mesh):
+        if mesh is None:
+            return None
+        if mesh == "auto":
+            from repro.launch.mesh import make_fleet_mesh
+
+            if (
+                self.plan.n_shards > 1
+                and len(jax.devices()) >= self.plan.n_shards
+            ):
+                return make_fleet_mesh(self.plan.n_shards)
+            return None
+        assert mesh.devices.size == self.plan.n_shards, (
+            f"mesh has {mesh.devices.size} devices, plan has "
+            f"{self.plan.n_shards} shards"
+        )
+        return mesh
+
+    # -- host side ----------------------------------------------------------
+    def encode(self, queries: Sequence[str]) -> EncodedBatch:
+        """Strings -> term-count matrices (see `BatchRoutingEngine.encode`)."""
+        return encode_for_index(
+            self.index, self.uses_prediction, self.rerank, queries
+        )
+
+    def select_latency_ms(self) -> float:
+        from repro.core.routing import BM25_STAGE_MS, LLM_CALL_MS, LLM_RERANK_MS
+
+        sl = LLM_CALL_MS + 2 * BM25_STAGE_MS
+        if self.rerank:
+            sl += LLM_RERANK_MS
+        return sl
+
+    # -- sharding helpers ---------------------------------------------------
+    def _shard_vec(self, x) -> jax.Array:
+        """[n_servers] or [n_q, n_servers] -> [J, 1|n_q, s_pad]."""
+        x = jnp.asarray(x, jnp.float32)
+        if x.ndim == 1:
+            x = x[None]
+        return jnp.transpose(jnp.take(x, self._server_gid, axis=1), (1, 0, 2))
+
+    def _shard_hist(self, lat) -> jax.Array:
+        """[n_servers, T] -> [J, s_pad, T]; [n_q, n_servers, T] ->
+        [J, n_q, s_pad, T]."""
+        lat = jnp.asarray(lat, jnp.float32)
+        if lat.ndim == 2:
+            return jnp.take(lat, self._server_gid, axis=0)
+        return jnp.transpose(
+            jnp.take(lat, self._server_gid, axis=1), (1, 0, 2, 3)
+        )
+
+    # -- device side --------------------------------------------------------
+    def route(
+        self,
+        batch: EncodedBatch,
+        latency_hist: Optional[np.ndarray] = None,
+        server_load: Optional[np.ndarray] = None,
+        telemetry_age_s: Optional[np.ndarray] = None,
+        failed_mask: Optional[np.ndarray] = None,
+        *,
+        telemetry_templates: Optional[tuple] = None,
+    ) -> BatchDecisions:
+        """Route an encoded batch across the sharded fleet.
+
+        Parameters mirror `BatchRoutingEngine.route`; additionally
+        ``telemetry_templates=(compact [M, T], template_map [n_servers])``
+        supplies telemetry in template-compact form — QoS is computed per
+        template row and gathered per server, identical to densified
+        scoring but without materializing [n_servers, T].
+        """
+        if batch.n == 0:
+            z = np.zeros((0,), np.float32)
+            return BatchDecisions(
+                server_idx=z.astype(np.int32), tool_idx=z.astype(np.int32),
+                expertise=z, network=z, fused=z,
+                select_latency_ms=self.select_latency_ms(),
+            )
+        dyn: dict = {
+            "tool_server": self._tool_server,
+            "server_gid": self._server_gid,
+            "server_valid": self._server_valid,
+            "tool_gid": self._tool_gid,
+            "tool_valid": self._tool_valid,
+            "tool_host_global": self._tool_host_g,
+            "tool_host_local": self._tool_host_l,
+            "q_server": jnp.asarray(batch.q_server),
+            "q_tool": jnp.asarray(batch.q_tool),
+        }
+        if self.rerank:
+            dyn["q_rerank"] = jnp.asarray(batch.q_rerank)
+        if self.tiled:
+            dyn["w_server_t"] = self._w_server_t
+            dyn["w_tool_t"] = self._w_tool_t
+            dyn["server_doc_map"] = self._server_doc_sh
+            dyn["tool_doc_map"] = self._tool_doc_sh
+        else:
+            dyn["w_server"] = self._w_server_sh
+            dyn["w_tool"] = self._w_tool_sh
+        if self.uses_network:
+            if telemetry_templates is not None:
+                compact, tmap = telemetry_templates
+                dyn["lat_t"] = jnp.asarray(compact, jnp.float32)
+                dyn["tel_map"] = jnp.asarray(
+                    np.asarray(tmap, np.int32)[self.plan.server_gid]
+                )
+            elif latency_hist is not None:
+                dyn["lat"] = self._shard_hist(latency_hist)
+        if (
+            self.uses_load
+            and server_load is not None
+            and self.cfg.gamma != 0.0
+        ):
+            dyn["load"] = self._shard_vec(server_load)
+        if self.uses_staleness and telemetry_age_s is not None:
+            dyn["age"] = self._shard_vec(telemetry_age_s)
+        if self.uses_failover and failed_mask is not None:
+            dyn["dead"] = self._shard_vec(
+                np.asarray(failed_mask, np.float32)
+            )
+        server_idx, tool_idx, c, n, s = _route_sharded(
+            dyn, mesh=self.mesh, sc=self._sc
+        )
+        return BatchDecisions(
+            server_idx=np.asarray(server_idx, np.int32),
+            tool_idx=np.asarray(tool_idx, np.int32),
+            expertise=np.asarray(c), network=np.asarray(n),
+            fused=np.asarray(s),
+            select_latency_ms=self.select_latency_ms(),
+        )
+
+    def route_texts(
+        self,
+        queries: Sequence[str],
+        latency_hist: Optional[np.ndarray] = None,
+        server_load: Optional[np.ndarray] = None,
+        telemetry_age_s: Optional[np.ndarray] = None,
+        failed_mask: Optional[np.ndarray] = None,
+        *,
+        telemetry_templates: Optional[tuple] = None,
+    ) -> BatchDecisions:
+        return self.route(
+            self.encode(queries), latency_hist, server_load,
+            telemetry_age_s, failed_mask,
+            telemetry_templates=telemetry_templates,
+        )
+
+
+def make_sharded_engine(
+    algo: str,
+    servers: Optional[Sequence[Server]] = None,
+    cfg: RoutingConfig = RoutingConfig(),
+    n_shards: int = 1,
+    **kw,
+) -> ShardedRoutingEngine:
+    return ShardedRoutingEngine(
+        servers, cfg, algo=algo, n_shards=n_shards, **kw
+    )

@@ -194,9 +194,41 @@ SCENARIOS: dict = {
 # ---------------------------------------------------------------------------
 
 class NetMCPPlatform:
+    """Server pool x network environment x dual-mode execution.
+
+    Parameters
+    ----------
+    servers : Sequence[Server]
+        The fleet.  May be ``None`` in template-tiled mode (mega fleets
+        never materialize per-server objects) — pass `template_map` and
+        `profiles` instead.
+    scenario : str
+        Key into `SCENARIOS`; ignored when `profiles` is given.
+    seed : int
+        Trace-synthesis PRNG seed.  The same (seed, profiles, horizon)
+        triple always yields byte-identical traces (memoized process-wide).
+    horizon_s, dt_s : float
+        Trace horizon and observation tick, in **seconds** (default 24 h at
+        10 s/tick -> 8640 samples).  All latency values are **ms**.
+    history_window : int
+        Samples per observed-history window served to routers.
+    profiles : list[LatencyProfile], optional
+        Per-server profiles — or, in tiled mode, the per-*template*
+        palette.
+    template_map : np.ndarray, optional
+        int [n_servers] template id per server.  Enables **tiled mode**:
+        ground-truth traces are synthesized once per template
+        ([n_templates, T], not [n_servers, T]) and densified lazily;
+        feed-forward observations copy-on-write only the touched servers'
+        rows.  This is what lets 10^5-10^6-server fleets run in memory.
+        Chaos injection is not supported in tiled mode.
+    chaos : repro.chaos.ChaosSchedule, optional
+        Fault overlay (duck-typed to avoid a core -> chaos import cycle).
+    """
+
     def __init__(
         self,
-        servers: Sequence[Server],
+        servers: Optional[Sequence[Server]] = None,
         scenario: str = "ideal",
         seed: int = 0,
         horizon_s: float = L.DEFAULT_HORIZON_S,
@@ -207,9 +239,21 @@ class NetMCPPlatform:
         profiles: Optional[list] = None,
         chaos=None,   # Optional[repro.chaos.ChaosSchedule] (duck-typed to
                       # avoid a core -> chaos import cycle)
+        template_map: Optional[np.ndarray] = None,
     ):
         assert mode in ("sim", "live")
-        self.servers = list(servers)
+        self.servers = list(servers) if servers is not None else None
+        self.template_map = (
+            None if template_map is None
+            else np.asarray(template_map, np.int64)
+        )
+        if self.template_map is not None:
+            assert profiles is not None, "tiled mode needs a profile palette"
+            assert chaos is None, "chaos injection needs dense traces"
+            self.n_servers = int(self.template_map.size)
+        else:
+            assert servers is not None
+            self.n_servers = len(self.servers)
         self.scenario = scenario
         self.mode = mode
         self.dt_s = dt_s
@@ -221,14 +265,20 @@ class NetMCPPlatform:
         self.profiles = profiles
         packed = L.pack_profiles(profiles)
         n_steps = L.trace_horizon_steps(horizon_s, dt_s)
-        # [n_servers, T] ms — ground-truth network state (memoized per
-        # (seed, profiles, horizon); the returned array is read-only)
+        # [n_servers, T] ms (or [n_templates, T] in tiled mode) —
+        # ground-truth network state (memoized per (seed, profiles,
+        # horizon); the returned array is read-only)
         self.traces = L.generate_traces_cached(seed, packed, n_steps, dt_s)
         self.chaos = chaos
+        # tiled mode: feed-forward writes copy-on-write per-server rows
+        self._overlay: dict = {}
+        # bumped on every feed-forward write; consumers (the traffic
+        # simulator) key their per-tick window caches on it
+        self.obs_version = 0
         if chaos is not None:
-            assert chaos.down.shape == (len(self.servers), n_steps), (
+            assert chaos.down.shape == (self.n_servers, n_steps), (
                 f"chaos schedule shape {chaos.down.shape} != "
-                f"({len(self.servers)}, {n_steps})"
+                f"({self.n_servers}, {n_steps})"
             )
             # fault-injected ground truth: downtime pins at the offline
             # severity, degradation multiplies the base trace
@@ -242,17 +292,57 @@ class NetMCPPlatform:
         self.n_steps = n_steps
 
     # -- network-state queries ------------------------------------------------
-    def latency_window(self, t_idx: int, window: Optional[int] = None) -> np.ndarray:
-        """Observed latency history up to (and including) tick t_idx.
-        Left-padded with the first sample when t_idx+1 < window so the shape
-        is static — this is what routers consume."""
-        w = window or self.history_window
-        t_idx = int(np.clip(t_idx, 0, self.n_steps - 1))
+    def _window_of(self, arr: np.ndarray, t_idx: int, w: int) -> np.ndarray:
+        """Rows' history up to (and including) tick t_idx, left-padded with
+        the first sample when t_idx+1 < w so the shape is static."""
         lo = t_idx + 1 - w
         if lo >= 0:
-            return self.observed[:, lo : t_idx + 1]
-        pad = np.repeat(self.observed[:, :1], -lo, axis=1)
-        return np.concatenate([pad, self.observed[:, : t_idx + 1]], axis=1)
+            return arr[:, lo : t_idx + 1]
+        pad = np.repeat(arr[:, :1], -lo, axis=1)
+        return np.concatenate([pad, arr[:, : t_idx + 1]], axis=1)
+
+    def latency_window(self, t_idx: int, window: Optional[int] = None) -> np.ndarray:
+        """Observed latency history up to (and including) tick t_idx ->
+        [n_servers, window] ms — this is what routers consume.  In tiled
+        mode the window is densified from the template rows on demand
+        (overlaying the copy-on-write feed-forward rows)."""
+        w = window or self.history_window
+        t_idx = int(np.clip(t_idx, 0, self.n_steps - 1))
+        if self.template_map is None:
+            return self._window_of(self.observed, t_idx, w)
+        out = self._window_of(self.observed, t_idx, w)[self.template_map]
+        if self._overlay:
+            idx = np.fromiter(self._overlay.keys(), np.int64)
+            # slice each COW row to the window *before* stacking — stacking
+            # full-horizon rows would re-pay O(touched * T) per tick
+            lo = t_idx + 1 - w
+            rows = np.stack(
+                [self._overlay[s][max(lo, 0) : t_idx + 1] for s in idx]
+            )
+            if lo < 0:
+                rows = np.concatenate(
+                    [np.repeat(rows[:, :1], -lo, axis=1), rows], axis=1
+                )
+            out[idx] = rows
+        return out
+
+    def compact_window(
+        self, t_idx: int, window: Optional[int] = None
+    ) -> tuple:
+        """Tiled-mode fast path: the observed window in template-compact
+        form, ``([n_templates, window] ms, template_map [n_servers])`` —
+        what `ShardedRoutingEngine.route(telemetry_templates=...)` consumes
+        without ever densifying [n_servers, window].  Only valid while no
+        feed-forward observation has diverged a server from its template
+        (monitoring-only workloads, e.g. the mega-fleet benchmark)."""
+        assert self.template_map is not None, "compact_window needs tiled mode"
+        assert not self._overlay, (
+            "feed-forward observations present: templates no longer "
+            "describe every server — use latency_window"
+        )
+        w = window or self.history_window
+        t_idx = int(np.clip(t_idx, 0, self.n_steps - 1))
+        return self._window_of(self.observed, t_idx, w), self.template_map
 
     def latency_windows(
         self, t_indices: np.ndarray, window: Optional[int] = None
@@ -266,11 +356,24 @@ class NetMCPPlatform:
         # per-query column indices [n_q, w]: t-w+1 .. t, clamped at 0
         cols = t_indices[:, None] + np.arange(-w + 1, 1)[None, :]
         cols = np.maximum(cols, 0)
-        # observed is [n_servers, T]; fancy-index to [n_servers, n_q, w]
-        return self.observed[:, cols].transpose(1, 0, 2)
+        # observed is [n_rows, T]; fancy-index to [n_rows, n_q, w]
+        slab = self.observed[:, cols].transpose(1, 0, 2)
+        if self.template_map is None:
+            return slab
+        out = slab[:, self.template_map]
+        if self._overlay:
+            idx = np.fromiter(self._overlay.keys(), np.int64)
+            # index each COW row with the window columns directly
+            # (O(touched * n_q * w), never O(touched * T))
+            rows = np.stack([self._overlay[s][cols] for s in idx])
+            out[:, idx] = rows.transpose(1, 0, 2)
+        return out
 
     def latency_at(self, server_idx: int, t_idx: int) -> float:
+        """Ground-truth latency (ms) of one server at tick t_idx."""
         t_idx = int(np.clip(t_idx, 0, self.n_steps - 1))
+        if self.template_map is not None:
+            return float(self.traces[self.template_map[server_idx], t_idx])
         return float(self.traces[server_idx, t_idx])
 
     # -- chaos-state queries -------------------------------------------------
@@ -283,7 +386,7 @@ class NetMCPPlatform:
     def alive_mask(self, t_idx: int) -> np.ndarray:
         """bool [n_servers] — which servers answer at tick t."""
         if self.chaos is None:
-            return np.ones(len(self.servers), bool)
+            return np.ones(self.n_servers, bool)
         return self.chaos.alive_at(t_idx)
 
     def telemetry_age_s(self, t_idx: int) -> np.ndarray:
@@ -291,13 +394,13 @@ class NetMCPPlatform:
         telemetry sample (zero without chaos / outside blackouts).  This is
         what SONAR-FT's staleness discount decays with."""
         if self.chaos is None:
-            return np.zeros(len(self.servers), np.float32)
+            return np.zeros(self.n_servers, np.float32)
         return self.chaos.age_s(t_idx)
 
     def telemetry_ages_s(self, t_indices: np.ndarray) -> np.ndarray:
         """f32 [n_q, n_servers] — vectorized `telemetry_age_s`."""
         if self.chaos is None:
-            return np.zeros((len(t_indices), len(self.servers)), np.float32)
+            return np.zeros((len(t_indices), self.n_servers), np.float32)
         return self.chaos.ages_s(t_indices)
 
     def record_observation(
@@ -309,9 +412,21 @@ class NetMCPPlatform:
         latencies (and offline events for queue overflows) through this,
         which is what closes the load->latency loop.  During a telemetry
         blackout the write is dropped — the monitoring store is what is
-        down, so even the agent's own failure observations never land."""
+        down, so even the agent's own failure observations never land.
+
+        In tiled mode the first write to a server copies its template row
+        (copy-on-write), so a mega fleet only pays dense storage for the
+        servers that actually served traffic."""
         t_idx = int(np.clip(t_idx, 0, self.n_steps - 1))
         if self.chaos is not None and self.chaos.stale_at(server_idx, t_idx):
+            return
+        self.obs_version += 1
+        if self.template_map is not None:
+            row = self._overlay.get(int(server_idx))
+            if row is None:
+                row = self.observed[self.template_map[server_idx]].copy()
+                self._overlay[int(server_idx)] = row
+            row[t_idx] = latency_ms
             return
         self.observed[server_idx, t_idx] = latency_ms
 
@@ -323,15 +438,24 @@ class NetMCPPlatform:
         server_idx = np.asarray(server_idx, np.int64)
         t_idx = np.clip(np.asarray(t_idx, np.int64), 0, self.n_steps - 1)
         latency_ms = np.asarray(latency_ms)
+        if self.template_map is not None:
+            for s, t, ms in zip(server_idx, t_idx, latency_ms):
+                self.record_observation(int(s), int(t), float(ms))
+            return
         if self.chaos is not None:
             keep = ~self.chaos.stale[server_idx, t_idx]
             server_idx, t_idx = server_idx[keep], t_idx[keep]
             latency_ms = latency_ms[keep]
+        self.obs_version += 1
         self.observed[server_idx, t_idx] = latency_ms
 
     # -- execution --------------------------------------------------------------
     def call_tool(self, decision: Decision, query: Query, t_idx: int) -> ToolResult:
         """Execute the selected tool at simulated time t_idx."""
+        assert self.servers is not None, (
+            "call_tool needs materialized Server objects; a tiled "
+            "mega-fleet platform (servers=None) is routing/monitoring-only"
+        )
         lat = self.latency_at(decision.server_idx, t_idx)
         online = lat < L.OFFLINE_MS
         server = self.servers[decision.server_idx]

@@ -1,6 +1,7 @@
 """Tool-routing algorithms (paper Sec. IV + baselines of Sec. V-B).
 
-Implements the four algorithms compared in the paper:
+Implements the four algorithms compared in the paper plus two extensions
+(full derivations in docs/algorithms.md):
 
   RAG        — two-stage coarse-to-fine BM25 on the *raw* (translated) query
                (the MCP-Zero retrieval method; no preprocessing).
@@ -9,6 +10,11 @@ Implements the four algorithms compared in the paper:
   PRAG       — tool prediction (LLM preprocess q -> q_pre) + two-stage BM25.
   SONAR      — PRAG + network-QoS fusion: S(i) = alpha*C(i) + beta*N(i)
                (Algorithm 1, Eq. 8-9).
+  SONAR-LB   — SONAR - gamma*U(rho): convex load penalty of the host
+               server's utilization (reduces to SONAR with no load vector).
+  SONAR-FT   — SONAR-LB with staleness-discounted QoS and failed-server
+               argmax masking + a bounded failover loop (reduces to
+               SONAR-LB at zero faults).
 
 Adaptation note (DESIGN.md §3): no LLM is available offline, so the
 "LLM preprocess" is a deterministic intent extractor with the same
@@ -227,14 +233,43 @@ class Router:
     def select(
         self,
         query: str,
-        latency_hist: Optional[np.ndarray] = None,  # [n_servers, T] ms
-        server_load: Optional[np.ndarray] = None,   # [n_servers] utilization
-                                                    # rho = demand / capacity
-        telemetry_age_s: Optional[np.ndarray] = None,  # [n_servers] seconds
-                                                       # since last fresh sample
-        failed_mask: Optional[np.ndarray] = None,   # [n_servers] bool: True =
-                                                    # known-failed, exclude
+        latency_hist: Optional[np.ndarray] = None,
+        server_load: Optional[np.ndarray] = None,
+        telemetry_age_s: Optional[np.ndarray] = None,
+        failed_mask: Optional[np.ndarray] = None,
     ) -> Decision:
+        """Route one query (Algorithm 1): two-stage retrieval, Eq. 5
+        softmax expertise, QoS/load/staleness fusion, argmax.
+
+        Parameters
+        ----------
+        query : str
+            Raw user query (PRAG-family algorithms preprocess it first).
+        latency_hist : np.ndarray, optional
+            f32 [n_servers, T] observed latency history in **ms** (most
+            recent sample last).  Consumed only by network-aware
+            algorithms; None reduces the fusion to S = C.
+        server_load : np.ndarray, optional
+            f32 [n_servers] utilization rho = outstanding work / capacity
+            (dimensionless, >= 0).  SONAR-LB/FT only; None or gamma=0
+            reduces to SONAR.
+        telemetry_age_s : np.ndarray, optional
+            f32 [n_servers] age of each server's last fresh telemetry in
+            **seconds**.  SONAR-FT only; zeros (or None) mean fresh and
+            reduce byte-identically to SONAR-LB.
+        failed_mask : np.ndarray, optional
+            bool [n_servers], True = known-failed.  SONAR-FT only: masked
+            servers are demoted below live ones before the stage-1 top-s
+            and excluded from the final argmax (their candidates keep
+            softmax mass).
+
+        Returns
+        -------
+        Decision
+            Winning (server_idx, tool_idx), the C/N/S components at the
+            winner, the selection-latency charge (ms), and the candidate
+            sets.  Deterministic: no RNG is consulted.
+        """
         qtext, sl = self._preprocess(query)
         fm = failed_mask if self.uses_failover else None
         cand_servers, cand_tools, scores = self._candidates(qtext, fm)

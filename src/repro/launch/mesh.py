@@ -20,5 +20,27 @@ def make_debug_mesh(n_data: int = 1, n_model: int = 1):
     return jax.make_mesh((n_data, n_model), ("data", "model"))
 
 
+def make_fleet_mesh(n_shards: int):
+    """1-D routing mesh over the first `n_shards` local devices.
+
+    Axis ``"fleet"`` partitions the *server* axis of the mesh-sharded
+    routing engine (`core.mesh_routing.ShardedRoutingEngine`) — each
+    device owns a contiguous slice of the fleet and its telemetry.  On
+    CPU, multiple devices require
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` before first
+    jax init (which is why this is a function, not a constant).
+    """
+    import numpy as np
+
+    devs = jax.devices()
+    if len(devs) < n_shards:
+        raise ValueError(
+            f"fleet mesh needs {n_shards} devices, have {len(devs)}"
+        )
+    from jax.sharding import Mesh
+
+    return Mesh(np.asarray(devs[:n_shards]), ("fleet",))
+
+
 def mesh_chips(mesh) -> int:
     return int(mesh.devices.size)

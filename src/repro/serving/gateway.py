@@ -12,18 +12,24 @@ At fleet scale the hot loop is the batched routing engine
 (`use_kernels=True`): the whole request batch flows through one jit-compiled
 pipeline — bm25_scores matmuls, a qos_scores pass over the telemetry matrix
 and the fused top-k/softmax/fusion/argmax selection kernel (see
-repro.core.batch_routing).
+repro.core.batch_routing).  Past ~10^3 replicas, ``shards=N`` switches
+`route_batch` to the mesh-sharded engine (repro.core.mesh_routing) and the
+telemetry window to a device-resident ring buffer advanced in place
+(donated) per tick.
 """
 from __future__ import annotations
 
 import dataclasses
 from typing import Callable, Optional, Sequence
 
+import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro.core import latency as latlib
 from repro.core.batch_routing import BatchRoutingEngine
 from repro.core.dataset import Server, Tool
+from repro.core.mesh_routing import ShardedRoutingEngine
 from repro.core.routing import ALGORITHMS, RoutingConfig, SonarRouter  # noqa: F401
 
 ARCH_CAPABILITIES = {
@@ -62,8 +68,104 @@ class RouteResult:
     network: float
 
 
+class _HostTelemetry:
+    """Host telemetry window [n_replicas, history]: roll + assign per tick
+    (the original gateway path — fine up to ~10^3 replicas)."""
+
+    def __init__(self, init: np.ndarray):
+        self._win = np.array(init, np.float32)
+
+    def push(self, col: np.ndarray) -> None:
+        self._win = np.roll(self._win, -1, axis=1)
+        self._win[:, -1] = col
+
+    def raw(self):
+        return self._win
+
+    def host(self) -> np.ndarray:
+        return self._win
+
+
+class DeviceTelemetry:
+    """Device-resident telemetry window, advanced **in place** per tick.
+
+    The buffer is donated to the jit shift-append, so XLA reuses its
+    storage instead of re-materializing [n_replicas, history] from the
+    host on every observation — at mega-fleet scale the np.roll path would
+    move the whole window through host memory once per completion.  The
+    host view (for scalar `Router.select` calls) is materialized lazily
+    and cached until the next push.
+    """
+
+    _shift = staticmethod(
+        jax.jit(
+            lambda buf, col: jnp.concatenate(
+                [buf[:, 1:], col[:, None]], axis=1
+            ),
+            donate_argnums=0,
+        )
+    )
+
+    def __init__(self, init: np.ndarray, sharding=None):
+        buf = jnp.asarray(init, jnp.float32)
+        self._buf = jax.device_put(buf, sharding) if sharding else buf
+        self._host: Optional[np.ndarray] = None
+
+    def push(self, col: np.ndarray) -> None:
+        self._buf = DeviceTelemetry._shift(
+            self._buf, jnp.asarray(col, jnp.float32)
+        )
+        self._host = None
+
+    def raw(self):
+        return self._buf
+
+    def host(self) -> np.ndarray:
+        if self._host is None:
+            self._host = np.asarray(self._buf)
+        return self._host
+
+
 class SonarGateway:
-    """Routes requests across serving replicas with SONAR."""
+    """Routes requests across serving replicas with SONAR.
+
+    Parameters
+    ----------
+    replicas : Sequence[Server]
+        Replica pool (capability descriptions are the routing corpus).
+    profiles : list[LatencyProfile], optional
+        Per-replica network profiles (default: all ideal).
+    cfg : RoutingConfig
+    seed : int
+        Seeds both trace synthesis and the probe-readmission PRNG; the
+        same (seed, profiles, history) gateway replays identically.
+    history : int
+        Telemetry window length in samples.
+    executor : Callable, optional
+        ``(replica_idx, request_text) -> latency_ms`` — real dispatch hook;
+        default replays the synthesized traces.
+    use_kernels : bool
+        Route batches through the jit engine (`route_batch` fast path).
+    algo : str
+        ``"sonar" | "sonar_lb" | "sonar_ft"`` (any network-aware algorithm).
+    slots_per_replica : int
+        Concurrency capacity behind the SONAR-LB utilization term.
+    lb_chunk : int
+        Chunk size for load-aware batched routing (in-flight feedback
+        granularity).
+    eject_after, probe_prob :
+        SONAR-FT health tracking — consecutive failures before ejection,
+        and the per-request canary re-admission probability.
+    shards : int, optional
+        Partition the replica axis across `shards` slices and route
+        batches through the mesh-sharded engine
+        (`core.mesh_routing.ShardedRoutingEngine`).  Also switches the
+        telemetry window to a device-resident buffer advanced in place
+        (donated) per tick instead of the host np.roll path.
+    mesh : Mesh | "auto" | None
+        Passed to the sharded engine (``"auto"`` uses a real device mesh
+        when enough devices exist, else the bit-identical emulation).
+    """
 
     def __init__(
         self,
@@ -79,6 +181,8 @@ class SonarGateway:
         lb_chunk: int = 8,                     # load-aware batch routing chunk
         eject_after: int = 3,                  # consecutive failures -> ejected
         probe_prob: float = 0.15,              # per-request re-admission probe
+        shards: Optional[int] = None,
+        mesh="auto",
     ):
         self.replicas = list(replicas)
         self.algo = algo.lower().replace("-", "_")
@@ -88,7 +192,9 @@ class SonarGateway:
         self.executor = executor
         self.use_kernels = use_kernels
         self.lb_chunk = lb_chunk
-        self._engine: Optional[BatchRoutingEngine] = None
+        self.shards = shards
+        self._mesh_opt = mesh
+        self._engine = None
         n = len(self.replicas)
         # in-flight accounting: callers running concurrent traffic use
         # begin()/finish() so the utilization the load term sees tracks
@@ -110,14 +216,26 @@ class SonarGateway:
         packed = latlib.pack_profiles(profiles)
         steps = latlib.trace_horizon_steps()
         self.traces = latlib.generate_traces_cached(seed, packed, steps)
-        self.telemetry = self.traces[:, :history].copy()
+        init = self.traces[:, :history]
+        self._telemetry = (
+            DeviceTelemetry(init) if shards else _HostTelemetry(init)
+        )
         self.t = history
         self.stats: list = []
 
+    @property
+    def telemetry(self) -> np.ndarray:
+        """Host view of the telemetry window [n_replicas, history] ms (the
+        scalar routing paths consume this; the device buffer backing a
+        sharded gateway is materialized lazily and cached per tick)."""
+        return self._telemetry.host()
+
     def _observe(self, idx: int, latency_ms: float):
-        self.telemetry = np.roll(self.telemetry, -1, axis=1)
-        self.telemetry[:, -1] = self.traces[:, min(self.t, self.traces.shape[1] - 1)]
-        self.telemetry[idx, -1] = latency_ms
+        col = np.array(
+            self.traces[:, min(self.t, self.traces.shape[1] - 1)], np.float32
+        )
+        col[idx] = latency_ms
+        self._telemetry.push(col)
         self.t += 1
 
     def _utilization(self) -> np.ndarray:
@@ -204,15 +322,23 @@ class SonarGateway:
         self.stats.append(res)
         return res
 
-    def engine(self) -> BatchRoutingEngine:
+    def engine(self):
         """The batched engine over this fleet (built once, lazily).
         Shares the scalar router's compiled ToolIndex so both paths score
-        the exact same corpus."""
+        the exact same corpus.  With ``shards`` set this is the
+        mesh-sharded engine (argmax-identical; see core.mesh_routing)."""
         if self._engine is None:
-            self._engine = BatchRoutingEngine(
-                self.replicas, self.router.cfg, algo=self.algo,
-                index=self.router.index,
-            )
+            if self.shards:
+                self._engine = ShardedRoutingEngine(
+                    self.replicas, self.router.cfg, algo=self.algo,
+                    n_shards=self.shards, mesh=self._mesh_opt,
+                    index=self.router.index,
+                )
+            else:
+                self._engine = BatchRoutingEngine(
+                    self.replicas, self.router.cfg, algo=self.algo,
+                    index=self.router.index,
+                )
         return self._engine
 
     def route_batch(self, request_texts: Sequence[str]) -> list:
@@ -242,7 +368,7 @@ class SonarGateway:
         for lo in range(0, len(request_texts), step):
             chunk = request_texts[lo : lo + step]
             dec = eng.route_texts(
-                chunk, self.telemetry, self._utilization(),
+                chunk, self._telemetry.raw(), self._utilization(),
                 failed_mask=self._health_mask(len(chunk)),
             )
             for qi in range(len(chunk)):

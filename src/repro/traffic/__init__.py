@@ -10,7 +10,13 @@ from repro.traffic.arrivals import (  # noqa: F401
     poisson_arrivals,
     thinned_arrivals,
 )
-from repro.traffic.fleet import ideal_platform, replica_fleet  # noqa: F401
+from repro.traffic.fleet import (  # noqa: F401
+    ideal_platform,
+    mega_fleet_index,
+    mega_platform,
+    replica_fleet,
+    telemetry_palette,
+)
 from repro.traffic.queueing import QueueConfig, ServerQueue  # noqa: F401
 from repro.traffic.simulator import (  # noqa: F401
     FleetTrafficSim,

@@ -79,6 +79,24 @@ def thinned_arrivals(
 
 
 def poisson_arrivals(key: jax.Array, rate: float, horizon_s: float) -> np.ndarray:
+    """Homogeneous Poisson arrivals.
+
+    Parameters
+    ----------
+    key : jax.Array
+        PRNG key; the same key always yields the same stream (every
+        arrival process here is jax-seeded and fully deterministic).
+    rate : float
+        Mean arrival rate in requests/**second**.
+    horizon_s : float
+        Stream length in **seconds**.
+
+    Returns
+    -------
+    np.ndarray
+        f64 sorted arrival times in **seconds**, all < horizon_s
+        (length ~ Poisson(rate * horizon_s)).
+    """
     return _homogeneous(key, rate, horizon_s)
 
 

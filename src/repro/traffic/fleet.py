@@ -8,6 +8,10 @@ collapse `benchmarks/offered_load.py` measures.
 """
 from __future__ import annotations
 
+from typing import Optional, Sequence
+
+import numpy as np
+
 from repro.core import latency as L
 from repro.core.dataset import Server, Tool, WEBSEARCH
 from repro.core.platform import NetMCPPlatform
@@ -45,6 +49,91 @@ def ideal_platform(
         servers,
         profiles=[L.ideal_profile() for _ in servers],
         scenario="ideal",
+        seed=seed,
+        horizon_s=horizon_s,
+        dt_s=dt_s,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Mega fleets (10^5-10^6 servers): template-tiled descriptions + telemetry
+# ---------------------------------------------------------------------------
+
+def mega_fleet_index(
+    n_servers: int,
+    templates: Optional[Sequence[Server]] = None,
+    seed: int = 0,
+):
+    """Template-tiled index over `n_servers` instances of the canonical
+    15-server pool (5 websearch + 10 distractor templates, round-robin).
+
+    Returns a `core.mesh_routing.TiledFleetIndex` — BM25 weights stored
+    once per template with expanded-corpus statistics, so building the
+    index costs O(templates), not O(n_servers).
+    """
+    from repro.core import dataset
+    from repro.core.mesh_routing import TiledFleetIndex
+
+    if templates is None:
+        templates = dataset.build_server_pool(seed=seed)
+    tmap = np.arange(n_servers) % len(templates)
+    return TiledFleetIndex(templates, tmap)
+
+
+def telemetry_palette(n_templates: int = 16, seed: int = 0) -> list:
+    """`n_templates` latency profiles cycling through the five canonical
+    network states (ideal / high-latency / high-jitter / fluctuating /
+    outage), each jittered by a seeded generator so no two templates are
+    identical.  Seed semantics: the same (n_templates, seed) pair always
+    yields the same palette."""
+    rng = np.random.default_rng(seed)
+    palette = []
+    for i in range(n_templates):
+        kind = i % 5
+        if kind == 0:
+            p = L.LatencyProfile(
+                base_latency_ms=20.0 + 15.0 * rng.random(),
+                std_dev_ms=3.0 + 4.0 * rng.random(),
+            )
+        elif kind == 1:
+            p = L.LatencyProfile(
+                base_latency_ms=250.0 + 150.0 * rng.random(), std_dev_ms=15.0
+            )
+        elif kind == 2:
+            p = L.LatencyProfile(
+                base_latency_ms=100.0, std_dev_ms=50.0 + 30.0 * rng.random()
+            )
+        elif kind == 3:
+            p = L.fluctuating_profile(
+                base_ms=150.0, amplitude_ms=120.0, period_s=3600.0,
+                phase=float(2.0 * np.pi * rng.random()),
+            )
+        else:
+            p = L.outage_profile(probability=0.2 + 0.3 * rng.random())
+        palette.append(p)
+    return palette
+
+
+def mega_platform(
+    n_servers: int,
+    n_tel_templates: int = 16,
+    seed: int = 0,
+    horizon_s: float = 900.0,
+    dt_s: float = 1.0,
+) -> NetMCPPlatform:
+    """Tiled `NetMCPPlatform` for a mega fleet: ground-truth traces are
+    synthesized once per telemetry template ([n_tel_templates, T]) and
+    servers map onto them with a stride co-prime to the description
+    round-robin, so semantic ties and network ties decorrelate.  Storage
+    is O(templates x T) + O(servers) regardless of fleet size."""
+    palette = telemetry_palette(n_tel_templates, seed)
+    # decorrelate from the `mega_fleet_index` description round-robin
+    # (int64: the Knuth multiplier overflows default-int32 platforms)
+    tel_map = (np.arange(n_servers, dtype=np.int64) * 2654435761) % n_tel_templates
+    return NetMCPPlatform(
+        servers=None,
+        profiles=palette,
+        template_map=tel_map,
         seed=seed,
         horizon_s=horizon_s,
         dt_s=dt_s,

@@ -27,10 +27,28 @@ from typing import Optional
 
 @dataclasses.dataclass(frozen=True)
 class QueueConfig:
-    capacity: int = 4              # c concurrent service slots
-    queue_limit: int = 16          # bounded waiting room (beyond the slots)
-    base_service_ms: float = 200.0  # mean service time at zero load
-    inflation: float = 1.0         # service-time inflation coefficient
+    """One station's capacity model (M/G/c with a bounded FIFO room).
+
+    Attributes
+    ----------
+    capacity : int
+        c concurrent service slots.
+    queue_limit : int
+        Bounded waiting room beyond the slots; offers past it are dropped
+        (recorded as offline events by the simulator).
+    base_service_ms : float
+        Mean service time at zero load, **ms** (draws are exponential,
+        scaled by this).
+    inflation : float
+        Utilization-dependent service inflation coefficient
+        (dimensionless): service = draw * (1 + inflation * rho^2) with
+        rho the in-service occupancy at start.
+    """
+
+    capacity: int = 4
+    queue_limit: int = 16
+    base_service_ms: float = 200.0
+    inflation: float = 1.0
 
 
 @dataclasses.dataclass

@@ -143,7 +143,7 @@ class FleetTrafficSim:
     ):
         self.platform = platform
         self.router = router
-        self.queues = [ServerQueue(queue_cfg) for _ in platform.servers]
+        self.queues = [ServerQueue(queue_cfg) for _ in range(platform.n_servers)]
         self.hedge_ms = hedge_ms
         self.retry_budget = retry_budget
         self.deadline_ms = deadline_ms
@@ -152,6 +152,12 @@ class FleetTrafficSim:
         self._seq = 0
         self._draws: np.ndarray = np.zeros((0,))
         self._draw_i = 0
+        # per-tick observed-window cache: at mega-fleet scale the window
+        # densification dominates _route, and every request arriving in
+        # the same tick (with no feed-forward write in between) sees the
+        # same history — key on (tick, platform.obs_version)
+        self._win_key: tuple = (-1, -1)
+        self._win: Optional[np.ndarray] = None
 
     # -- helpers -------------------------------------------------------------
     def _tick(self, t_ms: float) -> int:
@@ -170,9 +176,16 @@ class FleetTrafficSim:
         self._draw_i += 1
         return d
 
+    def _window(self, tick: int) -> np.ndarray:
+        key = (tick, self.platform.obs_version)
+        if key != self._win_key:
+            self._win = self.platform.latency_window(tick)
+            self._win_key = key
+        return self._win
+
     def _route(self, text: str, now_ms: float, failed: set = frozenset()) -> int:
         tick = self._tick(now_ms)
-        hist = self.platform.latency_window(tick)
+        hist = self._window(tick)
         loads = self._loads()
         if isinstance(self.router, Router):
             kwargs = {}

@@ -1,0 +1,130 @@
+"""Documentation checker (the CI docs job).
+
+Three checks over README.md and docs/*.md:
+
+1. **Relative links resolve** — every markdown link/image whose target is
+   a repo-relative path (no scheme) must exist on disk; ``#fragment``
+   anchors must match a heading slug in the target file.
+2. **Mermaid blocks are well-formed** — every ```` ```mermaid ```` fence is
+   closed, declares a known diagram type on its first non-empty line, and
+   has balanced brackets/parens (the classes of mermaid syntax error a
+   renderer rejects outright).
+3. **Doctests pass** — ``python -m doctest``-style examples embedded in
+   docs/algorithms.md (and any other doc that contains ``>>>`` lines) are
+   executed against the installed package, so the documented formulas
+   cannot drift from the code.
+
+Exit code 0 = all good; nonzero prints one line per failure.
+
+  PYTHONPATH=src python tools/check_docs.py
+"""
+from __future__ import annotations
+
+import doctest
+import pathlib
+import re
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+DOC_FILES = [ROOT / "README.md"] + sorted((ROOT / "docs").glob("*.md"))
+
+LINK_RE = re.compile(r"!?\[[^\]]*\]\(([^)\s]+)\)")
+MERMAID_TYPES = (
+    "flowchart", "graph", "sequenceDiagram", "classDiagram", "stateDiagram",
+    "erDiagram", "gantt", "pie", "mindmap", "timeline",
+)
+
+
+def heading_slugs(path: pathlib.Path) -> set:
+    """GitHub-style anchor slugs for every heading in a markdown file."""
+    slugs = set()
+    for line in path.read_text().splitlines():
+        m = re.match(r"#+\s+(.*)", line)
+        if m:
+            text = re.sub(r"[`*_]", "", m.group(1)).strip().lower()
+            text = re.sub(r"[^\w\- ]", "", text).replace(" ", "-")
+            slugs.add(text)
+    return slugs
+
+
+def strip_code_blocks(text: str) -> str:
+    """Remove fenced code blocks so code samples can't fail the link check."""
+    return re.sub(r"```.*?```", "", text, flags=re.DOTALL)
+
+
+def check_links(path: pathlib.Path, errors: list) -> None:
+    text = strip_code_blocks(path.read_text())
+    for target in LINK_RE.findall(text):
+        if re.match(r"^[a-z][a-z0-9+.-]*:", target):   # http:, https:, mailto:
+            continue
+        raw, _, frag = target.partition("#")
+        dest = (path.parent / raw).resolve() if raw else path
+        if raw and not dest.exists():
+            errors.append(f"{path.relative_to(ROOT)}: broken link -> {target}")
+            continue
+        if frag and dest.suffix == ".md":
+            if frag not in heading_slugs(dest):
+                errors.append(
+                    f"{path.relative_to(ROOT)}: missing anchor -> {target}"
+                )
+
+
+def check_mermaid(path: pathlib.Path, errors: list) -> None:
+    text = path.read_text()
+    fences = re.findall(r"```mermaid\n(.*?)```", text, flags=re.DOTALL)
+    n_open = len(re.findall(r"```mermaid", text))
+    if n_open != len(fences):
+        errors.append(f"{path.relative_to(ROOT)}: unclosed mermaid fence")
+        return
+    for body in fences:
+        lines = [ln for ln in body.splitlines() if ln.strip()]
+        if not lines:
+            errors.append(f"{path.relative_to(ROOT)}: empty mermaid block")
+            continue
+        head = lines[0].strip().split()[0]
+        if head not in MERMAID_TYPES:
+            errors.append(
+                f"{path.relative_to(ROOT)}: unknown mermaid type {head!r}"
+            )
+        for open_c, close_c in ("[]", "()", "{}"):
+            # subgraph labels etc. keep brackets balanced per block
+            if body.count(open_c) != body.count(close_c):
+                errors.append(
+                    f"{path.relative_to(ROOT)}: unbalanced {open_c}{close_c} "
+                    f"in mermaid block"
+                )
+                break
+
+
+def check_doctests(path: pathlib.Path, errors: list) -> None:
+    if ">>>" not in path.read_text():
+        return
+    failures, _ = doctest.testfile(
+        str(path), module_relative=False, verbose=False,
+        optionflags=doctest.NORMALIZE_WHITESPACE | doctest.ELLIPSIS,
+    )
+    if failures:
+        errors.append(
+            f"{path.relative_to(ROOT)}: {failures} doctest failure(s)"
+        )
+
+
+def main() -> int:
+    errors: list = []
+    if not (ROOT / "docs").is_dir():
+        print("docs/ directory missing", file=sys.stderr)
+        return 1
+    for path in DOC_FILES:
+        check_links(path, errors)
+        check_mermaid(path, errors)
+        check_doctests(path, errors)
+    for e in errors:
+        print(e, file=sys.stderr)
+    checked = ", ".join(str(p.relative_to(ROOT)) for p in DOC_FILES)
+    if not errors:
+        print(f"docs ok: {checked}")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
