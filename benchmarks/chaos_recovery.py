@@ -30,7 +30,6 @@ fail over inside one turn.  Reported per (algorithm, intensity):
 from __future__ import annotations
 
 import argparse
-import json
 
 import numpy as np
 
@@ -211,6 +210,9 @@ if __name__ == "__main__":
     args = parser.parse_args()
     res = main(smoke=args.smoke)
     if args.json:
-        with open(args.json, "w") as f:
-            json.dump(res, f, indent=2)
+        try:
+            from benchmarks.common import write_artifact
+        except ImportError:            # run as a bare script
+            from common import write_artifact
+        write_artifact(args.json, res, schema="chaos-recovery")
     check(res)

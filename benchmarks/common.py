@@ -1,6 +1,9 @@
 """Shared benchmark scaffolding: the paper's experimental setup (Sec. V-A)."""
 from __future__ import annotations
 
+import importlib.util
+import json
+import pathlib
 import time
 
 from repro.core import agent, dataset, metrics, platform, routing
@@ -22,6 +25,40 @@ def run(scenario: str, algo: str, cfg: RoutingConfig = RoutingConfig(), seed: in
     wall = time.time() - t0
     rep = metrics.evaluate(recs, SERVERS)
     return rep, wall
+
+
+def _load_schema_module():
+    """Import tools/check_bench_schema.py by path: benchmarks are run both
+    as scripts (sys.path[0] = benchmarks/) and as a package, so a plain
+    ``import tools...`` is not reliable."""
+    path = pathlib.Path(__file__).resolve().parent.parent / "tools" / (
+        "check_bench_schema.py"
+    )
+    spec = importlib.util.spec_from_file_location("check_bench_schema", path)
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+def write_artifact(path: str, payload: dict, schema: str | None = None) -> None:
+    """Schema-validated JSON artifact writer.
+
+    Every benchmark's ``--json`` output goes through this: the payload is
+    checked against its artifact schema (``tools/check_bench_schema.py``,
+    inferred from the basename unless ``schema`` is given) *before* the
+    file is written, so a benchmark cannot emit an artifact that the CI
+    schema gate would reject.
+    """
+    mod = _load_schema_module()
+    name = schema or mod.schema_name_for(path)
+    errs = mod.validate_artifact(name, payload)
+    if errs:
+        # a real raise (not assert): the gate must hold under python -O too
+        raise ValueError(
+            f"artifact {path} violates schema '{name}': " + "; ".join(errs)
+        )
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2)
 
 
 def csv_line(name: str, wall_s: float, rep, extra: str = "") -> str:

@@ -37,7 +37,6 @@ JSON artifact schema (``--json out.json``)::
 from __future__ import annotations
 
 import argparse
-import json
 import time
 
 import numpy as np
@@ -209,8 +208,11 @@ def main(argv=None) -> dict:
         "points": points,
     }
     if args.json:
-        with open(args.json, "w") as f:
-            json.dump(res, f, indent=2)
+        try:
+            from benchmarks.common import write_artifact
+        except ImportError:            # run as a bare script
+            from common import write_artifact
+        write_artifact(args.json, res, schema="mega-fleet")
     return res
 
 

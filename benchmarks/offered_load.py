@@ -21,7 +21,6 @@ spreads the same stream and keeps goodput at the fleet limit.
 from __future__ import annotations
 
 import argparse
-import json
 
 import jax
 
@@ -137,8 +136,11 @@ if __name__ == "__main__":
     args = parser.parse_args()
     res = main(smoke=args.smoke)
     if args.json:
-        with open(args.json, "w") as f:
-            json.dump(res, f, indent=2)
+        try:
+            from benchmarks.common import write_artifact
+        except ImportError:            # run as a bare script
+            from common import write_artifact
+        write_artifact(args.json, res, schema="offered-load")
 
     # SONAR-LB must strictly win goodput AND p99 past single-server
     # saturation (the acceptance gate of the herding fix)

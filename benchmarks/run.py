@@ -11,7 +11,6 @@ from __future__ import annotations
 
 import argparse
 import dataclasses
-import json
 import sys
 import time
 
@@ -68,8 +67,9 @@ def main(argv=None) -> dict:
     print(f"# total wall {results['wall_s']:.1f}s", file=sys.stderr)
 
     if args.json:
-        with open(args.json, "w") as f:
-            json.dump(_jsonable(results), f, indent=2)
+        from benchmarks.common import write_artifact
+
+        write_artifact(args.json, _jsonable(results), schema="bench-results")
         print(f"# results written to {args.json}", file=sys.stderr)
     return results
 

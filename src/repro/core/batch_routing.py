@@ -21,8 +21,8 @@ routed repeatedly (e.g. every retry turn of the batched episode driver)
 without touching Python strings again.
 
 Selection parity: for identical inputs the engine is argmax-identical to
-`Router.select` for every algorithm (all six: RAG / RerankRAG / PRAG /
-SONAR / SONAR-LB / SONAR-FT) — top-k ties break toward lower indices in
+`Router.select` for every algorithm (all seven: RAG / RerankRAG / PRAG /
+SONAR / SONAR-LB / SONAR-FT / SONAR-GEO) — top-k ties break toward lower indices in
 both (stable argsort vs lax.top_k), invalid candidates (fewer than k
 tools on candidate servers) are excluded from both softmax mass and the
 final argmax, and the argmax tie-breaks toward the higher-ranked
@@ -49,6 +49,7 @@ from repro.core.qos import (
     QosParams,
     load_penalty,
     network_score,
+    rtt_penalty,
     staleness_discount,
 )
 from repro.core.routing import (
@@ -150,8 +151,9 @@ def encode_for_index(
     jax.jit,
     static_argnames=(
         "top_s", "top_k", "alpha", "beta", "gamma", "load_knee", "load_sharp",
-        "temp", "stale_half_life", "use_network", "use_load", "use_staleness",
-        "use_failover", "rerank", "use_kernels", "qos_params", "interpret",
+        "delta", "rtt_scale", "temp", "stale_half_life", "use_network",
+        "use_load", "use_staleness", "use_failover", "use_rtt", "rerank",
+        "use_kernels", "qos_params", "interpret",
     ),
 )
 def _route_pipeline(
@@ -165,6 +167,9 @@ def _route_pipeline(
     server_load: Optional[jax.Array],   # [n_servers] or [n_q, n_servers] rho
     telemetry_age: Optional[jax.Array],  # [n_servers] or [n_q, n_servers] s
     dead_mask: Optional[jax.Array],      # [n_servers] or [n_q, n_servers] 0/1
+    client_rtt: Optional[jax.Array],     # [n_servers] or [n_q, n_servers] ms
+    region_idx: Optional[jax.Array],     # [n_q] i32 client region per request
+    region_rtt: Optional[jax.Array],     # [n_regions, n_servers] ms
     *,
     top_s: int,
     top_k: int,
@@ -173,12 +178,15 @@ def _route_pipeline(
     gamma: float,
     load_knee: float,
     load_sharp: float,
+    delta: float,
+    rtt_scale: float,
     temp: float,
     stale_half_life: float,
     use_network: bool,
     use_load: bool,
     use_staleness: bool,
     use_failover: bool,
+    use_rtt: bool,
     rerank: bool,
     use_kernels: bool,
     qos_params: QosParams,
@@ -267,6 +275,35 @@ def _route_pipeline(
         tool_load = jnp.zeros((n_tools,), jnp.float32)
         eff_gamma = 0.0
 
+    # -- SONAR-GEO locality term: per-(client-region, server) RTT penalty,
+    # broadcast to tools of the host server.  The RTT arrives either as an
+    # explicit vector (shared [n_servers] or per-query [n_q, n_servers]) or
+    # as a per-request region index gathered from the [n_regions,
+    # n_servers] RTT matrix — the gather runs inside the jit pipeline. --
+    if use_rtt and (
+        client_rtt is not None
+        or (region_idx is not None and region_rtt is not None)
+    ):
+        if client_rtt is None:
+            # untagged requests carry region -1 (the simulator's sentinel):
+            # clamp the gather and zero their row — R(0) = 0, so they pay
+            # no locality penalty, matching the scalar path's convention
+            client_rtt = jnp.take(
+                region_rtt, jnp.maximum(region_idx, 0), axis=0
+            )
+            client_rtt = jnp.where(
+                (region_idx >= 0)[:, None], client_rtt, 0.0
+            )
+        pen_r = rtt_penalty(client_rtt, rtt_scale)
+        if client_rtt.ndim == 2:                            # [n_q, n_servers]
+            tool_rtt = jnp.take(pen_r, tool_server, axis=1)  # [n_q, n_tools]
+        else:
+            tool_rtt = pen_r[tool_server]                   # [n_tools]
+        eff_delta = delta
+    else:
+        tool_rtt = jnp.zeros((n_tools,), jnp.float32)
+        eff_delta = 0.0
+
     # -- SONAR-FT failed-server mask, broadcast to the host server's tools --
     if use_failover and dead_mask is not None:
         dm = dead_mask.astype(jnp.float32)
@@ -282,12 +319,14 @@ def _route_pipeline(
         tool_idx, c, n, s = ops.fused_select(
             sel, val, tool_qos, tool_load, tool_dead,
             k=top_k, alpha=eff_alpha, beta=eff_beta, gamma=eff_gamma,
+            tool_rtt=tool_rtt, delta=eff_delta,
             temp=temp, interpret=interpret,
         )
     else:
         tool_idx, c, n, s = kref.fused_select_ref(
             sel, val, tool_qos, tool_load, tool_dead,
             k=top_k, alpha=eff_alpha, beta=eff_beta, gamma=eff_gamma,
+            tool_rtt=tool_rtt, delta=eff_delta,
             temp=temp,
         )
     server_idx = tool_server[tool_idx]
@@ -324,6 +363,7 @@ class BatchRoutingEngine:
         self.uses_load = router_cls.uses_load
         self.uses_staleness = router_cls.uses_staleness
         self.uses_failover = router_cls.uses_failover
+        self.uses_rtt = router_cls.uses_rtt
         self.rerank = router_cls.rerank
         self.use_kernels = use_kernels
         self.interpret = interpret
@@ -354,6 +394,9 @@ class BatchRoutingEngine:
         server_load: Optional[np.ndarray] = None,
         telemetry_age_s: Optional[np.ndarray] = None,
         failed_mask: Optional[np.ndarray] = None,
+        client_rtt_ms: Optional[np.ndarray] = None,
+        client_region: Optional[np.ndarray] = None,
+        region_rtt_ms: Optional[np.ndarray] = None,
     ) -> BatchDecisions:
         """Route an encoded batch through the jit pipeline.
 
@@ -378,6 +421,18 @@ class BatchRoutingEngine:
         failed_mask : np.ndarray, optional
             bool [n_servers] or [n_q, n_servers]; True excludes the
             server from the argmax (SONAR-FT).
+        client_rtt_ms : np.ndarray, optional
+            f32 [n_servers] (every request from one region — the
+            gateway case) or [n_q, n_servers] (per-request RTT rows),
+            **ms**.  SONAR-GEO only.
+        client_region : np.ndarray, optional
+            i32 [n_q] per-request client-region index; paired with
+            ``region_rtt_ms`` [n_regions, n_servers] the RTT row is
+            gathered *inside* the jit pipeline (ignored when
+            ``client_rtt_ms`` is given).  SONAR-GEO only.
+        region_rtt_ms : np.ndarray, optional
+            f32 [n_regions, n_servers] region->server propagation RTT
+            matrix (e.g. `repro.geo.GeoPlacement.region_server_rtt`).
 
         Returns
         -------
@@ -404,6 +459,13 @@ class BatchRoutingEngine:
         dead = None
         if self.uses_failover and failed_mask is not None:
             dead = jnp.asarray(failed_mask, jnp.float32)
+        rtt = reg_idx = reg_rtt = None
+        if self.uses_rtt and self.cfg.delta != 0.0:
+            if client_rtt_ms is not None:
+                rtt = jnp.asarray(client_rtt_ms, jnp.float32)
+            elif client_region is not None and region_rtt_ms is not None:
+                reg_idx = jnp.asarray(client_region, jnp.int32)
+                reg_rtt = jnp.asarray(region_rtt_ms, jnp.float32)
         server_idx, tool_idx, c, n, s = _route_pipeline(
             jnp.asarray(batch.q_server),
             jnp.asarray(batch.q_tool),
@@ -415,6 +477,9 @@ class BatchRoutingEngine:
             load,
             age,
             dead,
+            rtt,
+            reg_idx,
+            reg_rtt,
             top_s=self.cfg.top_s,
             top_k=self.cfg.top_k,
             alpha=self.cfg.alpha,
@@ -422,12 +487,15 @@ class BatchRoutingEngine:
             gamma=self.cfg.gamma,
             load_knee=self.cfg.load_knee,
             load_sharp=self.cfg.load_sharp,
+            delta=self.cfg.delta,
+            rtt_scale=self.cfg.rtt_scale_ms,
             temp=self.cfg.expertise_temp,
             stale_half_life=self.cfg.stale_half_life_s,
             use_network=self.uses_network and lat is not None,
             use_load=load is not None,
             use_staleness=age is not None,
             use_failover=dead is not None,
+            use_rtt=rtt is not None or reg_idx is not None,
             rerank=self.rerank,
             use_kernels=self.use_kernels,
             qos_params=self.cfg.qos,
@@ -449,10 +517,14 @@ class BatchRoutingEngine:
         server_load: Optional[np.ndarray] = None,
         telemetry_age_s: Optional[np.ndarray] = None,
         failed_mask: Optional[np.ndarray] = None,
+        client_rtt_ms: Optional[np.ndarray] = None,
+        client_region: Optional[np.ndarray] = None,
+        region_rtt_ms: Optional[np.ndarray] = None,
     ) -> BatchDecisions:
         return self.route(
             self.encode(queries), latency_hist, server_load,
-            telemetry_age_s, failed_mask,
+            telemetry_age_s, failed_mask, client_rtt_ms,
+            client_region, region_rtt_ms,
         )
 
     def route_failover(
@@ -465,6 +537,7 @@ class BatchRoutingEngine:
                                                  # [n_q, n_servers] bool
         failed_mask: Optional[np.ndarray] = None,
         budget: Optional[int] = None,
+        client_rtt_ms: Optional[np.ndarray] = None,
     ) -> tuple[BatchDecisions, np.ndarray]:
         """Vectorized failover loop: route the batch, probe every pick
         against `alive`, mask the dead picks per query and re-route — at
@@ -482,7 +555,7 @@ class BatchRoutingEngine:
         failovers = np.zeros(n, np.int64)
         dec = self.route(
             batch, latency_hist, server_load, telemetry_age_s,
-            mask if mask.any() else None,
+            mask if mask.any() else None, client_rtt_ms,
         )
         if up is None or n == 0:
             return dec, failovers
@@ -498,7 +571,8 @@ class BatchRoutingEngine:
             mask[np.flatnonzero(todo), picks[todo]] = True
             failovers[todo] += 1
             dec = self.route(
-                batch, latency_hist, server_load, telemetry_age_s, mask
+                batch, latency_hist, server_load, telemetry_age_s, mask,
+                client_rtt_ms,
             )
         return dec, failovers
 

@@ -30,8 +30,13 @@ the same order as the single-device extraction, the Eq. 5 softmax
 reduction runs over the same floats in the same order, and the fused
 scores (Eq. 8) and argmax (Eq. 9) are reproduced bit-for-bit.
 ``tests/test_mesh_routing.py`` property-tests the argmax identity across
-all six algorithms, and ``benchmarks/mega_fleet.py`` gates on it at 10^5+
-servers.
+all seven algorithms, and ``benchmarks/mega_fleet.py`` gates on it at 10^5+
+servers.  One carve-out: SONAR-GEO's active ``-delta*R`` term extends the
+fusion to four products, which XLA may FMA-contract differently in the
+two independently-compiled programs — its fused *score* is reproduced to
+~1 ulp (decisions remain argmax-identical; bit-identical candidate inputs
+contract identically, so exact ties still break the same way).  All other
+algorithms keep full bit-identity (``delta`` folds to zero).
 
 Shard padding uses ``PAD_NEG`` (strictly below the ``NEG`` mask value), so
 pad servers/tools rank below every real entry — including dead-demoted
@@ -70,6 +75,7 @@ from repro.core.qos import (
     QosParams,
     load_penalty,
     network_score,
+    rtt_penalty,
     staleness_discount,
 )
 from repro.core.routing import ALGORITHMS, RoutingConfig, ToolIndex
@@ -244,12 +250,15 @@ class _StaticCfg(NamedTuple):
     gamma: float
     load_knee: float
     load_sharp: float
+    delta: float
+    rtt_scale: float
     temp: float
     stale_half_life: float
     use_network: bool
     use_load: bool
     use_staleness: bool
     use_failover: bool
+    use_rtt: bool
     rerank: bool
     use_kernels: bool
     interpret: Optional[bool]
@@ -301,10 +310,11 @@ def _stage1_stacked(d: dict, sc: _StaticCfg) -> tuple:
 
 def _stage2_stacked(d: dict, cand_gids: jax.Array, sc: _StaticCfg) -> tuple:
     """Shard-local stage 2: tool scores masked to the global candidate
-    servers, QoS/load/staleness/dead terms over the shard's telemetry
+    servers, QoS/load/staleness/RTT/dead terms over the shard's telemetry
     slice, local top-k extraction with metadata.
 
-    Returns six [J, n_q, k_keep] arrays: (sel, val, qos, load, dead, gid).
+    Returns seven [J, n_q, k_keep] arrays:
+    (sel, val, qos, load, rtt, dead, gid).
     """
     if "t_pre" in d:
         t = d["t_pre"]                                   # [J, n_q, t_pad]
@@ -372,6 +382,24 @@ def _stage2_stacked(d: dict, cand_gids: jax.Array, sc: _StaticCfg) -> tuple:
     else:
         tool_load = jnp.zeros((J, 1, t_pad), jnp.float32)
 
+    # SONAR-GEO: client-region -> server RTT penalty over the shard's
+    # server slice, as an explicit vector or gathered from the sharded
+    # [J, n_regions, s_pad] RTT matrix by the replicated region indices
+    if sc.use_rtt and ("rtt" in d or "rtt_region" in d):
+        if "rtt_region" in d:
+            # clamp the gather and zero untagged (region < 0) requests'
+            # rows — no locality penalty, matching the scalar convention
+            ridx = d["region_idx"]
+            rtt_s = jnp.take(
+                d["rtt_region"], jnp.maximum(ridx, 0), axis=1
+            )                                             # [J, B, s_pad]
+            rtt_s = jnp.where((ridx >= 0)[None, :, None], rtt_s, 0.0)
+        else:
+            rtt_s = d["rtt"]                              # [J, 1|B, s_pad]
+        tool_rtt = per_tool(rtt_penalty(rtt_s, sc.rtt_scale))
+    else:
+        tool_rtt = jnp.zeros((J, 1, t_pad), jnp.float32)
+
     if sc.use_failover and "dead" in d:
         tool_dead = per_tool(d["dead"])
     else:
@@ -388,7 +416,7 @@ def _stage2_stacked(d: dict, cand_gids: jax.Array, sc: _StaticCfg) -> tuple:
         li, axis=-1,
     )
     return v, gather(val_full), gather(tool_qos), gather(tool_load), \
-        gather(tool_dead), gid
+        gather(tool_rtt), gather(tool_dead), gid
 
 
 def _packed(stage_fn, layout: tuple, sc: _StaticCfg, *extra):
@@ -446,6 +474,7 @@ def _flatten_shards(x: jax.Array) -> jax.Array:
 # ---------------------------------------------------------------------------
 
 # logical layouts (dim names fed to nn.sharding.logical_to_spec)
+_REP1 = (None,)
 _REP2 = (None, None)
 _SH2 = ("shard", None)
 _SH3 = ("shard", None, None)
@@ -534,6 +563,9 @@ def _route_sharded(dyn: dict, *, mesh: Optional[Mesh], sc: _StaticCfg):
         add2("lat", _SH4 if dyn["lat"].ndim == 4 else _SH3)
     add2("load", _SH3)
     add2("age", _SH3)
+    add2("rtt", _SH3)
+    add2("rtt_region", _SH3)
+    add2("region_idx", _REP1)
     add2("dead", _SH3)
     arrays2 = [pre.get(n, dyn.get(n)) for n in layout2]
 
@@ -550,16 +582,17 @@ def _route_sharded(dyn: dict, *, mesh: Optional[Mesh], sc: _StaticCfg):
             d = dict(zip(layout2_m, arrs))
             return _stage2_stacked(d, d["cand_gids"], sc)
 
-        outs = _run_stage(f2m, mesh, arrays2 + [cand_gids], specs2_m, 6)
+        outs = _run_stage(f2m, mesh, arrays2 + [cand_gids], specs2_m, 7)
     else:
         outs = f2(*arrays2)
-    sel_c, val_c, qos_c, load_c, dead_c, gid_c = outs
+    sel_c, val_c, qos_c, load_c, rtt_c, dead_c, gid_c = outs
 
     # -- merge 2: all-gather candidates, fused softmax/fusion/argmax --
     sel = _flatten_shards(sel_c)
     val = _flatten_shards(val_c)
     qos = _flatten_shards(qos_c)
     load = _flatten_shards(load_c)
+    rtt = _flatten_shards(rtt_c)
     dead = _flatten_shards(dead_c)
     gid = _flatten_shards(gid_c)
 
@@ -571,6 +604,11 @@ def _route_sharded(dyn: dict, *, mesh: Optional[Mesh], sc: _StaticCfg):
     else:
         eff_alpha, eff_beta = 1.0, 0.0
     eff_gamma = sc.gamma if (sc.use_load and "load" in dyn) else 0.0
+    eff_delta = (
+        sc.delta
+        if (sc.use_rtt and ("rtt" in dyn or "rtt_region" in dyn))
+        else 0.0
+    )
     dead_arg = dead if (sc.use_failover and "dead" in dyn) else None
 
     k_final = min(sc.top_k, sc.n_tools)
@@ -578,12 +616,14 @@ def _route_sharded(dyn: dict, *, mesh: Optional[Mesh], sc: _StaticCfg):
         pos, c, n, s = ops.fused_select(
             sel, val, qos, load, dead_arg,
             k=k_final, alpha=eff_alpha, beta=eff_beta, gamma=eff_gamma,
+            tool_rtt=rtt, delta=eff_delta,
             temp=sc.temp, interpret=sc.interpret,
         )
     else:
         pos, c, n, s = kref.fused_select_ref(
             sel, val, qos, load, dead_arg,
             k=k_final, alpha=eff_alpha, beta=eff_beta, gamma=eff_gamma,
+            tool_rtt=rtt, delta=eff_delta,
             temp=sc.temp,
         )
     tool_idx = jnp.take_along_axis(gid, pos[:, None], axis=-1)[:, 0]
@@ -639,6 +679,7 @@ class ShardedRoutingEngine:
         self.uses_load = router_cls.uses_load
         self.uses_staleness = router_cls.uses_staleness
         self.uses_failover = router_cls.uses_failover
+        self.uses_rtt = router_cls.uses_rtt
         self.rerank = router_cls.rerank
         self.use_kernels = use_kernels
         self.interpret = interpret
@@ -685,11 +726,13 @@ class ShardedRoutingEngine:
             k_keep=min(cfg.top_k, self.plan.t_pad),
             alpha=cfg.alpha, beta=cfg.beta, gamma=cfg.gamma,
             load_knee=cfg.load_knee, load_sharp=cfg.load_sharp,
+            delta=cfg.delta, rtt_scale=cfg.rtt_scale_ms,
             temp=cfg.expertise_temp,
             stale_half_life=cfg.stale_half_life_s,
             use_network=self.uses_network, use_load=self.uses_load,
             use_staleness=self.uses_staleness,
             use_failover=self.uses_failover,
+            use_rtt=self.uses_rtt,
             rerank=self.rerank, use_kernels=use_kernels,
             interpret=interpret, qos_params=cfg.qos,
         )
@@ -753,6 +796,9 @@ class ShardedRoutingEngine:
         server_load: Optional[np.ndarray] = None,
         telemetry_age_s: Optional[np.ndarray] = None,
         failed_mask: Optional[np.ndarray] = None,
+        client_rtt_ms: Optional[np.ndarray] = None,
+        client_region: Optional[np.ndarray] = None,
+        region_rtt_ms: Optional[np.ndarray] = None,
         *,
         telemetry_templates: Optional[tuple] = None,
     ) -> BatchDecisions:
@@ -762,7 +808,12 @@ class ShardedRoutingEngine:
         ``telemetry_templates=(compact [M, T], template_map [n_servers])``
         supplies telemetry in template-compact form — QoS is computed per
         template row and gathered per server, identical to densified
-        scoring but without materializing [n_servers, T].
+        scoring but without materializing [n_servers, T].  For SONAR-GEO
+        the ``(client_region [n_q], region_rtt_ms [n_regions, n_servers])``
+        pair keeps the RTT input compact the same way: the matrix is
+        sharded over the server axis once and each shard gathers its
+        queries' rows, so a mega fleet never materializes a per-query
+        [n_q, n_servers] RTT slab.
         """
         if batch.n == 0:
             z = np.zeros((0,), np.float32)
@@ -809,6 +860,15 @@ class ShardedRoutingEngine:
             dyn["load"] = self._shard_vec(server_load)
         if self.uses_staleness and telemetry_age_s is not None:
             dyn["age"] = self._shard_vec(telemetry_age_s)
+        if self.uses_rtt and self.cfg.delta != 0.0:
+            if client_rtt_ms is not None:
+                dyn["rtt"] = self._shard_vec(client_rtt_ms)
+            elif client_region is not None and region_rtt_ms is not None:
+                rr = jnp.asarray(region_rtt_ms, jnp.float32)
+                dyn["rtt_region"] = jnp.transpose(
+                    jnp.take(rr, self._server_gid, axis=1), (1, 0, 2)
+                )                                         # [J, R, s_pad]
+                dyn["region_idx"] = jnp.asarray(client_region, jnp.int32)
         if self.uses_failover and failed_mask is not None:
             dyn["dead"] = self._shard_vec(
                 np.asarray(failed_mask, np.float32)
@@ -831,12 +891,16 @@ class ShardedRoutingEngine:
         server_load: Optional[np.ndarray] = None,
         telemetry_age_s: Optional[np.ndarray] = None,
         failed_mask: Optional[np.ndarray] = None,
+        client_rtt_ms: Optional[np.ndarray] = None,
+        client_region: Optional[np.ndarray] = None,
+        region_rtt_ms: Optional[np.ndarray] = None,
         *,
         telemetry_templates: Optional[tuple] = None,
     ) -> BatchDecisions:
         return self.route(
             self.encode(queries), latency_hist, server_load,
-            telemetry_age_s, failed_mask,
+            telemetry_age_s, failed_mask, client_rtt_ms,
+            client_region, region_rtt_ms,
             telemetry_templates=telemetry_templates,
         )
 

@@ -224,6 +224,14 @@ class NetMCPPlatform:
         Chaos injection is not supported in tiled mode.
     chaos : repro.chaos.ChaosSchedule, optional
         Fault overlay (duck-typed to avoid a core -> chaos import cycle).
+    geo : repro.geo.GeoPlacement, optional
+        Multi-region WAN composition (duck-typed to avoid a core -> geo
+        import cycle).  Server traces stay *server-side* QoS; the
+        placement supplies the propagation half of the ground truth:
+        ``client_rtt_ms(region)`` rows feed SONAR-GEO's locality term and
+        ``total_latency_at`` composes observed latency = propagation RTT
+        + server-side latency — what the traffic simulator charges a
+        region-tagged request.
     """
 
     def __init__(
@@ -240,6 +248,8 @@ class NetMCPPlatform:
         chaos=None,   # Optional[repro.chaos.ChaosSchedule] (duck-typed to
                       # avoid a core -> chaos import cycle)
         template_map: Optional[np.ndarray] = None,
+        geo=None,     # Optional[repro.geo.GeoPlacement] (duck-typed to
+                      # avoid a core -> geo import cycle)
     ):
         assert mode in ("sim", "live")
         self.servers = list(servers) if servers is not None else None
@@ -259,6 +269,12 @@ class NetMCPPlatform:
         self.dt_s = dt_s
         self.history_window = history_window
         self.live_transport = live_transport
+        self.geo = geo
+        if geo is not None:
+            assert geo.server_region.size == self.n_servers, (
+                f"geo placement covers {geo.server_region.size} servers, "
+                f"platform has {self.n_servers}"
+            )
 
         if profiles is None:
             profiles = SCENARIOS[scenario](self.servers)
@@ -375,6 +391,33 @@ class NetMCPPlatform:
         if self.template_map is not None:
             return float(self.traces[self.template_map[server_idx], t_idx])
         return float(self.traces[server_idx, t_idx])
+
+    # -- geo-state queries ---------------------------------------------------
+    def client_rtt_ms(
+        self, client_region: int, t_idx: Optional[int] = None
+    ) -> Optional[np.ndarray]:
+        """f32 [n_servers] — propagation RTT from one client region to
+        every server at tick t (the SONAR-GEO `client_rtt_ms` input);
+        None without a geo placement or for an untagged (region < 0)
+        client."""
+        if self.geo is None or client_region is None or client_region < 0:
+            return None
+        return self.geo.client_rtt_ms(int(client_region), t_idx)
+
+    def total_latency_at(
+        self, server_idx: int, t_idx: int, client_region: int = -1
+    ) -> float:
+        """Region-composed ground truth: propagation RTT (client region ->
+        host region, shortest path at tick t) + the server-side latency.
+        Without a geo placement (or for an untagged client) this is
+        exactly `latency_at`."""
+        lat = self.latency_at(server_idx, t_idx)
+        if self.geo is None or client_region < 0:
+            return lat
+        rtt = self.geo.topology.rtt_matrix(t_idx)[
+            int(client_region), int(self.geo.server_region[server_idx])
+        ]
+        return lat + float(rtt)
 
     # -- chaos-state queries -------------------------------------------------
     def is_alive(self, server_idx: int, t_idx: int) -> bool:

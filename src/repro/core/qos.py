@@ -168,6 +168,34 @@ def staleness_discount(
 
 
 # ---------------------------------------------------------------------------
+# RTT penalty (SONAR-GEO extension of Eq. 8)
+# ---------------------------------------------------------------------------
+
+def rtt_penalty(
+    rtt_ms: jnp.ndarray, scale_ms: float = 150.0
+) -> jnp.ndarray:
+    """Normalized propagation-RTT penalty for the locality-aware fusion
+
+        S(i) = alpha*C(i) + beta*N(i) - gamma*U(rho_i) - delta*R(rtt_i)
+
+    where rtt is the client-region -> host-server propagation round-trip
+    time (ms) and
+
+        R(rtt) = rtt / (rtt + scale)
+
+    is the saturating normalization: exactly 0 at rtt = 0 (so SONAR-GEO is
+    byte-identical to SONAR-LB on a zero-RTT topology), 0.5 at
+    ``scale_ms``, monotone increasing and bounded below 1 — a 300 ms
+    trans-Pacific hop cannot drown the semantic term the way an unbounded
+    linear penalty would.  Pure elementwise f32 math shared verbatim by
+    the scalar router, the jit batched pipeline and the Pallas selection
+    kernel, preserving three-way argmax identity.
+    """
+    x = jnp.maximum(jnp.asarray(rtt_ms, jnp.float32), 0.0)
+    return x / (x + jnp.float32(scale_ms))
+
+
+# ---------------------------------------------------------------------------
 # Load penalty (SONAR-LB extension of Eq. 8)
 # ---------------------------------------------------------------------------
 

@@ -15,6 +15,11 @@ Implements the four algorithms compared in the paper plus two extensions
   SONAR-FT   — SONAR-LB with staleness-discounted QoS and failed-server
                argmax masking + a bounded failover loop (reduces to
                SONAR-LB at zero faults).
+  SONAR-GEO  — SONAR-LB - delta*R(rtt): locality-aware fusion over a
+               multi-region WAN topology; R is the saturating
+               propagation-RTT penalty of the client region -> host
+               server path (reduces byte-identically to SONAR-LB when
+               every RTT is zero).
 
 Adaptation note (DESIGN.md §3): no LLM is available offline, so the
 "LLM preprocess" is a deterministic intent extractor with the same
@@ -36,6 +41,7 @@ from repro.core.qos import (
     QosParams,
     load_penalty,
     network_score,
+    rtt_penalty,
     staleness_discount,
 )
 
@@ -149,6 +155,13 @@ class RoutingConfig:
     # `select_failover` / `BatchRoutingEngine.route_failover`.
     stale_half_life_s: float = 180.0
     failover_budget: int = 2
+    # Locality-aware extension (SONAR-GEO): S -= delta * R(rtt) with
+    # R(rtt) = rtt / (rtt + rtt_scale_ms) the saturating propagation-RTT
+    # penalty of core.qos.rtt_penalty.  Only consulted when the algorithm
+    # `uses_rtt` AND a client RTT vector is supplied; delta=0 or
+    # rtt=None (or an all-zero RTT topology) reduces exactly to SONAR-LB.
+    delta: float = 0.4             # locality weight
+    rtt_scale_ms: float = 150.0    # RTT at which the penalty reaches 0.5
     # Softmax temperature of Eq. 5 ("amplifies the relative differences
     # between expert tools and non-expert tools").
     expertise_temp: float = 1.0
@@ -171,13 +184,24 @@ class ToolIndex:
         self.tool_server = np.asarray(self.tool_server, dtype=np.int32)
         self.n_tools = len(tool_docs)
 
+    @staticmethod
+    def _row_scores(weights: np.ndarray, q: np.ndarray) -> np.ndarray:
+        """Row-deterministic matvec: ``(W * q).sum(axis=1)`` reduces every
+        row in the same traversal order, so *identical* rows (replica
+        fleets) score bit-identically.  BLAS ``W @ q`` does not guarantee
+        that — its remainder-row kernels can round the tail rows one ulp
+        apart (observed at n_docs = 9, 11 on x86), which silently breaks
+        the tie structure that argmax parity with the batched/sharded
+        engines (where XLA ties exactly) depends on."""
+        return np.asarray((weights * q[None, :]).sum(axis=1, dtype=np.float32))
+
     def server_scores(self, qtext: str) -> np.ndarray:
         q = self.server_corpus.encode_query(qtext)
-        return np.asarray(self.server_corpus.weights @ q)
+        return self._row_scores(self.server_corpus.weights, q)
 
     def tool_scores(self, qtext: str) -> np.ndarray:
         q = self.tool_corpus.encode_query(qtext)
-        return np.asarray(self.tool_corpus.weights @ q)
+        return self._row_scores(self.tool_corpus.weights, q)
 
 
 class Router:
@@ -189,6 +213,7 @@ class Router:
     uses_load = False
     uses_staleness = False
     uses_failover = False
+    uses_rtt = False
     rerank = False
 
     def __init__(self, servers: Sequence[Server], cfg: RoutingConfig = RoutingConfig()):
@@ -237,9 +262,10 @@ class Router:
         server_load: Optional[np.ndarray] = None,
         telemetry_age_s: Optional[np.ndarray] = None,
         failed_mask: Optional[np.ndarray] = None,
+        client_rtt_ms: Optional[np.ndarray] = None,
     ) -> Decision:
         """Route one query (Algorithm 1): two-stage retrieval, Eq. 5
-        softmax expertise, QoS/load/staleness fusion, argmax.
+        softmax expertise, QoS/load/staleness/locality fusion, argmax.
 
         Parameters
         ----------
@@ -262,6 +288,11 @@ class Router:
             servers are demoted below live ones before the stage-1 top-s
             and excluded from the final argmax (their candidates keep
             softmax mass).
+        client_rtt_ms : np.ndarray, optional
+            f32 [n_servers] propagation RTT in **ms** from the requesting
+            client's region to each server (one row of the region->server
+            RTT matrix).  SONAR-GEO only; None, delta=0 or all-zero RTTs
+            reduce byte-identically to SONAR-LB.
 
         Returns
         -------
@@ -281,7 +312,9 @@ class Router:
             # description (the "LLM" reads tool docs properly), ~20 s cost.
             _, q_pre = predict_tool_type(query)
             q = self.index.tool_corpus.encode_query(q_pre)
-            scores = np.asarray(self.index.tool_corpus.weights[cand_tools] @ q)
+            scores = ToolIndex._row_scores(
+                self.index.tool_corpus.weights[cand_tools], q
+            )
             sl += LLM_RERANK_MS
 
         C = self._expertise(scores)
@@ -306,6 +339,11 @@ class Router:
                 load_penalty(rho, self.cfg.load_knee, self.cfg.load_sharp)
             )
             S = S - self.cfg.gamma * U
+
+        if self.uses_rtt and client_rtt_ms is not None and self.cfg.delta != 0.0:
+            rtt = np.asarray(client_rtt_ms, np.float32)[cand_hosts]
+            R = np.asarray(rtt_penalty(rtt, self.cfg.rtt_scale_ms))
+            S = S - self.cfg.delta * R
 
         if self.uses_failover and failed_mask is not None:
             # known-failed servers are removed from the argmax but keep
@@ -336,6 +374,7 @@ class Router:
         alive: Optional[np.ndarray] = None,      # [n_servers] bool probe result
         failed_mask: Optional[np.ndarray] = None,
         budget: Optional[int] = None,
+        client_rtt_ms: Optional[np.ndarray] = None,
     ) -> tuple[Decision, int]:
         """Failover loop (SONAR-FT): route, probe the pick against `alive`,
         and on a dead pick re-route with that server masked out — at most
@@ -356,6 +395,7 @@ class Router:
                 query, latency_hist, server_load,
                 telemetry_age_s=telemetry_age_s,
                 failed_mask=mask if mask.any() else None,
+                client_rtt_ms=client_rtt_ms,
             )
             if up is None or up[d.server_idx] or failovers >= budget:
                 return d, failovers
@@ -422,6 +462,30 @@ class SonarFTRouter(SonarLBRouter):
     uses_failover = True
 
 
+class SonarGeoRouter(SonarLBRouter):
+    """SONAR-GEO: locality-aware SONAR-LB for multi-region WAN fleets.
+
+    One pure extension of the fusion (Eq. 8):
+
+        S(i) = alpha*C(i) + beta*N(i) - gamma*U(rho_i) - delta*R(rtt_i)
+        R(rtt) = rtt / (rtt + rtt_scale_ms)
+
+    where rtt_i is the propagation round-trip time from the *requesting
+    client's region* to candidate i's host server (one row of a
+    region->server RTT matrix, e.g. `repro.geo.GeoPlacement`).  The QoS
+    term N stays server-side (queueing, congestion, outages at the
+    server); R carries the geographic half of the observed latency —
+    "observed latency = propagation RTT + server-side QoS".
+
+    With `client_rtt_ms=None`, delta=0, or an all-zero RTT topology this
+    is byte-identical to SONAR-LB (R(0) = 0 exactly), so every parity
+    guarantee carries through all routing paths.
+    """
+
+    name = "SONAR-GEO"
+    uses_rtt = True
+
+
 ALGORITHMS = {
     "rag": RagRouter,
     "rerank_rag": RerankRagRouter,
@@ -429,6 +493,7 @@ ALGORITHMS = {
     "sonar": SonarRouter,
     "sonar_lb": SonarLBRouter,
     "sonar_ft": SonarFTRouter,
+    "sonar_geo": SonarGeoRouter,
 }
 
 

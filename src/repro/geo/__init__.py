@@ -1,0 +1,23 @@
+"""Multi-region WAN topology layer: regions, great-circle propagation
+RTTs, per-link latency states, server placement maps, client populations
+and region-tagged demand — the geographic scenario axis behind the
+locality-aware SONAR-GEO algorithm (``core.routing.SonarGeoRouter``)."""
+from repro.geo.placement import (  # noqa: F401
+    GeoPlacement,
+    client_populations,
+    place_servers,
+    regional_arrivals,
+)
+from repro.geo.topology import (  # noqa: F401
+    FIBER_KM_PER_MS,
+    HOP_OVERHEAD_MS,
+    LINK_STATES,
+    REGION_CATALOG,
+    ROUTE_INFLATION,
+    Region,
+    WanLink,
+    WanTopology,
+    build_topology,
+    great_circle_km,
+    propagation_rtt_ms,
+)

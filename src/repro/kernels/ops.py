@@ -104,11 +104,15 @@ def fused_select(
     beta: float,
     gamma: float = 0.0,
     temp: float = 1.0,
+    tool_rtt: Optional[jax.Array] = None,   # [n_q, n_tools] or [n_tools]
+                                            # per-tool RTT penalty R
+    delta: float = 0.0,
     interpret: Optional[bool] = None,
 ):
     """Winning (tool_idx, C, N, S) per query; exact match of the scalar
     candidate->softmax->fuse->argmax tail of `Router.select` (with the
-    SONAR-LB load term when tool_load/gamma are given, and the SONAR-FT
+    SONAR-LB load term when tool_load/gamma are given, the SONAR-GEO
+    locality term when tool_rtt/delta are given, and the SONAR-FT
     failed-server argmax exclusion when tool_dead is given)."""
     n_q, n_t = sel_scores.shape
     k = min(k, n_t)
@@ -127,6 +131,7 @@ def fused_select(
         return (x if per_query else x[None, :]), per_query
 
     load, per_query_load = _row_arg(tool_load)
+    rtt, per_query_rtt = _row_arg(tool_rtt)
     dead, per_query_dead = _row_arg(tool_dead)
 
     sel = _pad_to(_pad_to(sel, 1, 128, value=_sel.NEG), 0, _sel.QUERY_TILE,
@@ -139,15 +144,18 @@ def fused_select(
     load = _pad_to(load, 1, 128)
     if per_query_load:
         load = _pad_to(load, 0, _sel.QUERY_TILE)
+    rtt = _pad_to(rtt, 1, 128)
+    if per_query_rtt:
+        rtt = _pad_to(rtt, 0, _sel.QUERY_TILE)
     dead = _pad_to(dead, 1, 128)
     if per_query_dead:
         dead = _pad_to(dead, 0, _sel.QUERY_TILE)
     idx, c, n, s = _sel.fused_select_pallas(
-        sel, val, qos, load, dead,
+        sel, val, qos, load, rtt, dead,
         k=k, alpha=float(alpha), beta=float(beta), gamma=float(gamma),
-        temp=float(temp),
+        delta=float(delta), temp=float(temp),
         per_query_qos=per_query_qos, per_query_load=per_query_load,
-        per_query_dead=per_query_dead,
+        per_query_rtt=per_query_rtt, per_query_dead=per_query_dead,
         interpret=_auto_interpret(interpret),
     )
     return idx[:n_q], c[:n_q], n[:n_q], s[:n_q]

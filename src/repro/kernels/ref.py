@@ -27,10 +27,13 @@ def fused_select_ref(
     beta: float,
     gamma: float = 0.0,
     temp: float = 1.0,
+    tool_rtt: jax.Array | None = None,   # [n_q, n_tools] or [n_tools] — R
+    delta: float = 0.0,
 ):
     """Pure-jnp oracle for kernels/select_fuse: stage-2 top-k (ties -> lower
     index), Eq. 5 softmax over the valid candidates, Eq. 8 fusion (plus the
-    SONAR-LB load term -gamma*U and the SONAR-FT failed-server mask), argmax.
+    SONAR-LB load term -gamma*U, the SONAR-GEO locality term -delta*R and
+    the SONAR-FT failed-server mask), argmax.
     Dead candidates keep their softmax mass (they are excluded from the
     *argmax* only), matching the scalar router's post-fusion masking; if
     every candidate is masked/invalid the top-selection candidate wins."""
@@ -49,10 +52,18 @@ def fused_select_ref(
 
     n = _gather(tool_qos)
     u = _gather(tool_load) if tool_load is not None else jnp.zeros_like(n)
+    r = _gather(tool_rtt) if tool_rtt is not None else jnp.zeros_like(n)
     z = (val - jnp.max(val, axis=-1, keepdims=True)) / temp
     e = jnp.exp(z)
     c = e / jnp.maximum(e.sum(axis=-1, keepdims=True), 1e-30)
-    s = jnp.where(valid, alpha * c + beta * n - gamma * u, NEG)
+    # NB: with delta != 0 XLA may FMA-contract this 4-term expression
+    # differently across independently-compiled pipelines (batched vs
+    # sharded), so SONAR-GEO's fused *score* is only reproduced to ~1 ulp
+    # between them; decisions stay argmax-identical because candidates
+    # with bit-identical inputs contract identically (exact ties still
+    # tie).  With delta == 0 the term folds away and the historical
+    # bit-identity of all other algorithms is preserved.
+    s = jnp.where(valid, alpha * c + beta * n - gamma * u - delta * r, NEG)
     if tool_dead is not None:
         s = jnp.where(_gather(tool_dead) > 0.0, NEG, s)
     best = jnp.argmax(s, axis=-1)                            # first max wins

@@ -20,6 +20,9 @@ Inputs per query row
   qos  [n_tools]  — per-tool network score N (Eq. 7), broadcast from the
                     host server; zeros when the algorithm is semantic-only.
   load [n_tools]  — per-tool utilization penalty U (SONAR-LB); zeros off.
+  rtt  [n_tools]  — per-tool propagation-RTT penalty R (SONAR-GEO),
+                    broadcast from the host server's client-region RTT;
+                    zeros off.
   dead [n_tools]  — >0 marks tools on known-failed servers (SONAR-FT
                     failover mask); they keep softmax mass but are excluded
                     from the final argmax.  Zeros off.
@@ -51,14 +54,16 @@ NEG = -1e30         # finite -inf stand-in (avoids inf-inf NaNs in VMEM math)
 
 
 def _select_kernel(
-    sel_ref, val_ref, qos_ref, load_ref, dead_ref,
+    sel_ref, val_ref, qos_ref, load_ref, rtt_ref, dead_ref,
     idx_ref, c_ref, n_ref, s_ref,
-    *, k: int, alpha: float, beta: float, gamma: float, temp: float,
+    *, k: int, alpha: float, beta: float, gamma: float, delta: float,
+    temp: float,
 ):
     sel = sel_ref[...].astype(jnp.float32)   # [QT, T_pad]
     val = val_ref[...].astype(jnp.float32)   # [QT, T_pad]
     qos = qos_ref[...].astype(jnp.float32)   # [QT or 1, T_pad]
     load = load_ref[...].astype(jnp.float32)  # [QT or 1, T_pad] — U penalty
+    rtt = rtt_ref[...].astype(jnp.float32)   # [QT or 1, T_pad] — R penalty
     dead = dead_ref[...].astype(jnp.float32)  # [QT or 1, T_pad] — failover mask
     QT, T_pad = sel.shape
 
@@ -66,7 +71,9 @@ def _select_kernel(
 
     # --- k-step extraction: peel the row maximum k times (ties -> lowest
     # index, matching a stable descending argsort) ---
-    cand_val, cand_qos, cand_load, cand_dead, cand_idx = [], [], [], [], []
+    cand_val, cand_qos, cand_load, cand_rtt, cand_dead, cand_idx = (
+        [], [], [], [], [], []
+    )
     cur = sel
     for _ in range(k):
         m = jnp.max(cur, axis=-1, keepdims=True)                    # [QT, 1]
@@ -77,11 +84,13 @@ def _select_kernel(
         v = jnp.sum(val * onehot, axis=-1, keepdims=True)
         n = jnp.sum(qos * onehot, axis=-1, keepdims=True)
         u = jnp.sum(load * onehot, axis=-1, keepdims=True)
+        r = jnp.sum(rtt * onehot, axis=-1, keepdims=True)
         d = jnp.sum(dead * onehot, axis=-1, keepdims=True)
         valid = m > NEG / 2.0
         cand_val.append(jnp.where(valid, v, NEG))
         cand_qos.append(n)
         cand_load.append(u)
+        cand_rtt.append(r)
         cand_dead.append(d)
         cand_idx.append(idx)
         cur = jnp.where(onehot > 0.0, NEG, cur)
@@ -105,11 +114,11 @@ def _select_kernel(
     best_c = exps[0] / denom
     best_n = cand_qos[0]
     best_i = cand_idx[0]
-    for v, e, n, u, d, i in zip(
-        cand_val, exps, cand_qos, cand_load, cand_dead, cand_idx
+    for v, e, n, u, r, d, i in zip(
+        cand_val, exps, cand_qos, cand_load, cand_rtt, cand_dead, cand_idx
     ):
         c = e / denom
-        s = alpha * c + beta * n - gamma * u
+        s = alpha * c + beta * n - gamma * u - delta * r
         s = jnp.where(v > NEG / 2.0, s, NEG)
         s = jnp.where(d > 0.0, NEG, s)
         take = s > best_s
@@ -127,8 +136,9 @@ def _select_kernel(
 @functools.partial(
     jax.jit,
     static_argnames=(
-        "k", "alpha", "beta", "gamma", "temp",
-        "per_query_qos", "per_query_load", "per_query_dead", "interpret",
+        "k", "alpha", "beta", "gamma", "delta", "temp",
+        "per_query_qos", "per_query_load", "per_query_rtt", "per_query_dead",
+        "interpret",
     ),
 )
 def fused_select_pallas(
@@ -136,15 +146,18 @@ def fused_select_pallas(
     val: jax.Array,   # [n_q_pad, T_pad] f32
     qos: jax.Array,   # [n_q_pad or 1, T_pad] f32
     load: jax.Array,  # [n_q_pad or 1, T_pad] f32 — per-tool U penalty
+    rtt: jax.Array,   # [n_q_pad or 1, T_pad] f32 — per-tool R penalty
     dead: jax.Array,  # [n_q_pad or 1, T_pad] f32 — >0 excludes from argmax
     *,
     k: int,
     alpha: float,
     beta: float,
     gamma: float,
+    delta: float,
     temp: float,
     per_query_qos: bool,
     per_query_load: bool,
+    per_query_rtt: bool,
     per_query_dead: bool,
     interpret: bool = False,
 ):
@@ -163,7 +176,8 @@ def fused_select_pallas(
     out_shape = jax.ShapeDtypeStruct((n_q, 1), jnp.float32)
     idx, c, n, s = pl.pallas_call(
         functools.partial(
-            _select_kernel, k=k, alpha=alpha, beta=beta, gamma=gamma, temp=temp
+            _select_kernel, k=k, alpha=alpha, beta=beta, gamma=gamma,
+            delta=delta, temp=temp,
         ),
         grid=grid,
         in_specs=[
@@ -171,6 +185,7 @@ def fused_select_pallas(
             pl.BlockSpec((QUERY_TILE, T_pad), lambda i: (i, 0)),
             _row_spec(per_query_qos),
             _row_spec(per_query_load),
+            _row_spec(per_query_rtt),
             _row_spec(per_query_dead),
         ],
         out_specs=[out_spec, out_spec, out_spec, out_spec],
@@ -179,5 +194,5 @@ def fused_select_pallas(
             out_shape, out_shape, out_shape,
         ],
         interpret=interpret,
-    )(sel, val, qos, load, dead)
+    )(sel, val, qos, load, rtt, dead)
     return idx[:, 0], c[:, 0], n[:, 0], s[:, 0]

@@ -165,6 +165,12 @@ class SonarGateway:
     mesh : Mesh | "auto" | None
         Passed to the sharded engine (``"auto"`` uses a real device mesh
         when enough devices exist, else the bit-identical emulation).
+    region_rtt_ms : np.ndarray, optional
+        f32 [n_regions, n_replicas] propagation RTT from each client
+        region to each replica (e.g. `repro.geo.GeoPlacement
+        .region_server_rtt()`).  With a locality-aware algorithm
+        (``algo="sonar_geo"``) requests routed with a ``client_region``
+        pay attention to distance; other algorithms ignore it.
     """
 
     def __init__(
@@ -183,6 +189,7 @@ class SonarGateway:
         probe_prob: float = 0.15,              # per-request re-admission probe
         shards: Optional[int] = None,
         mesh="auto",
+        region_rtt_ms: Optional[np.ndarray] = None,
     ):
         self.replicas = list(replicas)
         self.algo = algo.lower().replace("-", "_")
@@ -194,6 +201,10 @@ class SonarGateway:
         self.lb_chunk = lb_chunk
         self.shards = shards
         self._mesh_opt = mesh
+        self.region_rtt_ms = (
+            None if region_rtt_ms is None
+            else np.asarray(region_rtt_ms, np.float32)
+        )
         self._engine = None
         n = len(self.replicas)
         # in-flight accounting: callers running concurrent traffic use
@@ -241,6 +252,19 @@ class SonarGateway:
     def _utilization(self) -> np.ndarray:
         return self.in_flight / self.capacity
 
+    def _rtt_row(self, client_region: Optional[int]) -> Optional[np.ndarray]:
+        """[n_replicas] RTT row for one client region (None when the
+        gateway has no RTT matrix, the algorithm is locality-blind, or the
+        request is untagged)."""
+        if (
+            self.region_rtt_ms is None
+            or not getattr(self.router, "uses_rtt", False)
+            or client_region is None
+            or client_region < 0
+        ):
+            return None
+        return self.region_rtt_ms[int(client_region)]
+
     # -- health tracking (SONAR-FT ejection + probe re-admission) -----------
     def _health_mask(self, n_requests: Optional[int] = None) -> Optional[np.ndarray]:
         """failed-mask for the next routing decision: ejected replicas are
@@ -274,13 +298,16 @@ class SonarGateway:
                 self.ejected[idx] = True
 
     # -- concurrent dispatch accounting (SONAR-LB) --------------------------
-    def begin(self, request_text: str) -> RouteResult:
+    def begin(
+        self, request_text: str, client_region: Optional[int] = None
+    ) -> RouteResult:
         """Route and dispatch without completing: the pick is counted
         in-flight until `finish` is called.  This is the API a concurrent
         front door drives; `route` is the synchronous convenience."""
         decision = self.router.select(
             request_text, self.telemetry, self._utilization(),
             failed_mask=self._health_mask(),
+            client_rtt_ms=self._rtt_row(client_region),
         )
         idx = decision.server_idx
         self.in_flight[idx] += 1.0
@@ -302,10 +329,13 @@ class SonarGateway:
         self.stats.append(res)
         return res
 
-    def route(self, request_text: str) -> RouteResult:
+    def route(
+        self, request_text: str, client_region: Optional[int] = None
+    ) -> RouteResult:
         decision = self.router.select(
             request_text, self.telemetry, self._utilization(),
             failed_mask=self._health_mask(),
+            client_rtt_ms=self._rtt_row(client_region),
         )
         idx = decision.server_idx
         if self.executor is not None:
@@ -341,11 +371,18 @@ class SonarGateway:
                 )
         return self._engine
 
-    def route_batch(self, request_texts: Sequence[str]) -> list:
+    def route_batch(
+        self,
+        request_texts: Sequence[str],
+        client_regions: Optional[Sequence[int]] = None,
+    ) -> list:
         """Fleet-scale batched routing: the request batch runs through the
         jit-compiled engine (two-stage BM25 + Pallas QoS + fused selection)
         against one telemetry snapshot; executions are then recorded in
-        arrival order (feed-forward, Sec. III-B).
+        arrival order (feed-forward, Sec. III-B).  ``client_regions``
+        (aligned with the texts) tags each request's origin for
+        locality-aware algorithms; the per-request RTT rows are gathered
+        inside the engine from the gateway's region RTT matrix.
 
         With a load-aware algorithm the batch is routed in `lb_chunk`-sized
         chunks: each chunk's picks are counted in-flight before the next
@@ -359,17 +396,38 @@ class SonarGateway:
             return []                 # nothing to route: do not build the
                                       # engine or touch accounting state
         if not self.use_kernels:
-            return [self.route(t) for t in request_texts]
+            return [
+                self.route(
+                    t,
+                    None if client_regions is None else client_regions[i],
+                )
+                for i, t in enumerate(request_texts)
+            ]
         eng = self.engine()
+        use_geo = (
+            client_regions is not None
+            and self.region_rtt_ms is not None
+            and getattr(self.router, "uses_rtt", False)
+        )
+        regions_arr = (
+            np.asarray(client_regions, np.int32) if use_geo else None
+        )
         picks: list = []
         chunked = self.router.uses_load and len(self.replicas) > 1
         step = self.lb_chunk if chunked else len(request_texts)
         step = max(step, 1)
         for lo in range(0, len(request_texts), step):
             chunk = request_texts[lo : lo + step]
+            geo_kw = {}
+            if use_geo:
+                geo_kw = dict(
+                    client_region=regions_arr[lo : lo + len(chunk)],
+                    region_rtt_ms=self.region_rtt_ms,
+                )
             dec = eng.route_texts(
                 chunk, self._telemetry.raw(), self._utilization(),
                 failed_mask=self._health_mask(len(chunk)),
+                **geo_kw,
             )
             for qi in range(len(chunk)):
                 idx = int(dec.server_idx[qi])

@@ -42,9 +42,13 @@ def ideal_platform(
     seed: int = 0,
     horizon_s: float = 900.0,
     dt_s: float = 1.0,
+    geo=None,
 ) -> NetMCPPlatform:
     """Healthy network for every replica, at a 1 s observation tick so the
-    feed-forward loop is responsive on traffic timescales."""
+    feed-forward loop is responsive on traffic timescales.  An optional
+    `repro.geo.GeoPlacement` composes propagation RTTs on top (the
+    adversarial fleet for locality-blind routing: identical replicas,
+    healthy server-side network, all the latency variance geographic)."""
     return NetMCPPlatform(
         servers,
         profiles=[L.ideal_profile() for _ in servers],
@@ -52,6 +56,7 @@ def ideal_platform(
         seed=seed,
         horizon_s=horizon_s,
         dt_s=dt_s,
+        geo=geo,
     )
 
 

@@ -35,6 +35,16 @@ copy in service when it goes down; both paths record an offline
 observation (blackout permitting), charge the retry budget and re-route
 with the dead server in the request's failed set — which failover-aware
 routers (SONAR-FT) receive as their failed-mask.
+
+Geo composition (repro.geo, via the platform's placement): when the
+platform carries a `GeoPlacement` and `run` receives region-tagged
+arrivals, each request's completion pays the propagation RTT of its
+client region -> winning server's region on top of queueing + service +
+server-side network (observed latency = propagation RTT + server QoS),
+and locality-aware routers (SONAR-GEO) receive the request's
+`client_rtt_ms` row so they can trade semantic fit against distance.
+The RTT-inclusive completion latency is what feeds forward into the
+observed history — exactly what a client-side monitor would report.
 """
 from __future__ import annotations
 
@@ -60,6 +70,7 @@ class Request:
     text: str
     t_arrival_ms: float
     budget: int                  # remaining retry/hedge budget
+    region: int = -1             # client region (geo); -1 = untagged
     done: bool = False
     failed: bool = False
     live_copies: int = 0
@@ -183,7 +194,8 @@ class FleetTrafficSim:
             self._win_key = key
         return self._win
 
-    def _route(self, text: str, now_ms: float, failed: set = frozenset()) -> int:
+    def _route(self, text: str, now_ms: float, failed: set = frozenset(),
+               region: int = -1) -> int:
         tick = self._tick(now_ms)
         hist = self._window(tick)
         loads = self._loads()
@@ -195,6 +207,10 @@ class FleetTrafficSim:
                 mask = np.zeros(len(self.queues), bool)
                 mask[list(failed)] = True
                 kwargs["failed_mask"] = mask
+            if getattr(self.router, "uses_rtt", False):
+                rtt = self.platform.client_rtt_ms(region, tick)
+                if rtt is not None:
+                    kwargs["client_rtt_ms"] = rtt
             return self.router.select(text, hist, loads, **kwargs).server_idx
         return int(self.router(text, hist, loads))
 
@@ -220,7 +236,7 @@ class FleetTrafficSim:
 
     # -- event handlers ------------------------------------------------------
     def _dispatch(self, req: Request, now_ms: float, exclude: frozenset = frozenset()):
-        server = self._route(req.text, now_ms, req.failed_servers)
+        server = self._route(req.text, now_ms, req.failed_servers, req.region)
         req.n_routes += 1
         if not self.platform.is_alive(server, self._tick(now_ms)):
             # connection refused: the station is crashed or partitioned
@@ -277,7 +293,11 @@ class FleetTrafficSim:
                             server_dead=True)
             return
         req.done = True
-        net_ms = self.platform.latency_at(disp.server, self._tick(now_ms))
+        # region-composed network latency: server-side QoS + propagation
+        # RTT of the request's client region (zero for untagged requests)
+        net_ms = self.platform.total_latency_at(
+            disp.server, self._tick(now_ms), req.region
+        )
         req.t_start_ms = disp.t_start_ms
         req.t_finish_ms = now_ms + net_ms
         req.service_ms = disp.service_ms
@@ -320,9 +340,20 @@ class FleetTrafficSim:
         self,
         arrivals_s: np.ndarray,
         texts: Sequence[str],
+        regions: Optional[np.ndarray] = None,
     ) -> TrafficReport:
-        """Simulate one arrival stream; texts are cycled over the arrivals."""
-        arrivals_s = np.sort(np.asarray(arrivals_s, np.float64))
+        """Simulate one arrival stream; texts are cycled over the arrivals.
+
+        ``regions`` (optional, i32 aligned with ``arrivals_s``) tags each
+        request with its client region — see `repro.geo.regional_arrivals`.
+        Tagged requests pay the propagation RTT of their region to the
+        winning server on completion, and locality-aware routers receive
+        their region's RTT row."""
+        arrivals_s = np.asarray(arrivals_s, np.float64)
+        order = np.argsort(arrivals_s, kind="stable")
+        arrivals_s = arrivals_s[order]
+        if regions is not None:
+            regions = np.asarray(regions, np.int64)[order]
         n = arrivals_s.size
         # pre-sample every service draw from one jax stream (deterministic)
         n_draws = max(n * (2 + self.retry_budget), 1)
@@ -338,6 +369,7 @@ class FleetTrafficSim:
             Request(
                 rid=i, text=texts[i % len(texts)],
                 t_arrival_ms=1000.0 * t, budget=self.retry_budget,
+                region=int(regions[i]) if regions is not None else -1,
             )
             for i, t in enumerate(arrivals_s)
         ]

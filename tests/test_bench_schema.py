@@ -1,0 +1,114 @@
+"""Unit tests for the benchmark-artifact schema validator
+(tools/check_bench_schema.py) and the schema-validated writer
+(benchmarks/common.write_artifact)."""
+import json
+import pathlib
+import sys
+
+import pytest
+
+REPO_ROOT = pathlib.Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(REPO_ROOT))
+
+from tools.check_bench_schema import (  # noqa: E402
+    SCHEMAS,
+    schema_name_for,
+    validate_artifact,
+)
+from tools.check_bench_schema import main as schema_main  # noqa: E402
+
+GOOD_GEO = {
+    "replicas_per_region": 3,
+    "rate_rps": 6.0,
+    "horizon_s": 40.0,
+    "base_service_ms": 150.0,
+    "client_skew": 1.5,
+    "points": [
+        {
+            "algo": "sonar_geo", "n_regions": 3, "rtt_scale": 3.0,
+            "mean_cross_rtt_ms": 347.0, "rtt_dominant": True,
+            "p50_ms": 157.0, "p99_ms": 866.0, "goodput_rps": 4.5,
+            "failed": 0, "local_share": 0.99,
+        },
+        {
+            "algo": "sonar_lb", "n_regions": 3, "rtt_scale": 3.0,
+            "mean_cross_rtt_ms": 347.0, "rtt_dominant": True,
+            "p50_ms": 446.0, "p99_ms": 1238.0, "goodput_rps": 4.47,
+            "failed": 0, "local_share": 0.35,
+        },
+    ],
+}
+
+
+def test_known_schemas_cover_all_five_artifacts():
+    assert sorted(SCHEMAS) == [
+        "bench-results", "chaos-recovery", "geo-routing", "mega-fleet",
+        "offered-load",
+    ]
+    assert schema_name_for("some/dir/geo-routing.json") == "geo-routing"
+
+
+def test_valid_geo_payload_passes():
+    assert validate_artifact("geo-routing", GOOD_GEO) == []
+
+
+def test_missing_key_and_type_violations_are_reported():
+    bad = {k: v for k, v in GOOD_GEO.items() if k != "rate_rps"}
+    errs = validate_artifact("geo-routing", bad)
+    assert any("rate_rps" in e for e in errs)
+
+    bad2 = json.loads(json.dumps(GOOD_GEO))
+    bad2["points"][0]["p99_ms"] = "fast"
+    errs = validate_artifact("geo-routing", bad2)
+    assert any("p99_ms" in e and "number" in e for e in errs)
+
+    bad3 = json.loads(json.dumps(GOOD_GEO))
+    del bad3["points"][1]["algo"]
+    errs = validate_artifact("geo-routing", bad3)
+    assert any("points[1]" in e and "algo" in e for e in errs)
+
+
+def test_bool_is_not_a_number():
+    bad = json.loads(json.dumps(GOOD_GEO))
+    bad["rate_rps"] = True
+    assert any("rate_rps" in e for e in validate_artifact("geo-routing", bad))
+
+
+def test_unknown_schema_is_an_error():
+    errs = validate_artifact("nonexistent", {})
+    assert errs and "unknown artifact schema" in errs[0]
+
+
+def test_mega_fleet_parity_gate():
+    payload = {
+        "config": {}, "parity": {"ok": False},
+        "points": [{"algo": "sonar", "n_servers": 10, "n_shards": 2,
+                    "us_per_query": 1.0, "routes_per_s": 10.0}],
+    }
+    errs = validate_artifact("mega-fleet", payload)
+    assert any("parity.ok" in e for e in errs)
+    payload["parity"]["ok"] = True
+    assert validate_artifact("mega-fleet", payload) == []
+
+
+def test_cli_exit_codes(tmp_path, capsys):
+    good = tmp_path / "geo-routing.json"
+    good.write_text(json.dumps(GOOD_GEO))
+    assert schema_main([str(good)]) == 0
+    bad = tmp_path / "bad.json"
+    bad.write_text(json.dumps({"points": []}))
+    assert schema_main([str(bad), "--schema", "geo-routing"]) == 1
+    assert schema_main([str(tmp_path / "missing.json"),
+                        "--schema", "geo-routing"]) == 1
+    capsys.readouterr()
+
+
+def test_write_artifact_validates(tmp_path):
+    sys.path.insert(0, str(REPO_ROOT))
+    from benchmarks.common import write_artifact
+
+    out = tmp_path / "geo-routing.json"
+    write_artifact(str(out), GOOD_GEO)
+    assert json.loads(out.read_text())["rate_rps"] == 6.0
+    with pytest.raises(ValueError, match="violates schema"):
+        write_artifact(str(tmp_path / "geo-routing.json"), {"points": []})

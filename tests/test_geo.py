@@ -1,0 +1,609 @@
+"""Geo-topology layer tests: RTT composition invariants (hypothesis),
+placement/arrival determinism, platform/simulator composition, SONAR-GEO
+reduction identity and three-path + sharded parity, and the chaos
+regional-partition composition.
+"""
+import jax
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import routing
+from repro.core.batch_routing import BatchRoutingEngine
+from repro.core.mesh_routing import ShardedRoutingEngine
+from repro.core.qos import rtt_penalty
+from repro.core.routing import RoutingConfig
+from repro.geo import (
+    HOP_OVERHEAD_MS,
+    REGION_CATALOG,
+    GeoPlacement,
+    build_topology,
+    client_populations,
+    great_circle_km,
+    place_servers,
+    propagation_rtt_ms,
+)
+from repro.geo.placement import regional_arrivals
+from repro.traffic import (
+    FleetTrafficSim,
+    QueueConfig,
+    ideal_platform,
+    replica_fleet,
+)
+
+QUERY_TEXTS = [
+    "search the web for the latest news",
+    "what is the weather forecast tomorrow",
+]
+
+
+# ---------------------------------------------------------------------------
+# Topology / RTT composition properties
+# ---------------------------------------------------------------------------
+
+def test_great_circle_and_propagation_sanity():
+    us_east, eu_west, ap_ne = (
+        REGION_CATALOG[0], REGION_CATALOG[1], REGION_CATALOG[2]
+    )
+    d_atl = great_circle_km(us_east, eu_west)
+    d_pac = great_circle_km(us_east, ap_ne)
+    assert 5000.0 < d_atl < 7500.0          # DC -> Dublin ~ 5500 km
+    assert 9000.0 < d_pac < 12500.0         # DC -> Tokyo ~ 11000 km
+    assert propagation_rtt_ms(d_pac) > propagation_rtt_ms(d_atl) > 0.0
+    assert great_circle_km(us_east, us_east) == pytest.approx(0.0)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    n_regions=st.integers(2, len(REGION_CATALOG)),
+    seed=st.integers(0, 2**31 - 1),
+    t_kind=st.sampled_from(["static", "tick"]),
+    rtt_scale=st.floats(0.0, 5.0),
+)
+def test_rtt_matrix_invariants(n_regions, seed, t_kind, rtt_scale):
+    """Symmetry, zero diagonal, nonnegativity and the triangle inequality
+    of the shortest-path RTT matrix, for any seed, region count, scale and
+    tick (the time-varying overlays must not break metric structure)."""
+    topo = build_topology(
+        n_regions, seed=seed, horizon_s=1800.0, rtt_scale=rtt_scale
+    )
+    t_idx = None if t_kind == "static" else seed % topo.n_steps
+    m = topo.rtt_matrix(t_idx)
+    assert m.shape == (n_regions, n_regions)
+    np.testing.assert_allclose(m, m.T, rtol=1e-6)
+    np.testing.assert_allclose(np.diag(m), 0.0)
+    assert (m >= 0.0).all() and np.isfinite(m).all()
+    # shortest-path => triangle inequality (f32 slack)
+    for b in range(n_regions):
+        lhs = m
+        rhs = m[:, b : b + 1] + m[b : b + 1, :]
+        assert (lhs <= rhs + 1e-2).all()
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    n_regions=st.integers(3, len(REGION_CATALOG)),
+    seed=st.integers(0, 2**31 - 1),
+    path_seed=st.integers(0, 2**31 - 1),
+)
+def test_path_rtt_monotone_in_hops(n_regions, seed, path_seed):
+    """Adding a hop never reduces RTT: every prefix of a random path costs
+    no more than the full path, and any explicit path dominates the
+    shortest-path matrix entry for its endpoints."""
+    topo = build_topology(n_regions, seed=seed, horizon_s=1800.0)
+    rng = np.random.default_rng(path_seed)
+    path = list(rng.integers(0, n_regions, size=rng.integers(2, 6)))
+    t_idx = path_seed % topo.n_steps
+    costs = [
+        topo.path_rtt_ms(path[: i + 1], t_idx) for i in range(1, len(path))
+    ]
+    for shorter, longer in zip(costs, costs[1:]):
+        assert longer >= shorter - 1e-6
+    m = topo.rtt_matrix(t_idx)
+    full = topo.path_rtt_ms(path, t_idx)
+    assert full >= m[path[0], path[-1]] - 1e-2
+    if len(path) > 1 and path[0] != path[-1]:
+        # hop overhead is charged per traversed link
+        assert full >= (len(path) - 1) * HOP_OVERHEAD_MS - 1e-6
+
+
+def test_zero_rtt_scale_collapses_to_single_site():
+    """rtt_scale=0 scales the *whole* edge cost (propagation + overlay +
+    hop overhead), so the topology collapses to exactly-zero RTTs — the
+    benchmark's 0.0 control point where SONAR-GEO must equal SONAR-LB
+    byte-for-byte."""
+    topo = build_topology(4, seed=5, horizon_s=1800.0, rtt_scale=0.0)
+    for t_idx in (None, 0, 77):
+        np.testing.assert_array_equal(
+            topo.rtt_matrix(t_idx), np.zeros((4, 4), np.float32)
+        )
+    pl = GeoPlacement(topo, place_servers(6, 4))
+    servers = replica_fleet(6)
+    cfg = RoutingConfig(top_s=6, top_k=6)
+    hist = np.random.default_rng(0).uniform(
+        5.0, 400.0, size=(6, 24)
+    ).astype(np.float32)
+    a = routing.make_router("sonar_lb", servers, cfg).select(
+        "search the web", hist
+    )
+    b = routing.make_router("sonar_geo", servers, cfg).select(
+        "search the web", hist, client_rtt_ms=pl.client_rtt_ms(0)
+    )
+    assert (a.server_idx, a.tool_idx, a.fused) == (
+        b.server_idx, b.tool_idx, b.fused
+    )
+
+
+def test_rtt_matrix_deterministic_and_congestion_reroutes():
+    topo_a = build_topology(4, seed=7, horizon_s=1800.0)
+    topo_b = build_topology(4, seed=7, horizon_s=1800.0)
+    np.testing.assert_array_equal(topo_a.rtt_matrix(42), topo_b.rtt_matrix(42))
+    # a congested/outaged direct link can be beaten by an indirect path:
+    # the matrix entry is then strictly below the direct edge weight
+    found = False
+    for t in range(0, topo_a.n_steps, 16):
+        w = topo_a.edge_weights(t)
+        m = topo_a.rtt_matrix(t)
+        if (m < w - 1e-3).any():
+            found = True
+            break
+    assert found, "no tick where shortest-path beats a direct link"
+
+
+# ---------------------------------------------------------------------------
+# Placement / arrivals
+# ---------------------------------------------------------------------------
+
+def test_place_servers_balanced_and_skewed():
+    balanced = place_servers(10, 4)
+    counts = np.bincount(balanced, minlength=4)
+    assert counts.max() - counts.min() <= 1
+    skewed = place_servers(12, 4, seed=0, skew=2.0)
+    sk = np.bincount(skewed, minlength=4)
+    assert sk[0] == sk.max() and sk.min() >= 1 and sk.sum() == 12
+    np.testing.assert_array_equal(skewed, place_servers(12, 4, seed=0, skew=2.0))
+
+
+def test_client_populations_normalized():
+    for skew in (0.0, 1.0, 2.5):
+        w = client_populations(5, skew)
+        assert w.sum() == pytest.approx(1.0, abs=1e-6)
+        assert (w > 0).all()
+    w = client_populations(4, 1.5)
+    assert w[0] > w[1] > w[2] > w[3]
+
+
+def test_regional_arrivals_tagged_sorted_deterministic():
+    topo = build_topology(3, seed=0, horizon_s=3600.0)
+    pl = GeoPlacement(topo, place_servers(6, 3), client_populations(3, 1.0))
+    t1, r1 = regional_arrivals(jax.random.PRNGKey(5), pl, 8.0, 60.0)
+    t2, r2 = regional_arrivals(jax.random.PRNGKey(5), pl, 8.0, 60.0)
+    np.testing.assert_array_equal(t1, t2)
+    np.testing.assert_array_equal(r1, r2)
+    assert t1.size == r1.size and (np.diff(t1) >= 0).all()
+    assert set(np.unique(r1)) <= {0, 1, 2}
+    # all three regions contribute at a rate this high
+    assert len(np.unique(r1)) == 3
+
+
+def test_zero_weight_region_emits_nothing():
+    topo = build_topology(3, seed=0, horizon_s=3600.0)
+    pl = GeoPlacement(
+        topo, place_servers(6, 3), np.array([0.5, 0.5, 0.0], np.float32)
+    )
+    _, r = regional_arrivals(jax.random.PRNGKey(1), pl, 6.0, 60.0)
+    assert 2 not in set(np.unique(r))
+
+
+def test_regional_partition_composes_with_chaos():
+    from repro.chaos import build_schedule
+
+    topo = build_topology(3, seed=0, horizon_s=120.0, dt_s=1.0)
+    pl = GeoPlacement(topo, place_servers(6, 3))
+    fault = pl.regional_partition(1, start_s=10.0, duration_s=50.0)
+    assert fault.servers == pl.region_servers(1) == (1, 4)
+    sched = build_schedule([fault], 6, 120, 1.0)
+    alive_mid = sched.alive_at(30)
+    assert not alive_mid[1] and not alive_mid[4]
+    assert alive_mid[[0, 2, 3, 5]].all()
+    assert sched.alive_at(5).all() and sched.alive_at(70).all()
+
+
+# ---------------------------------------------------------------------------
+# Platform / simulator composition
+# ---------------------------------------------------------------------------
+
+def _small_world(n_regions=3, per=2, seed=0):
+    topo = build_topology(n_regions, seed=seed, horizon_s=1200.0, dt_s=1.0)
+    servers = replica_fleet(n_regions * per)
+    pl = GeoPlacement(
+        topo, place_servers(len(servers), n_regions),
+        client_populations(n_regions, 1.0),
+    )
+    plat = ideal_platform(servers, seed=seed, horizon_s=1200.0, geo=pl)
+    return topo, servers, pl, plat
+
+
+def test_platform_region_composed_ground_truth():
+    topo, servers, pl, plat = _small_world()
+    base = plat.latency_at(3, 50)
+    total_local = plat.total_latency_at(3, 50, int(pl.server_region[3]))
+    total_far = plat.total_latency_at(
+        3, 50, int((pl.server_region[3] + 1) % 3)
+    )
+    assert total_local == pytest.approx(base)      # intra-region RTT is 0
+    assert total_far > base                        # cross-region pays RTT
+    assert plat.total_latency_at(3, 50, -1) == base  # untagged
+    rtt_row = plat.client_rtt_ms(0, 50)
+    assert rtt_row.shape == (len(servers),)
+    assert plat.client_rtt_ms(-1) is None
+    plat_nogeo = ideal_platform(servers, seed=0, horizon_s=1200.0)
+    assert plat_nogeo.client_rtt_ms(0) is None
+    assert plat_nogeo.total_latency_at(3, 50, 0) == pytest.approx(
+        plat_nogeo.latency_at(3, 50)
+    )
+
+
+def test_geo_platform_rejects_mismatched_placement():
+    topo = build_topology(3, seed=0, horizon_s=1200.0, dt_s=1.0)
+    pl = GeoPlacement(topo, place_servers(4, 3))
+    with pytest.raises(AssertionError):
+        ideal_platform(replica_fleet(6), seed=0, horizon_s=1200.0, geo=pl)
+
+
+def test_sim_charges_rtt_and_geo_router_stays_local():
+    """Region-tagged traffic: completion latency includes propagation RTT,
+    and SONAR-GEO serves a larger local share than SONAR-LB on the same
+    stream."""
+    shares = {}
+    for algo in ("sonar_lb", "sonar_geo"):
+        topo, servers, pl, plat = _small_world(seed=1)
+        cfg = RoutingConfig(top_s=len(servers), top_k=len(servers))
+        sim = FleetTrafficSim(
+            plat, routing.make_router(algo, servers, cfg),
+            QueueConfig(capacity=2, queue_limit=8, base_service_ms=100.0),
+            retry_budget=2, seed=0,
+        )
+        arr, regs = regional_arrivals(jax.random.PRNGKey(2), pl, 5.0, 25.0)
+        rep = sim.run(arr, QUERY_TEXTS, regions=regs)
+        done = [r for r in rep.requests if r.done]
+        assert done, "no completions"
+        local = [
+            r for r in done if pl.server_region[r.server_idx] == r.region
+        ]
+        shares[algo] = len(local) / len(done)
+        # every completion paid at least its region->server RTT
+        for r in done[:50]:
+            rtt = pl.client_rtt_ms(r.region)[r.server_idx]
+            assert r.t_finish_ms - r.t_arrival_ms >= rtt - 1e-6
+    assert shares["sonar_geo"] > shares["sonar_lb"]
+
+
+def test_untagged_run_matches_pre_geo_behaviour():
+    """regions=None keeps the simulator byte-compatible with the geo-less
+    path even on a geo platform (every request untagged -> zero RTT)."""
+    topo, servers, pl, plat = _small_world(seed=2)
+    plat_nogeo = ideal_platform(servers, seed=2, horizon_s=1200.0)
+    cfg = RoutingConfig(top_s=len(servers), top_k=len(servers))
+    arr = np.linspace(0.1, 10.0, 40)
+    reps = []
+    for p in (plat, plat_nogeo):
+        sim = FleetTrafficSim(
+            p, routing.make_router("sonar_lb", servers, cfg),
+            QueueConfig(capacity=2, queue_limit=8, base_service_ms=100.0),
+            retry_budget=2, seed=0,
+        )
+        reps.append(sim.run(arr.copy(), QUERY_TEXTS))
+    assert reps[0].p99_ms == pytest.approx(reps[1].p99_ms)
+    assert reps[0].per_server_served == reps[1].per_server_served
+
+
+def test_sim_survives_partition_of_local_region():
+    """All-dead local region: a chaos partition takes the client's whole
+    region down; SONAR-GEO + retries must fail over to a remote region
+    instead of failing the workload."""
+    from repro.chaos import build_schedule
+
+    n_regions, per = 3, 2
+    topo = build_topology(n_regions, seed=3, horizon_s=300.0, dt_s=1.0)
+    servers = replica_fleet(n_regions * per)
+    pl = GeoPlacement(topo, place_servers(len(servers), n_regions))
+    fault = pl.regional_partition(0, start_s=0.0, duration_s=300.0)
+    sched = build_schedule([fault], len(servers), 300, 1.0)
+    from repro.core.platform import NetMCPPlatform
+    from repro.core import latency as L
+
+    plat = NetMCPPlatform(
+        servers, profiles=[L.ideal_profile() for _ in servers],
+        seed=3, horizon_s=300.0, dt_s=1.0, chaos=sched, geo=pl,
+    )
+    cfg = RoutingConfig(top_s=len(servers), top_k=len(servers))
+    sim = FleetTrafficSim(
+        plat, routing.make_router("sonar_geo", servers, cfg),
+        QueueConfig(capacity=2, queue_limit=8, base_service_ms=100.0),
+        retry_budget=3, seed=0,
+    )
+    arr = np.linspace(0.1, 20.0, 30)
+    regs = np.zeros(30, np.int64)            # every client in the dead region
+    rep = sim.run(arr, QUERY_TEXTS, regions=regs)
+    assert rep.n_completed > 0
+    served_regions = {
+        int(pl.server_region[r.server_idx])
+        for r in rep.requests if r.done
+    }
+    assert 0 not in served_regions           # nothing served by the dead region
+
+
+# ---------------------------------------------------------------------------
+# SONAR-GEO identity + parity properties
+# ---------------------------------------------------------------------------
+
+POOL_CFG = RoutingConfig(top_s=4, top_k=5)
+
+
+def _random_fleet(seed, n_servers, identical):
+    from repro.core import dataset
+
+    rng = np.random.default_rng(seed)
+    if identical:
+        servers = replica_fleet(n_servers)
+    else:
+        pool = dataset.build_server_pool(seed=0)
+        pick = rng.choice(len(pool), size=n_servers, replace=False)
+        servers = [pool[i] for i in pick]
+    hist = rng.uniform(5.0, 400.0, size=(n_servers, 24)).astype(np.float32)
+    load = (rng.random(n_servers) * 2.0).astype(np.float32)
+    rtt = (rng.random(n_servers) * 500.0).astype(np.float32)
+    return servers, hist, load, rtt
+
+
+@settings(max_examples=12, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    n_servers=st.integers(2, 6),
+    identical=st.booleans(),
+    zero_kind=st.sampled_from(["none", "zeros", "delta0"]),
+)
+def test_sonar_geo_zero_rtt_is_byte_identical_to_sonar_lb(
+    seed, n_servers, identical, zero_kind
+):
+    """Acceptance gate: with no RTT vector, an all-zero RTT vector, or
+    delta=0, SONAR-GEO's decisions are byte-identical to SONAR-LB's across
+    scalar, jnp-batched and Pallas paths — every output field."""
+    servers, hist, load, rtt = _random_fleet(seed, n_servers, identical)
+    cfg = RoutingConfig(
+        top_s=min(4, n_servers), top_k=5,
+        delta=0.0 if zero_kind == "delta0" else 0.4,
+    )
+    rtt_arg = np.zeros(n_servers, np.float32) if zero_kind == "zeros" else (
+        rtt if zero_kind == "delta0" else None
+    )
+    r_lb = routing.make_router("sonar_lb", servers, cfg)
+    r_geo = routing.make_router("sonar_geo", servers, cfg)
+    for q in QUERY_TEXTS:
+        a = r_lb.select(q, hist, load)
+        b = r_geo.select(q, hist, load, client_rtt_ms=rtt_arg)
+        assert (
+            a.server_idx, a.tool_idx, a.expertise, a.network, a.fused
+        ) == (b.server_idx, b.tool_idx, b.expertise, b.network, b.fused)
+    for use_kernels in (False, True):
+        kw = {"interpret": True} if use_kernels else {}
+        e_lb = BatchRoutingEngine(
+            servers, cfg, algo="sonar_lb", use_kernels=use_kernels,
+            index=r_lb.index, **kw,
+        )
+        e_geo = BatchRoutingEngine(
+            servers, cfg, algo="sonar_geo", use_kernels=use_kernels,
+            index=r_lb.index, **kw,
+        )
+        da = e_lb.route_texts(QUERY_TEXTS, hist, load)
+        db = e_geo.route_texts(
+            QUERY_TEXTS, hist, load, client_rtt_ms=rtt_arg
+        )
+        for field in ("server_idx", "tool_idx", "expertise", "network",
+                      "fused"):
+            np.testing.assert_array_equal(
+                getattr(da, field), getattr(db, field),
+                err_msg=f"kernels={use_kernels} field={field} "
+                        f"kind={zero_kind}",
+            )
+
+
+@settings(max_examples=12, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    n_servers=st.integers(2, 6),
+    identical=st.booleans(),
+    rtt_kind=st.sampled_from(["row", "per_query", "region"]),
+)
+def test_sonar_geo_three_path_parity_with_rtt(
+    seed, n_servers, identical, rtt_kind
+):
+    """SONAR-GEO parity scalar == jnp == Pallas for shared rows, per-query
+    rows and the region-index + matrix input form, including tie-heavy
+    identical fleets."""
+    servers, hist, load, rtt = _random_fleet(seed, n_servers, identical)
+    cfg = RoutingConfig(top_s=min(4, n_servers), top_k=5)
+    router = routing.make_router("sonar_geo", servers, cfg)
+    rng = np.random.default_rng(seed + 1)
+    n_q = len(QUERY_TEXTS)
+    if rtt_kind == "row":
+        batch_kw = dict(client_rtt_ms=rtt)
+        rows = [rtt] * n_q
+    elif rtt_kind == "per_query":
+        per_q = (rng.random((n_q, n_servers)) * 500.0).astype(np.float32)
+        batch_kw = dict(client_rtt_ms=per_q)
+        rows = list(per_q)
+    else:
+        mat = (rng.random((3, n_servers)) * 500.0).astype(np.float32)
+        regs = rng.integers(0, 3, size=n_q).astype(np.int32)
+        batch_kw = dict(client_region=regs, region_rtt_ms=mat)
+        rows = [mat[r] for r in regs]
+    engines = [
+        BatchRoutingEngine(
+            servers, cfg, algo="sonar_geo", use_kernels=False,
+            index=router.index,
+        ),
+        BatchRoutingEngine(
+            servers, cfg, algo="sonar_geo", use_kernels=True,
+            interpret=True, index=router.index,
+        ),
+    ]
+    decs = [e.route_texts(QUERY_TEXTS, hist, load, **batch_kw)
+            for e in engines]
+    for i, q in enumerate(QUERY_TEXTS):
+        d = router.select(q, hist, load, client_rtt_ms=rows[i])
+        got = [(d.server_idx, d.tool_idx)] + [
+            (int(dec.server_idx[i]), int(dec.tool_idx[i])) for dec in decs
+        ]
+        assert got[0] == got[1] == got[2], (
+            f"seed={seed} kind={rtt_kind} q={i}: {got}"
+        )
+
+
+@settings(max_examples=8, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    n_servers=st.integers(4, 8),
+    n_shards=st.integers(1, 4),
+    rtt_kind=st.sampled_from(["row", "region"]),
+)
+def test_sonar_geo_sharded_parity(seed, n_servers, n_shards, rtt_kind):
+    """Sharded merge parity for SONAR-GEO (bit-identical fused scores),
+    including the dead-region stress: one region's servers at huge RTT."""
+    servers, hist, load, rtt = _random_fleet(seed, n_servers, True)
+    # make one "region" (half the fleet) effectively unreachable
+    rtt = rtt.copy()
+    rtt[: n_servers // 2] += 5000.0
+    cfg = RoutingConfig(top_s=min(4, n_servers), top_k=5)
+    router = routing.make_router("sonar_geo", servers, cfg)
+    if rtt_kind == "row":
+        kw = dict(client_rtt_ms=rtt)
+    else:
+        rng = np.random.default_rng(seed)
+        mat = np.stack([rtt, np.zeros_like(rtt)])
+        kw = dict(
+            client_region=rng.integers(0, 2, len(QUERY_TEXTS)).astype(
+                np.int32
+            ),
+            region_rtt_ms=mat,
+        )
+    e_ref = BatchRoutingEngine(
+        servers, cfg, algo="sonar_geo", use_kernels=False,
+        index=router.index,
+    )
+    e_sh = ShardedRoutingEngine(
+        servers, cfg, algo="sonar_geo", n_shards=n_shards,
+        use_kernels=False, index=router.index,
+    )
+    da = e_ref.route_texts(QUERY_TEXTS, hist, load, **kw)
+    db = e_sh.route_texts(QUERY_TEXTS, hist, load, **kw)
+    for field in ("server_idx", "tool_idx", "expertise", "network"):
+        np.testing.assert_array_equal(
+            getattr(da, field), getattr(db, field), err_msg=field
+        )
+    # the active delta term may be FMA-contracted differently across the
+    # two compiled programs (see kernels/ref.py): scores agree to ~1 ulp,
+    # decisions (asserted bitwise above) are unaffected
+    np.testing.assert_allclose(da.fused, db.fused, rtol=1e-6, atol=1e-7)
+
+
+def test_untagged_region_sentinel_pays_no_penalty():
+    """client_region = -1 (the simulator's untagged sentinel) must mean
+    'no locality penalty' in the batched and sharded engines too — not a
+    wrapped gather of the last region's RTT row."""
+    servers, hist, load, rtt = _random_fleet(3, 6, True)
+    cfg = RoutingConfig(top_s=6, top_k=6)
+    router = routing.make_router("sonar_geo", servers, cfg)
+    mat = np.stack([rtt, rtt * 2.0 + 100.0])          # 2 regions, both nonzero
+    regs = np.array([0, -1], np.int32)                # tagged, untagged
+    texts = QUERY_TEXTS[:2]
+    for eng in (
+        BatchRoutingEngine(
+            servers, cfg, algo="sonar_geo", use_kernels=False,
+            index=router.index,
+        ),
+        ShardedRoutingEngine(
+            servers, cfg, algo="sonar_geo", n_shards=3, use_kernels=False,
+            index=router.index,
+        ),
+    ):
+        dec = eng.route_texts(
+            texts, hist, load, client_region=regs, region_rtt_ms=mat
+        )
+        d_tag = router.select(texts[0], hist, load, client_rtt_ms=mat[0])
+        d_untag = router.select(texts[1], hist, load)   # scalar: no penalty
+        assert (int(dec.server_idx[0]), int(dec.tool_idx[0])) == (
+            d_tag.server_idx, d_tag.tool_idx
+        )
+        assert (int(dec.server_idx[1]), int(dec.tool_idx[1])) == (
+            d_untag.server_idx, d_untag.tool_idx
+        )
+
+
+def test_rtt_penalty_shape():
+    r = np.array([0.0, 150.0, 1e6], np.float32)
+    p = np.asarray(rtt_penalty(r, 150.0))
+    assert p[0] == 0.0
+    assert p[1] == pytest.approx(0.5)
+    assert p[2] < 1.0 and (np.diff(p) > 0).all()
+
+
+# ---------------------------------------------------------------------------
+# Mega-fleet composition (tiled index + compact region RTT input)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_mega_fleet_geo_routing_tiled():
+    """100k-server tiled fleet routed geo-aware through the sharded engine
+    with the compact (region index, region RTT matrix) input; spot-checks
+    argmax parity against the densified single-device engine on the same
+    inputs at a smaller size."""
+    from repro.traffic import mega_fleet_index
+
+    n_regions = 4
+    topo = build_topology(n_regions, seed=0, horizon_s=600.0, dt_s=1.0)
+    # small parity size first
+    small = 64
+    idx_small = mega_fleet_index(small)
+    pl_small = GeoPlacement(topo, place_servers(small, n_regions))
+    cfg = RoutingConfig(top_s=5, top_k=8)
+    rng = np.random.default_rng(0)
+    hist = rng.uniform(10.0, 300.0, size=(small, 32)).astype(np.float32)
+    regs = rng.integers(0, n_regions, size=6).astype(np.int32)
+    rr = pl_small.region_server_rtt(None)
+    e_dense = BatchRoutingEngine(
+        None, cfg, algo="sonar_geo", use_kernels=False,
+        index=idx_small.densify(),
+    )
+    e_shard = ShardedRoutingEngine(
+        None, cfg, algo="sonar_geo", n_shards=4, use_kernels=False,
+        index=idx_small,
+    )
+    texts = [f"search the web for news variant {i}" for i in range(6)]
+    da = e_dense.route_texts(texts, hist, None, client_region=regs,
+                             region_rtt_ms=rr)
+    db = e_shard.route_texts(texts, hist, None, client_region=regs,
+                             region_rtt_ms=rr)
+    np.testing.assert_array_equal(da.server_idx, db.server_idx)
+    np.testing.assert_array_equal(da.tool_idx, db.tool_idx)
+    # now the big tiled fleet end-to-end (no densification anywhere)
+    big = 100_000
+    idx_big = mega_fleet_index(big)
+    pl_big = GeoPlacement(topo, place_servers(big, n_regions))
+    e_big = ShardedRoutingEngine(
+        None, cfg, algo="sonar_geo", n_shards=4, use_kernels=False,
+        index=idx_big,
+    )
+    compact = rng.uniform(10.0, 300.0, size=(16, 32)).astype(np.float32)
+    tmap = (np.arange(big, dtype=np.int64) * 2654435761) % 16
+    dec = e_big.route_texts(
+        texts, None, None,
+        client_region=regs,
+        region_rtt_ms=pl_big.region_server_rtt(None),
+        telemetry_templates=(compact, tmap),
+    )
+    assert len(dec) == 6
+    assert (np.asarray(dec.server_idx) >= 0).all()
+    assert (np.asarray(dec.server_idx) < big).all()

@@ -1,0 +1,179 @@
+"""Golden fixtures for the geo scenarios (PR-3 golden-trace pattern).
+
+Frozen-seed artifacts committed under ``tests/golden/geo/``:
+
+  region_graph.npz   — the canonical 6-region topology's static and
+                       mid-horizon shortest-path RTT matrices, the direct
+                       edge-weight matrix, and the per-link base RTTs
+  composed_trace.npz — a region-composed observed-latency slab
+                       [n_regions, n_servers, K]: server-side ideal traces
+                       plus the time-varying propagation RTT of every
+                       client region, sampled on a fixed tick grid
+
+Drift tests regenerate each artifact from the same seed and compare: any
+unintended change to the great-circle math, link-overlay synthesis,
+shortest-path composition or platform RTT composition fails loudly.  A
+sha256 manifest guards the fixtures themselves against stray edits.
+
+Regenerate (after an *intended* change) with:
+
+    PYTHONPATH=src python tests/test_golden_geo.py --regen
+"""
+import hashlib
+import json
+import pathlib
+
+import numpy as np
+
+from repro.core import latency as L
+from repro.core.platform import NetMCPPlatform
+from repro.geo import GeoPlacement, build_topology, place_servers
+from repro.traffic import replica_fleet
+
+GOLDEN_DIR = pathlib.Path(__file__).parent / "golden" / "geo"
+GRAPH_NPZ = GOLDEN_DIR / "region_graph.npz"
+TRACE_NPZ = GOLDEN_DIR / "composed_trace.npz"
+MANIFEST = GOLDEN_DIR / "manifest.json"
+
+SEED = 2024
+N_REGIONS = 6
+N_SERVERS = 12
+HORIZON_S, DT_S = 2400.0, 10.0
+TICKS = np.arange(0, 240, 24)            # 10 sample ticks across the horizon
+
+# Cross-platform slack (same rationale as tests/test_golden_traces.py):
+# ULP-level transcendental drift across XLA versions, orders of magnitude
+# below semantic drift.
+RTOL, ATOL = 1e-4, 1e-2
+
+
+def _topology():
+    return build_topology(
+        N_REGIONS, seed=SEED, horizon_s=HORIZON_S, dt_s=DT_S
+    )
+
+
+def synth_region_graph() -> dict:
+    topo = _topology()
+    mid = topo.n_steps // 2
+    return {
+        "rtt_static": topo.rtt_matrix(None).copy(),
+        "rtt_mid": topo.rtt_matrix(mid).copy(),
+        "edge_weights_static": topo.edge_weights(None),
+        "link_base_rtt": np.asarray(
+            [ln.base_rtt_ms for ln in topo.links], np.float32
+        ),
+    }
+
+
+def synth_composed_trace() -> dict:
+    topo = _topology()
+    placement = GeoPlacement(topo, place_servers(N_SERVERS, N_REGIONS))
+    plat = NetMCPPlatform(
+        replica_fleet(N_SERVERS),
+        profiles=[L.ideal_profile() for _ in range(N_SERVERS)],
+        seed=SEED, horizon_s=HORIZON_S, dt_s=DT_S, geo=placement,
+    )
+    slab = np.empty((N_REGIONS, N_SERVERS, TICKS.size), np.float32)
+    for r in range(N_REGIONS):
+        for s in range(N_SERVERS):
+            for j, t in enumerate(TICKS):
+                slab[r, s, j] = plat.total_latency_at(s, int(t), r)
+    return {
+        "composed": slab,
+        "server_region": placement.server_region.astype(np.int32),
+        "ticks": TICKS.astype(np.int64),
+    }
+
+
+def _sha256(path: pathlib.Path) -> str:
+    return hashlib.sha256(path.read_bytes()).hexdigest()
+
+
+def regen() -> None:
+    GOLDEN_DIR.mkdir(parents=True, exist_ok=True)
+    np.savez(GRAPH_NPZ, **synth_region_graph())
+    np.savez(TRACE_NPZ, **synth_composed_trace())
+    MANIFEST.write_text(
+        json.dumps(
+            {p.name: _sha256(p) for p in (GRAPH_NPZ, TRACE_NPZ)}, indent=2
+        )
+        + "\n"
+    )
+
+
+# ---------------------------------------------------------------------------
+# Drift tests
+# ---------------------------------------------------------------------------
+
+def test_region_graph_matches_golden():
+    stored = np.load(GRAPH_NPZ)
+    fresh = synth_region_graph()
+    assert sorted(stored.files) == sorted(fresh)
+    for name in fresh:
+        np.testing.assert_allclose(
+            fresh[name], stored[name], rtol=RTOL, atol=ATOL,
+            err_msg=f"region-graph field '{name}' drifted from the golden "
+                    "fixture — regenerate via --regen if intentional",
+        )
+
+
+def test_composed_trace_matches_golden():
+    stored = np.load(TRACE_NPZ)
+    fresh = synth_composed_trace()
+    assert sorted(stored.files) == sorted(fresh)
+    np.testing.assert_array_equal(fresh["server_region"],
+                                  stored["server_region"])
+    np.testing.assert_array_equal(fresh["ticks"], stored["ticks"])
+    np.testing.assert_allclose(
+        fresh["composed"], stored["composed"], rtol=RTOL, atol=ATOL,
+        err_msg="region-composed ground truth drifted from the golden slab",
+    )
+
+
+def test_golden_geo_fixture_integrity():
+    """Fixtures match their committed checksums (guards hand-edits)."""
+    manifest = json.loads(MANIFEST.read_text())
+    for path in (GRAPH_NPZ, TRACE_NPZ):
+        assert manifest[path.name] == _sha256(path), (
+            f"{path.name} does not match its manifest checksum; regenerate "
+            "both together via --regen"
+        )
+
+
+def test_golden_geo_fixtures_have_expected_signatures():
+    """Sanity on the fixtures themselves: metric structure and the
+    geographic gradient must be visible in the frozen data."""
+    g = np.load(GRAPH_NPZ)
+    m = g["rtt_static"]
+    np.testing.assert_allclose(m, m.T, rtol=1e-6)
+    np.testing.assert_allclose(np.diag(m), 0.0)
+    off = m[~np.eye(N_REGIONS, dtype=bool)]
+    assert off.min() > 10.0                   # regions are WAN-separated
+    assert off.max() > 150.0                  # at least one trans-oceanic pair
+    # the time-varying matrix stays metric too
+    mid = g["rtt_mid"]
+    np.testing.assert_allclose(mid, mid.T, rtol=1e-6)
+    assert (mid >= 0.0).all()
+
+    t = np.load(TRACE_NPZ)
+    slab, sreg = t["composed"], t["server_region"]
+    # a server observed from its own region is strictly closer than the
+    # same server observed from any other region (at every stored tick)
+    for s in range(N_SERVERS):
+        home = sreg[s]
+        others = [r for r in range(N_REGIONS) if r != home]
+        assert (
+            slab[home, s] < slab[others, s].min(axis=0) + 1e-3
+        ).all()
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--regen", action="store_true")
+    args = ap.parse_args()
+    if args.regen:
+        regen()
+        print(f"regenerated fixtures under {GOLDEN_DIR}")

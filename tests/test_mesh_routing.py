@@ -4,7 +4,7 @@ shard-merge edge cases.
 The acceptance invariant is **argmax identity**: for any fleet, telemetry,
 load vector, staleness ages and fault mask, the sharded engine picks the
 exact same (server_idx, tool_idx) as `BatchRoutingEngine` for every one of
-the six algorithms — and in fact the fused scores are bit-identical (the
+the seven algorithms — and in fact the fused scores are bit-identical (the
 merge reproduces the single-device candidate order, see
 core.mesh_routing's module docstring).
 
@@ -100,7 +100,7 @@ def _assert_same(d0, d1, ctx: str):
 def test_sharded_matches_batch_engine(
     seed, algo, n_servers, n_shards, identical, all_offline, mask_kind
 ):
-    """Property: sharded == single-device for all six algorithms, any
+    """Property: sharded == single-device for all seven algorithms, any
     (fleet, shard count) split — including indivisible ones — with load
     vectors, staleness ages and fault masks in play."""
     servers, hist, load, age, mask = _materialize(
@@ -269,6 +269,7 @@ def test_per_query_telemetry_parity():
     _assert_same(d0, d1, "per-query telemetry")
 
 
+@pytest.mark.slow
 @pytest.mark.skipif(
     len(jax.devices()) < 2,
     reason="needs >=2 devices (XLA_FLAGS=--xla_force_host_platform_"
@@ -293,6 +294,22 @@ def test_shard_map_mesh_path():
         assert sh.mesh is not None
         d1 = sh.route_texts(QUERY_TEXTS, hist, load, age, mask)
         _assert_same(d0, d1, f"shard_map {algo}")
+    # SONAR-GEO with an *active* RTT vector through the real mesh:
+    # decisions argmax-identical; the fused score agrees to ~1 ulp (the
+    # 4-term fusion may be FMA-contracted differently across programs —
+    # see kernels/ref.py)
+    rtt = np.linspace(0.0, 400.0, 9).astype(np.float32)
+    base = BatchRoutingEngine(servers, cfg, algo="sonar_geo",
+                              use_kernels=False)
+    d0 = base.route_texts(QUERY_TEXTS, hist, load, client_rtt_ms=rtt)
+    sh = ShardedRoutingEngine(
+        servers, cfg, algo="sonar_geo", n_shards=n_dev, mesh=mesh,
+        use_kernels=False, index=base.index,
+    )
+    d1 = sh.route_texts(QUERY_TEXTS, hist, load, client_rtt_ms=rtt)
+    np.testing.assert_array_equal(d0.server_idx, d1.server_idx)
+    np.testing.assert_array_equal(d0.tool_idx, d1.tool_idx)
+    np.testing.assert_allclose(d0.fused, d1.fused, rtol=1e-6, atol=1e-7)
 
 
 def test_tiled_platform_windows_and_overlay():

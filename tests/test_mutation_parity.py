@@ -1,0 +1,196 @@
+"""Cross-path mutation testing of the parity harness itself.
+
+The three-path parity suite (`tests/test_parity_prop.py`) asserts that
+the scalar router, the jit batched engine and the Pallas kernel make the
+same decision.  That property only has teeth if a *defect in one path*
+actually changes a decision — a parity suite that still passes when a
+fusion term is dropped proves nothing.
+
+This module seeds exactly those defects.  Each mutation monkeypatches one
+algorithm term **in the scalar path only** (``repro.core.routing`` binds
+`load_penalty` / `staleness_discount` / `rtt_penalty` into its own module
+namespace, so patching there leaves the batched pipeline and the kernel
+untouched), then asserts the three-path parity check *detects* the
+divergence:
+
+  - ``drop_load``   — SONAR-LB's convex utilization penalty returns 0
+  - ``skip_stale``  — SONAR-FT's staleness discount returns 1 (full trust)
+  - ``zero_rtt``    — SONAR-GEO's propagation-RTT penalty returns 0
+
+The fixtures are constructed so the mutated term is *decisive*: identical
+replicas tie on semantics, telemetry ties (or favors the to-be-penalized
+server), and only the term under test separates the winner — so an
+undetected mutation means the parity suite genuinely lost its teeth, not
+that the inputs were too easy.
+
+A baseline case asserts parity holds unmutated (the harness cannot be
+trivially "detecting" everything), and a kernel-side sanity mutation
+(perturbing the oracle's fusion weight) shows detection is symmetric.
+"""
+import numpy as np
+import pytest
+
+from repro.core import routing
+from repro.core.batch_routing import BatchRoutingEngine
+from repro.core.routing import RoutingConfig
+from repro.traffic import replica_fleet
+
+QUERY = "search the web for the latest news"
+N = 4
+CFG = RoutingConfig(top_s=N, top_k=N)
+
+
+def _fixture(kind: str):
+    """Identical-replica fleet + telemetry crafted so one term decides.
+
+    Returns (servers, hist, load, age, rtt): semantics tie (identical
+    replicas), so the fusion term under test is the only separator
+    between server 0 and the rest.
+    """
+    servers = replica_fleet(N)
+    if kind == "load":
+        # flat healthy telemetry everywhere; server 0 is saturated —
+        # only the load term steers the argmax away from index 0
+        hist = np.full((N, 24), 100.0, np.float32)
+        load = np.array([2.0, 0.0, 0.0, 0.0], np.float32)
+        age = None
+        rtt = None
+    elif kind == "stale":
+        # server 0 *looks* pristine but its telemetry is ancient; the
+        # others are honest and mediocre.  With the discount, 0's QoS
+        # decays toward neutral and an honest server wins; without it,
+        # the stale-perfect history wins.
+        hist = np.full((N, 24), 100.0, np.float32)
+        hist[0] = 30.0
+        load = np.zeros(N, np.float32)
+        age = np.array([900.0, 0.0, 0.0, 0.0], np.float32)
+        rtt = None
+    elif kind == "rtt":
+        # flat telemetry; server 0 sits an ocean away — only the RTT
+        # penalty steers the argmax off index 0
+        hist = np.full((N, 24), 100.0, np.float32)
+        load = np.zeros(N, np.float32)
+        age = None
+        rtt = np.array([300.0, 0.0, 0.0, 0.0], np.float32)
+    else:
+        raise KeyError(kind)
+    return servers, hist, load, age, rtt
+
+
+def _parity_agrees(algo, servers, hist, load, age, rtt) -> bool:
+    """One three-path parity probe: scalar vs jnp-batched vs Pallas
+    kernel.  True iff all three picked the same (server, tool)."""
+    router = routing.make_router(algo, servers, CFG)
+    scalar = router.select(
+        QUERY, hist, load, telemetry_age_s=age, client_rtt_ms=rtt
+    )
+    picks = [(scalar.server_idx, scalar.tool_idx)]
+    for use_kernels in (False, True):
+        kw = {"interpret": True} if use_kernels else {}
+        eng = BatchRoutingEngine(
+            servers, CFG, algo=algo, use_kernels=use_kernels,
+            index=router.index, **kw,
+        )
+        dec = eng.route_texts(
+            [QUERY], hist, load, telemetry_age_s=age, client_rtt_ms=rtt
+        )
+        picks.append((int(dec.server_idx[0]), int(dec.tool_idx[0])))
+    return picks[0] == picks[1] == picks[2]
+
+
+MUTATIONS = {
+    # name -> (algo, fixture kind, scalar-path attribute, mutated stand-in)
+    "drop_load": (
+        "sonar_lb", "load", "load_penalty",
+        lambda rho, knee=0.75, sharp=4.0: np.zeros_like(
+            np.asarray(rho, np.float32)
+        ),
+    ),
+    "skip_stale": (
+        "sonar_ft", "stale", "staleness_discount",
+        lambda age, half=180.0: np.ones_like(np.asarray(age, np.float32)),
+    ),
+    "zero_rtt": (
+        "sonar_geo", "rtt", "rtt_penalty",
+        lambda rtt, scale=150.0: np.zeros_like(np.asarray(rtt, np.float32)),
+    ),
+}
+
+
+@pytest.mark.parametrize("name", sorted(MUTATIONS))
+def test_baseline_parity_holds(name):
+    """Unmutated, every fixture passes the three-path probe — the probe
+    is not a tautological failure detector."""
+    algo, kind, _, _ = MUTATIONS[name]
+    assert _parity_agrees(algo, *_fixture(kind)), (
+        f"{algo} disagrees across paths before any mutation — the "
+        "mutation harness requires a green baseline"
+    )
+
+
+@pytest.mark.parametrize("name", sorted(MUTATIONS))
+def test_term_decides_the_fixture(name):
+    """Each fixture's term is decisive: the intact scalar router must NOT
+    pick server 0 (the penalized one) — otherwise a dropped term could
+    never flip the argmax and the mutation test would be vacuous."""
+    algo, kind, _, _ = MUTATIONS[name]
+    servers, hist, load, age, rtt = _fixture(kind)
+    router = routing.make_router(algo, servers, CFG)
+    d = router.select(
+        QUERY, hist, load, telemetry_age_s=age, client_rtt_ms=rtt
+    )
+    assert d.server_idx != 0, (
+        f"{algo}: fixture term is not decisive (picked the penalized "
+        "server anyway)"
+    )
+
+
+@pytest.mark.parametrize("name", sorted(MUTATIONS))
+def test_parity_suite_detects_scalar_mutation(name, monkeypatch):
+    """THE teeth test: dropping one term from the scalar path must break
+    three-path parity — i.e. the parity property distinguishes a real
+    implementation defect."""
+    algo, kind, attr, mutant = MUTATIONS[name]
+    servers, hist, load, age, rtt = _fixture(kind)
+    monkeypatch.setattr(routing, attr, mutant)
+    assert not _parity_agrees(algo, servers, hist, load, age, rtt), (
+        f"mutation '{name}' ({attr} neutralized in the scalar path) was "
+        "NOT detected by the three-path parity probe — the parity suite "
+        "has no teeth for this term"
+    )
+
+
+def test_parity_suite_detects_oracle_mutation(monkeypatch):
+    """Symmetry: perturbing the *batched* side (the jnp oracle's fusion)
+    is detected too — the probe is not blind in either direction."""
+    from repro.kernels import ref as kref
+
+    servers, hist, load, age, rtt = _fixture("load")
+    orig = kref.fused_select_ref
+
+    def mutant(*args, **kw):
+        kw["gamma"] = 0.0          # drop the load term in the oracle only
+        return orig(*args, **kw)
+
+    import jax
+
+    import repro.core.batch_routing as br
+
+    monkeypatch.setattr(br.kref, "fused_select_ref", mutant)
+    # earlier tests already compiled the pipeline for these shapes; the
+    # compiled computation embeds the unmutated oracle, so drop every
+    # compilation cache to force a retrace through the mutant
+    jax.clear_caches()
+    try:
+        router = routing.make_router("sonar_lb", servers, CFG)
+        eng = BatchRoutingEngine(
+            servers, CFG, algo="sonar_lb", use_kernels=False,
+            index=router.index,
+        )
+        d = router.select(QUERY, hist, load)
+        dec = eng.route_texts([QUERY], hist, load)
+        assert (d.server_idx, d.tool_idx) != (
+            int(dec.server_idx[0]), int(dec.tool_idx[0])
+        ), "oracle-side mutation was not detected"
+    finally:
+        jax.clear_caches()

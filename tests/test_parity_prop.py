@@ -3,9 +3,9 @@
 Every algorithm must make the *same decision* through all three routing
 paths — scalar `Router.select`, the jit `BatchRoutingEngine` (pure-jnp
 oracle) and the fused Pallas `select_fuse` kernel (interpret mode on CPU)
-— for any fleet, telemetry snapshot, load vector, telemetry age and fault
-mask, including tie-heavy identical-replica fleets, all-offline telemetry
-and all-masked fleets.
+— for any fleet, telemetry snapshot, load vector, telemetry age, fault
+mask and client-RTT vector, including tie-heavy identical-replica fleets,
+all-offline telemetry and all-masked fleets.
 
 The strategies draw a compact description (seed + structure switches) and
 the test materializes fleet/telemetry/load/mask arrays from a seeded
@@ -34,7 +34,7 @@ QUERY_TEXTS = [
 
 
 def _materialize(seed, n_servers, identical, all_offline, mask_kind):
-    """Fleet + telemetry + load + age + failed-mask from one seed."""
+    """Fleet + telemetry + load + age + failed-mask + RTT from one seed."""
     rng = np.random.default_rng(seed)
     if identical:
         servers = replica_fleet(n_servers)          # maximal tie pressure
@@ -56,7 +56,8 @@ def _materialize(seed, n_servers, identical, all_offline, mask_kind):
         mask = np.ones(n_servers, bool)
     else:
         mask = rng.random(n_servers) < 0.4
-    return servers, hist, load, age, mask
+    rtt = (rng.random(n_servers) * 500.0).astype(np.float32)
+    return servers, hist, load, age, mask, rtt
 
 
 @settings(max_examples=12, deadline=None)
@@ -70,7 +71,14 @@ def _materialize(seed, n_servers, identical, all_offline, mask_kind):
 )
 def test_three_path_parity(seed, algo, n_servers, identical, all_offline,
                            mask_kind):
-    servers, hist, load, age, mask = _materialize(
+    _check_three_path_parity(
+        seed, algo, n_servers, identical, all_offline, mask_kind
+    )
+
+
+def _check_three_path_parity(seed, algo, n_servers, identical, all_offline,
+                             mask_kind):
+    servers, hist, load, age, mask, rtt = _materialize(
         seed, n_servers, identical, all_offline, mask_kind
     )
     cfg = RoutingConfig(top_s=min(4, n_servers), top_k=5)
@@ -82,11 +90,12 @@ def test_three_path_parity(seed, algo, n_servers, identical, all_offline,
         servers, cfg, algo=algo, use_kernels=True, interpret=True,
         index=router.index,
     )
-    d_jnp = e_jnp.route_texts(QUERY_TEXTS, hist, load, age, mask)
-    d_krn = e_krn.route_texts(QUERY_TEXTS, hist, load, age, mask)
+    d_jnp = e_jnp.route_texts(QUERY_TEXTS, hist, load, age, mask, rtt)
+    d_krn = e_krn.route_texts(QUERY_TEXTS, hist, load, age, mask, rtt)
     for i, q in enumerate(QUERY_TEXTS):
         d = router.select(
-            q, hist, load, telemetry_age_s=age, failed_mask=mask
+            q, hist, load, telemetry_age_s=age, failed_mask=mask,
+            client_rtt_ms=rtt,
         )
         got = (
             (d.server_idx, d.tool_idx),
@@ -112,7 +121,7 @@ def test_sonar_ft_zero_faults_is_byte_identical_to_sonar_lb(
     """Acceptance gate: with fresh telemetry and no fault mask, SONAR-FT's
     decisions are byte-identical to SONAR-LB's across all three paths —
     every output array, not just the argmax."""
-    servers, hist, load, _age, _mask = _materialize(
+    servers, hist, load, _age, _mask, _rtt = _materialize(
         seed, n_servers, identical, False, "none"
     )
     age = np.zeros(n_servers, np.float32) if zero_age else None
@@ -154,7 +163,7 @@ def test_sonar_ft_zero_faults_is_byte_identical_to_sonar_lb(
 def test_failover_loop_parity_scalar_vs_batched(seed, n_servers, budget):
     """`Router.select_failover` and `BatchRoutingEngine.route_failover`
     agree on final picks and failover counts for random alive sets."""
-    servers, hist, load, age, _ = _materialize(
+    servers, hist, load, age, _mask, _rtt = _materialize(
         seed, n_servers, True, False, "none"
     )
     rng = np.random.default_rng(seed + 1)
@@ -175,6 +184,27 @@ def test_failover_loop_parity_scalar_vs_batched(seed, n_servers, budget):
         assert (d.server_idx, d.tool_idx, f) == (
             int(dec.server_idx[i]), int(dec.tool_idx[i]), int(nf[i])
         )
+
+
+@pytest.mark.slow
+@settings(max_examples=60, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    algo=st.sampled_from(ALGOS),
+    n_servers=st.integers(2, 10),
+    identical=st.booleans(),
+    all_offline=st.booleans(),
+    mask_kind=st.sampled_from(["none", "some", "all"]),
+)
+def test_three_path_parity_extended(seed, algo, n_servers, identical,
+                                    all_offline, mask_kind):
+    """Extended (slow-tier) parity sweep: the same property as
+    `test_three_path_parity` at 5x the example count and larger fleets —
+    CI runs this in the dedicated ``-m slow`` step so the fast tier stays
+    quick without shrinking the searched space."""
+    _check_three_path_parity(
+        seed, algo, n_servers, identical, all_offline, mask_kind
+    )
 
 
 def test_conftest_fallback_covers_used_hypothesis_api():

@@ -1,0 +1,203 @@
+"""Schema validator for the CI benchmark JSON artifacts.
+
+Every benchmark that uploads a JSON artifact declares its shape here; CI
+runs this over all five artifacts after the bench-smoke steps, and
+``benchmarks.common.write_artifact`` validates at write time — a benchmark
+that silently changes (or breaks) its output schema fails the build
+instead of producing an artifact downstream dashboards cannot parse.
+
+Schemas are structural, not exhaustive: required top-level keys with type
+checks, plus per-point required keys for the ``points``-style sweeps.
+Optional keys may come and go freely.
+
+Usage::
+
+    python tools/check_bench_schema.py bench-results.json offered-load.json \
+        chaos-recovery.json mega-fleet.json geo-routing.json
+    python tools/check_bench_schema.py --schema offered-load some/path.json
+
+The schema for a file is inferred from its basename; ``--schema`` forces
+one for oddly-named paths.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import numbers
+import pathlib
+import sys
+
+NUM = numbers.Real          # accepts int and float (bool excluded below)
+
+
+def _is_num(v) -> bool:
+    return isinstance(v, NUM) and not isinstance(v, bool)
+
+
+def _check_type(name: str, value, expect) -> list:
+    if expect is NUM:
+        return [] if _is_num(value) else [
+            f"{name}: expected number, got {type(value).__name__}"
+        ]
+    if not isinstance(value, expect):
+        return [f"{name}: expected {expect.__name__}, "
+                f"got {type(value).__name__}"]
+    return []
+
+
+def _check_points(
+    payload: dict, point_keys: dict, min_points: int = 1
+) -> list:
+    errs = []
+    pts = payload.get("points")
+    if not isinstance(pts, list):
+        return [f"points: expected list, got {type(pts).__name__}"]
+    if len(pts) < min_points:
+        errs.append(f"points: expected >= {min_points} entries, got {len(pts)}")
+    for i, p in enumerate(pts):
+        if not isinstance(p, dict):
+            errs.append(f"points[{i}]: expected dict")
+            continue
+        for k, t in point_keys.items():
+            if k not in p:
+                errs.append(f"points[{i}]: missing key '{k}'")
+            else:
+                errs.extend(_check_type(f"points[{i}].{k}", p[k], t))
+    return errs
+
+
+# ---------------------------------------------------------------------------
+# Per-artifact schemas
+# ---------------------------------------------------------------------------
+
+def check_bench_results(payload: dict) -> list:
+    errs = []
+    for k, t in (("mode", str), ("wall_s", NUM), ("fleet_sim", dict),
+                 ("fig7", (dict, list))):
+        if k not in payload:
+            errs.append(f"missing key '{k}'")
+        else:
+            errs.extend(_check_type(k, payload[k], t))
+    if payload.get("mode") not in ("smoke", "full"):
+        errs.append(f"mode: expected 'smoke'|'full', got {payload.get('mode')!r}")
+    return errs
+
+
+def check_offered_load(payload: dict) -> list:
+    errs = []
+    for k, t in (("n_replicas", int), ("queue", dict),
+                 ("single_server_saturation_rps", NUM), ("horizon_s", NUM)):
+        if k not in payload:
+            errs.append(f"missing key '{k}'")
+        else:
+            errs.extend(_check_type(k, payload[k], t))
+    errs.extend(_check_points(payload, {
+        "algo": str, "rate_rps": NUM, "goodput_rps": NUM, "p50_ms": NUM,
+        "p99_ms": NUM, "failed": int, "drop_events": int, "max_share": NUM,
+    }, min_points=2))
+    return errs
+
+
+def check_chaos_recovery(payload: dict) -> list:
+    errs = []
+    for k, t in (("n_replicas", int), ("horizon_s", NUM),
+                 ("n_queries", int), ("intensities", list)):
+        if k not in payload:
+            errs.append(f"missing key '{k}'")
+        else:
+            errs.extend(_check_type(k, payload[k], t))
+    errs.extend(_check_points(payload, {
+        "algo": str, "intensity": NUM, "ssr": NUM, "failures": int,
+        "al_ms": NUM, "recovery_s": NUM,
+    }, min_points=2))
+    return errs
+
+
+def check_mega_fleet(payload: dict) -> list:
+    errs = []
+    for k, t in (("config", dict), ("parity", dict)):
+        if k not in payload:
+            errs.append(f"missing key '{k}'")
+        else:
+            errs.extend(_check_type(k, payload[k], t))
+    parity = payload.get("parity")
+    if isinstance(parity, dict) and parity.get("ok") is not True:
+        errs.append(f"parity.ok: expected true, got {parity.get('ok')!r}")
+    errs.extend(_check_points(payload, {
+        "algo": str, "n_servers": int, "n_shards": int,
+        "us_per_query": NUM, "routes_per_s": NUM,
+    }))
+    return errs
+
+
+def check_geo_routing(payload: dict) -> list:
+    errs = []
+    for k, t in (("replicas_per_region", int), ("rate_rps", NUM),
+                 ("horizon_s", NUM), ("base_service_ms", NUM),
+                 ("client_skew", NUM)):
+        if k not in payload:
+            errs.append(f"missing key '{k}'")
+        else:
+            errs.extend(_check_type(k, payload[k], t))
+    errs.extend(_check_points(payload, {
+        "algo": str, "n_regions": int, "rtt_scale": NUM,
+        "mean_cross_rtt_ms": NUM, "rtt_dominant": bool, "p50_ms": NUM,
+        "p99_ms": NUM, "goodput_rps": NUM, "failed": int,
+        "local_share": NUM,
+    }, min_points=2))
+    return errs
+
+
+SCHEMAS: dict = {
+    "bench-results": check_bench_results,
+    "offered-load": check_offered_load,
+    "chaos-recovery": check_chaos_recovery,
+    "mega-fleet": check_mega_fleet,
+    "geo-routing": check_geo_routing,
+}
+
+
+def validate_artifact(name: str, payload: dict) -> list:
+    """Validate one artifact payload against its named schema; returns a
+    list of human-readable violations (empty = valid)."""
+    if name not in SCHEMAS:
+        return [f"unknown artifact schema '{name}' "
+                f"(known: {sorted(SCHEMAS)})"]
+    if not isinstance(payload, dict):
+        return [f"{name}: top level must be a JSON object"]
+    return SCHEMAS[name](payload)
+
+
+def schema_name_for(path: str) -> str:
+    return pathlib.Path(path).stem
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("paths", nargs="+", help="artifact JSON files")
+    ap.add_argument("--schema", default=None,
+                    help="force a schema name instead of inferring from "
+                         "the basename")
+    args = ap.parse_args(argv)
+    failed = False
+    for path in args.paths:
+        name = args.schema or schema_name_for(path)
+        try:
+            payload = json.loads(pathlib.Path(path).read_text())
+        except (OSError, json.JSONDecodeError) as e:
+            print(f"FAIL {path}: unreadable ({e})")
+            failed = True
+            continue
+        errs = validate_artifact(name, payload)
+        if errs:
+            failed = True
+            print(f"FAIL {path} [{name}]:")
+            for e in errs:
+                print(f"  - {e}")
+        else:
+            print(f"ok   {path} [{name}]")
+    return 1 if failed else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
