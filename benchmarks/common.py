@@ -47,7 +47,9 @@ def write_artifact(path: str, payload: dict, schema: str | None = None) -> None:
     checked against its artifact schema (``tools/check_bench_schema.py``,
     inferred from the basename unless ``schema`` is given) *before* the
     file is written, so a benchmark cannot emit an artifact that the CI
-    schema gate would reject.
+    schema gate would reject.  Committed perf-trajectory baselines
+    (``BENCH_serving_qps.json`` etc.) take the same path — their
+    ``BENCH_``-prefixed basenames map to the plain schema names.
     """
     mod = _load_schema_module()
     name = schema or mod.schema_name_for(path)

@@ -1,0 +1,233 @@
+"""Online serving QPS x tail latency under flash crowd, vs the batch oracle.
+
+The micro-batch front-end (`repro.serving.microbatch`) pays two costs over
+offline batch routing: queueing delay while a batch coalesces, and partial
+batches when arrivals are sparse.  This benchmark quantifies both against
+the **batch oracle** — the same gateway fed perfectly pre-formed
+``max_batch`` slices back-to-back (zero coalescing wait, maximal batch
+efficiency), the throughput upper bound for the hot path on this machine.
+
+Method (all timings real wall-clock of the jit engine; arrivals virtual):
+
+1. Measure the oracle: route the request set in full ``max_batch`` padded
+   slices; ``oracle_qps`` = requests / total wall, ``oracle_p99_ms`` = p99
+   per-slice service wall.
+2. Sweep offered rates as fractions of ``oracle_qps`` (the sweep adapts to
+   the machine instead of hard-coding rps).  Each point replays a
+   **flash-crowd** arrival schedule through `MicroBatchPump` on a fresh
+   gateway: deterministic virtual arrivals, real routing compute as the
+   service time, bounded queue with load-shedding.
+3. The saturation knee = the highest rate the front-end sustains cleanly
+   (no shedding, sustained throughput >= 90% of offered).  Gates:
+
+   - p99 serve latency at the knee <= 2 x ``oracle_p99_ms``: deadline-aware
+     coalescing costs at most one extra service time at the tail.
+   - the top rate (past the oracle) sheds: bounded queue depth degrades
+     gracefully instead of queueing without limit.
+   - conservation at every point: offered == routed + shed + expired.
+
+  PYTHONPATH=src:. python benchmarks/serving_qps.py                # full
+  PYTHONPATH=src:. python benchmarks/serving_qps.py --smoke        # CI
+  PYTHONPATH=src:. python benchmarks/serving_qps.py --json out.json
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.core import latency as latlib
+from repro.serving.gateway import SonarGateway, replica_pool
+from repro.serving.microbatch import BatchingPolicy, MicroBatchPump
+from repro.traffic.source import request_schedule
+
+QUERY_TEXTS = [
+    "what is the latest news about the stock market today",
+    "search the web for current weather information",
+    "find recent articles about machine learning research",
+    "look up live election results online",
+]
+
+
+def make_gateway(n_replicas: int, algo: str, seed: int) -> SonarGateway:
+    replicas = replica_pool([("yi-6b", "dense")] * n_replicas)
+    profiles = [latlib.ideal_profile() for _ in range(n_replicas)]
+    return SonarGateway(
+        replicas, profiles=profiles, algo=algo, seed=seed,
+        use_kernels=True, device_telemetry=True,
+    )
+
+
+def measure_oracle(
+    n_requests: int, max_batch: int, *, n_replicas: int, algo: str, seed: int
+) -> dict:
+    """Batch-oracle upper bound: full padded slices, back-to-back."""
+    gw = make_gateway(n_replicas, algo, seed)
+    texts = [QUERY_TEXTS[i % len(QUERY_TEXTS)] for i in range(n_requests)]
+    # warm the jit cache at the padded shape (compile excluded from timing)
+    gw.route_batch(texts[:max_batch], pad_to=max_batch)
+    gw.route_batch(texts[: max(max_batch // 2, 1)], pad_to=max_batch)
+    gw = make_gateway(n_replicas, algo, seed)      # fresh state, warm cache
+    walls = []
+    t_all = time.perf_counter()
+    for lo in range(0, n_requests, max_batch):
+        chunk = texts[lo: lo + max_batch]
+        t0 = time.perf_counter()
+        gw.route_batch(chunk, pad_to=max_batch)
+        walls.append(1000.0 * (time.perf_counter() - t0))
+    total_s = time.perf_counter() - t_all
+    walls_arr = np.asarray(walls, np.float64)
+    return {
+        "oracle_qps": n_requests / max(total_s, 1e-9),
+        "oracle_p50_ms": float(np.percentile(walls_arr, 50)),
+        "oracle_p99_ms": float(np.percentile(walls_arr, 99)),
+        "n_batches": len(walls),
+    }
+
+
+def run_point(
+    rate_rps: float,
+    policy: BatchingPolicy,
+    *,
+    n_replicas: int,
+    algo: str,
+    horizon_s: float,
+    seed: int,
+) -> dict:
+    """One offered-rate point: flash-crowd schedule through the pump."""
+    gw = make_gateway(n_replicas, algo, seed)
+    schedule = request_schedule(
+        "flash_crowd", jax.random.PRNGKey(seed), rate_rps, horizon_s,
+        QUERY_TEXTS, spike_factor=3.0,
+    )
+    pump = MicroBatchPump(gw, policy)
+    rep = pump.replay(schedule)
+    return {
+        "rate_rps": rate_rps,
+        "offered": rep.n_offered,
+        "routed": rep.n_routed,
+        "shed": rep.n_shed,
+        "expired": rep.n_expired,
+        "flushes": rep.n_flushes,
+        "mean_batch": rep.mean_batch,
+        "sustained_qps": rep.sustained_qps,
+        "p50_ms": rep.p50_ms,
+        "p99_ms": rep.p99_ms,
+        "mean_wait_ms": rep.mean_wait_ms,
+    }
+
+
+def find_knee(points: list) -> dict | None:
+    """Highest offered rate served cleanly: nothing shed or expired, and
+    sustained throughput >= 90% of offered."""
+    clean = [
+        p for p in points
+        if p["shed"] == 0 and p["expired"] == 0
+        and p["sustained_qps"] >= 0.9 * p["rate_rps"]
+    ]
+    return max(clean, key=lambda p: p["rate_rps"]) if clean else None
+
+
+def main(
+    print_fn=print,
+    *,
+    smoke: bool = False,
+    n_replicas: int | None = None,
+    algo: str = "sonar_lb",
+    seed: int = 0,
+) -> dict:
+    if smoke:
+        n_replicas = n_replicas or 4
+        n_oracle, max_batch, horizon_s = 256, 16, 0.6
+        queue_limit = 64
+    else:
+        n_replicas = n_replicas or 8
+        n_oracle, max_batch, horizon_s = 1024, 32, 2.0
+        queue_limit = 256
+
+    oracle = measure_oracle(
+        n_oracle, max_batch, n_replicas=n_replicas, algo=algo, seed=seed
+    )
+    print_fn(
+        f"serving_qps,oracle qps={oracle['oracle_qps']:.0f} "
+        f"p50={oracle['oracle_p50_ms']:.2f}ms p99={oracle['oracle_p99_ms']:.2f}ms"
+    )
+
+    # coalesce for about one oracle service time; flush early under size
+    policy = BatchingPolicy(
+        max_batch=max_batch,
+        max_wait_ms=max(0.5, 0.5 * oracle["oracle_p50_ms"]),
+        slack_ms=0.0,
+        queue_limit=queue_limit,
+        pad_batches=True,
+    )
+    # the sweep adapts to this machine: fractions of the oracle's QPS,
+    # crossing saturation at the top point (which must shed)
+    fractions = [0.2, 0.5, 0.75, 1.3]
+    results: dict = {
+        "algo": algo,
+        "n_replicas": n_replicas,
+        "max_batch": max_batch,
+        "max_wait_ms": policy.max_wait_ms,
+        "queue_limit": queue_limit,
+        "horizon_s": horizon_s,
+        "oracle": oracle,
+        "points": [],
+    }
+    for frac in fractions:
+        point = run_point(
+            frac * oracle["oracle_qps"], policy,
+            n_replicas=n_replicas, algo=algo, horizon_s=horizon_s, seed=seed,
+        )
+        point["fraction_of_oracle"] = frac
+        results["points"].append(point)
+        print_fn(
+            f"serving_qps,{frac:.2f}x,rate={point['rate_rps']:.0f}rps "
+            f"sustained={point['sustained_qps']:.0f}qps "
+            f"p50={point['p50_ms']:.2f}ms p99={point['p99_ms']:.2f}ms "
+            f"batch={point['mean_batch']:.1f} shed={point['shed']} "
+            f"expired={point['expired']}"
+        )
+    knee = find_knee(results["points"])
+    results["knee"] = knee
+    if knee is not None:
+        print_fn(
+            f"serving_qps,knee rate={knee['rate_rps']:.0f}rps "
+            f"p99={knee['p99_ms']:.2f}ms "
+            f"(oracle p99 {oracle['oracle_p99_ms']:.2f}ms)"
+        )
+    return results
+
+
+if __name__ == "__main__":
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--smoke", action="store_true",
+                        help="small oracle set / short horizon for CI")
+    parser.add_argument("--json", metavar="PATH", default=None)
+    args = parser.parse_args()
+    res = main(smoke=args.smoke)
+    if args.json:
+        try:
+            from benchmarks.common import write_artifact
+        except ImportError:            # run as a bare script
+            from common import write_artifact
+        write_artifact(args.json, res, schema="serving-qps")
+
+    # acceptance gates (the ISSUE's serving-path criteria)
+    for p in res["points"]:
+        assert p["offered"] == p["routed"] + p["shed"] + p["expired"], (
+            f"accounting leak at {p['rate_rps']:.0f}rps"
+        )
+    knee = res["knee"]
+    assert knee is not None, "front-end sustained no rate cleanly"
+    assert knee["p99_ms"] <= 2.0 * res["oracle"]["oracle_p99_ms"], (
+        f"knee p99 {knee['p99_ms']:.2f}ms exceeds 2x oracle p99 "
+        f"{res['oracle']['oracle_p99_ms']:.2f}ms"
+    )
+    top = max(res["points"], key=lambda p: p["rate_rps"])
+    assert top["shed"] > 0, (
+        "past-oracle offered load must trigger load-shedding "
+        f"(rate={top['rate_rps']:.0f}rps shed=0)"
+    )

@@ -76,6 +76,41 @@ class EncodedBatch:
     q_rerank: Optional[np.ndarray]  # [n_q, V_tool] canonical intents (rerank)
     n: int
 
+    def slice(self, lo: int, hi: int) -> "EncodedBatch":
+        """Rows [lo, hi) as a new batch.  Encoding is strictly per-row
+        (`Bm25Corpus.encode_query` builds each term-count vector
+        independently), so slicing a whole-set encoding is bit-identical
+        to encoding the chunk's texts directly — the serving gateway
+        relies on this to encode a request set once and feed its chunks
+        to the engine without re-touching Python strings."""
+        hi = min(hi, self.n)
+        return EncodedBatch(
+            q_server=self.q_server[lo:hi],
+            q_tool=self.q_tool[lo:hi],
+            q_rerank=None if self.q_rerank is None else self.q_rerank[lo:hi],
+            n=max(hi - lo, 0),
+        )
+
+    def pad_to(self, n_rows: int) -> "EncodedBatch":
+        """Pad with all-zero query rows up to ``n_rows`` (no-op when
+        already that long).  Zero rows carry no query terms, so every
+        candidate ties at score 0 and the padded decisions are discarded
+        by the caller; real rows are untouched — the jit pipeline is
+        row-wise, so padding only fixes the compiled batch shape (one
+        XLA program per bucket instead of one per micro-batch size)."""
+        pad = n_rows - self.n
+        if pad <= 0:
+            return self
+        z = lambda m: np.concatenate(  # noqa: E731
+            [m, np.zeros((pad, m.shape[1]), m.dtype)], axis=0
+        )
+        return EncodedBatch(
+            q_server=z(self.q_server),
+            q_tool=z(self.q_tool),
+            q_rerank=None if self.q_rerank is None else z(self.q_rerank),
+            n=n_rows,
+        )
+
 
 @dataclasses.dataclass
 class BatchDecisions:

@@ -6,13 +6,30 @@ from per-replica latency telemetry — and records feed-forward latencies.
 This is the paper's technique running as the admission layer of a real
 serving stack (deliverable (b): serve a small model with batched requests).
 
+Two modes:
+
+``--mode sync`` (default)
+    The original closed loop: requests routed one at a time through the
+    scalar gateway, each executed on its replica's ServeEngine.
+
+``--mode online``
+    The online serving front-end (docs/serving.md): requests arrive
+    individually from a named arrival process, the asyncio
+    `AsyncServingGateway` coalesces them into deadline-aware
+    micro-batches, and every flush runs the jit batch hot path.  Prints
+    per-flush routing plus the latency/shedding summary.
+
 Usage:
   PYTHONPATH=src python -m repro.launch.serve --arch internlm2-1.8b \
       --n-replicas 4 --n-requests 24 --scenario hybrid
+  PYTHONPATH=src python -m repro.launch.serve --mode online \
+      --algo sonar_lb --arrivals flash_crowd --rate 300 --horizon-s 1.0 \
+      --max-batch 16 --max-wait-ms 5 --deadline-ms 100
 """
 from __future__ import annotations
 
 import argparse
+import asyncio
 import time
 
 import jax
@@ -22,7 +39,10 @@ from repro import configs
 from repro.core import latency as latlib
 from repro.models.api import get_model
 from repro.serving.engine import Request, ServeEngine
+from repro.serving.frontend import AsyncServingGateway
 from repro.serving.gateway import SonarGateway, replica_pool
+from repro.serving.microbatch import BatchingPolicy
+from repro.traffic.source import request_schedule
 
 
 def scenario_profiles(name: str, n: int):
@@ -44,6 +64,78 @@ def scenario_profiles(name: str, n: int):
     raise ValueError(name)
 
 
+QUERIES = [
+    "summarize the latest research news on reinforcement learning",
+    "generate a short story about a lighthouse keeper",
+    "answer a question about current stock markets",
+    "chat about travel plans for next month",
+]
+
+
+def serve_online(args) -> dict:
+    """Run the asyncio micro-batch front-end over a live arrival stream.
+
+    Requests from ``--arrivals`` at ``--rate`` rps are submitted to an
+    `AsyncServingGateway` at their scheduled times (scaled by
+    ``--time-scale``; >1 slows the replay down).  Returns the summary
+    dict that is also printed.
+    """
+    replicas = replica_pool([("yi-6b", "dense")] * args.n_replicas)
+    profiles = scenario_profiles(args.scenario, args.n_replicas)
+    gw = SonarGateway(
+        replicas, profiles=profiles, algo=args.algo, seed=args.seed,
+        use_kernels=True, device_telemetry=True,
+    )
+    policy = BatchingPolicy(
+        max_batch=args.max_batch, max_wait_ms=args.max_wait_ms,
+        slack_ms=args.slack_ms, queue_limit=args.queue_limit,
+        pad_batches=True,
+    )
+    gw.route_batch(QUERIES * args.max_batch, pad_to=args.max_batch)  # warm jit
+    schedule = request_schedule(
+        args.arrivals, jax.random.PRNGKey(args.seed), args.rate,
+        args.horizon_s, QUERIES,
+    )
+    if args.n_requests > 0:
+        schedule = schedule[: args.n_requests]
+
+    async def run():
+        srv = AsyncServingGateway(gw, policy)
+        await srv.start()
+        t0 = srv.now_ms()
+
+        async def one(req):
+            wait_s = (t0 + req.t_ms * args.time_scale - srv.now_ms()) / 1000.0
+            if wait_s > 0:
+                await asyncio.sleep(wait_s)
+            return await srv.submit(req.text, deadline_ms=args.deadline_ms)
+
+        results = await asyncio.gather(*[one(r) for r in schedule])
+        await srv.close(drain=True)
+        return results, srv
+
+    results, srv = asyncio.run(run())
+    routed = [r for r in results if not r.shed and not r.expired]
+    lat = np.asarray([r.serve_ms for r in routed], np.float64)
+    summary = {
+        "offered": len(results),
+        "routed": len(routed),
+        "shed": sum(r.shed for r in results),
+        "expired": sum(r.expired for r in results),
+        "flushes": srv.n_flushes,
+        "p50_ms": round(float(np.percentile(lat, 50)), 2) if lat.size else 0.0,
+        "p99_ms": round(float(np.percentile(lat, 99)), 2) if lat.size else 0.0,
+    }
+    for r in results[: min(len(results), 12)]:
+        state = "shed" if r.shed else ("expired" if r.expired else "routed")
+        print(
+            f"req {r.rid:3d} -> replica {r.replica_idx:2d} [{state}] "
+            f"wait={r.wait_ms:6.1f}ms batch={r.batch_size}"
+        )
+    print("online serving summary:", summary)
+    return summary
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", type=str, default="internlm2-1.8b")
@@ -53,7 +145,26 @@ def main():
     ap.add_argument("--max-new-tokens", type=int, default=8)
     ap.add_argument("--scenario", type=str, default="hybrid")
     ap.add_argument("--seed", type=int, default=0)
+    # --mode online: the micro-batch front-end (docs/serving.md)
+    ap.add_argument("--mode", choices=["sync", "online"], default="sync")
+    ap.add_argument("--algo", type=str, default="sonar_lb")
+    ap.add_argument("--arrivals", type=str, default="poisson",
+                    help="poisson | diurnal | mmpp | flash_crowd")
+    ap.add_argument("--rate", type=float, default=200.0, help="mean rps")
+    ap.add_argument("--horizon-s", type=float, default=1.0)
+    ap.add_argument("--max-batch", type=int, default=16)
+    ap.add_argument("--max-wait-ms", type=float, default=5.0)
+    ap.add_argument("--deadline-ms", type=float, default=None,
+                    help="relative per-request deadline (default none)")
+    ap.add_argument("--slack-ms", type=float, default=1.0)
+    ap.add_argument("--queue-limit", type=int, default=256)
+    ap.add_argument("--time-scale", type=float, default=1.0,
+                    help="wall-clock seconds per virtual second (>1 = slower)")
     args = ap.parse_args()
+
+    if args.mode == "online":
+        serve_online(args)
+        return
 
     cfg = configs.get_reduced(args.arch)
     model = get_model(cfg)
@@ -85,14 +196,8 @@ def main():
         replicas, profiles=profiles, seed=args.seed, executor=executor
     )
 
-    queries = [
-        "summarize the latest research news on reinforcement learning",
-        "generate a short story about a lighthouse keeper",
-        "answer a question about current stock markets",
-        "chat about travel plans for next month",
-    ]
     for i in range(args.n_requests):
-        res = gateway.route(queries[i % len(queries)])
+        res = gateway.route(QUERIES[i % len(QUERIES)])
         print(
             f"req {i:3d} -> replica {res.replica_idx} "
             f"lat={res.latency_ms:7.1f}ms ok={res.ok} C={res.expertise:.2f} N={res.network:.2f}"

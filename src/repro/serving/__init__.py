@@ -1,0 +1,25 @@
+"""Online serving subsystem: the SONAR gateway plus its front-ends.
+
+Layers, bottom to top:
+
+- `repro.serving.gateway`    — `SonarGateway`: batch routing over the jit
+  engines with telemetry feed-forward, health ejection, chunked
+  load-aware degradation, and an optional donated device-telemetry ring.
+- `repro.serving.engine`     — `ServeEngine`: slot-based continuous
+  batching for the model-execution side (admission, eviction, steps).
+- `repro.serving.microbatch` — deadline-aware micro-batching policy
+  (`BatchingPolicy`, `MicroBatcher`) and the virtual-time
+  `MicroBatchPump` used by tests and `benchmarks/serving_qps.py`.
+- `repro.serving.frontend`   — `AsyncServingGateway`: the same policy on
+  the asyncio event loop for live, individually-arriving requests.
+
+See docs/serving.md for the end-to-end walkthrough.
+"""
+from repro.serving.frontend import AsyncServingGateway  # noqa: F401
+from repro.serving.microbatch import (  # noqa: F401
+    BatchingPolicy,
+    MicroBatcher,
+    MicroBatchPump,
+    PumpReport,
+    ServeResult,
+)

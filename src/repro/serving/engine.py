@@ -71,6 +71,28 @@ class Request:
 
 
 class ServeEngine:
+    """Slot-based continuous-batching execution engine for one replica.
+
+    Parameters
+    ----------
+    model : Model
+        Any `repro.models.api.Model` (prefill / decode_step interface).
+    params : pytree
+        Model parameters, shared across all slots.
+    n_slots : int
+        Concurrent sequences in the batched cache (the static batch dim).
+    cap : int
+        Cache capacity in tokens per slot (static sequence dim).
+
+    Notes
+    -----
+    The serving front-end (`repro.serving.frontend`) batches *routing*
+    decisions; this engine batches *execution* on whichever replica the
+    gateway picked.  Both are slot/micro-batch shaped for the same
+    reason: XLA wants static shapes, so concurrency lives in a fixed
+    batch dimension rather than dynamic structures.
+    """
+
     def __init__(self, model: Model, params, n_slots: int, cap: int):
         self.model = model
         self.params = params
@@ -86,7 +108,17 @@ class ServeEngine:
         self.queue: list = []
 
     # -- request lifecycle --------------------------------------------------
+    @property
+    def pending(self) -> int:
+        """Requests not yet finished: queued plus in-slot (the in-flight
+        count a shutdown must drain)."""
+        return len(self.queue) + sum(
+            1 for r in self.slot_req if r is not None
+        )
+
     def submit(self, req: Request):
+        """Enqueue one request; it is admitted to a slot by the next
+        `step` with free capacity."""
         self.queue.append(req)
 
     def _admit(self):
@@ -137,9 +169,22 @@ class ServeEngine:
         return True
 
     def run(self, max_steps: int = 10_000):
+        """Step until every submitted request is done (or `max_steps`);
+        returns the number of engine steps taken."""
         steps = 0
-        while (self.queue or any(r is not None for r in self.slot_req)) and steps < max_steps:
+        while self.pending and steps < max_steps:
             if not self.step() and not self.queue:
                 break
             steps += 1
+        return steps
+
+    def drain(self, max_steps: int = 10_000) -> int:
+        """Graceful-shutdown helper: finish all in-flight and queued
+        requests, then assert the engine is empty.  Returns steps taken."""
+        steps = self.run(max_steps)
+        if self.pending:
+            raise RuntimeError(
+                f"drain incomplete: {self.pending} requests still "
+                f"in flight after {steps} steps"
+            )
         return steps

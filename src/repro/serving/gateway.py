@@ -171,6 +171,15 @@ class SonarGateway:
         .region_server_rtt()`).  With a locality-aware algorithm
         (``algo="sonar_geo"``) requests routed with a ``client_region``
         pay attention to distance; other algorithms ignore it.
+    device_telemetry : bool, optional
+        Keep the telemetry window device-resident (the donated
+        `DeviceTelemetry` ring) even without ``shards``.  The ring is
+        advanced by a jit in-place shift-append whose dispatch is
+        asynchronous, so under the micro-batch front-end the feed-forward
+        pushes of flush *k* overlap with the host-side encode of flush
+        *k+1* and the window is already on device when the fused kernel
+        runs — no per-flush host->device transfer.  Defaults to ``True``
+        when ``shards`` is set, else ``False`` (the host np.roll window).
     """
 
     def __init__(
@@ -190,6 +199,7 @@ class SonarGateway:
         shards: Optional[int] = None,
         mesh="auto",
         region_rtt_ms: Optional[np.ndarray] = None,
+        device_telemetry: Optional[bool] = None,
     ):
         self.replicas = list(replicas)
         self.algo = algo.lower().replace("-", "_")
@@ -228,8 +238,10 @@ class SonarGateway:
         steps = latlib.trace_horizon_steps()
         self.traces = latlib.generate_traces_cached(seed, packed, steps)
         init = self.traces[:, :history]
+        if device_telemetry is None:
+            device_telemetry = bool(shards)
         self._telemetry = (
-            DeviceTelemetry(init) if shards else _HostTelemetry(init)
+            DeviceTelemetry(init) if device_telemetry else _HostTelemetry(init)
         )
         self.t = history
         self.stats: list = []
@@ -375,6 +387,7 @@ class SonarGateway:
         self,
         request_texts: Sequence[str],
         client_regions: Optional[Sequence[int]] = None,
+        pad_to: Optional[int] = None,
     ) -> list:
         """Fleet-scale batched routing: the request batch runs through the
         jit-compiled engine (two-stage BM25 + Pallas QoS + fused selection)
@@ -384,6 +397,10 @@ class SonarGateway:
         locality-aware algorithms; the per-request RTT rows are gathered
         inside the engine from the gateway's region RTT matrix.
 
+        The whole request set is encoded in **one** host pass
+        (`EncodedBatch.slice` is bit-identical to per-chunk encoding), so
+        the per-chunk Python between engine calls is just array slicing.
+
         With a load-aware algorithm the batch is routed in `lb_chunk`-sized
         chunks: each chunk's picks are counted in-flight before the next
         chunk routes, so one hot batch spreads across replicas instead of
@@ -391,7 +408,17 @@ class SonarGateway:
         skips the chunking: there is nothing to spread to, and chunk-by-
         chunk in-flight feedback would only inflate the utilization signal
         (every earlier chunk still counted outstanding) and distort the
-        recorded scores."""
+        recorded scores.
+
+        ``pad_to`` fixes the compiled batch shape for the micro-batch
+        serving path: each engine call is padded with all-zero query rows
+        to ``pad_to`` rows (or to ``lb_chunk`` on the chunked path), so
+        arbitrary micro-batch sizes reuse one XLA program per bucket
+        instead of compiling one per size.  Padded rows draw no health
+        probes, carry no region tag, and their decisions are discarded
+        before any accounting — the real rows' decisions are
+        argmax-identical to the unpadded call (row-wise pipeline;
+        parity-tested in tests/test_microbatch.py)."""
         if not request_texts:
             return []                 # nothing to route: do not build the
                                       # engine or touch accounting state
@@ -412,24 +439,38 @@ class SonarGateway:
         regions_arr = (
             np.asarray(client_regions, np.int32) if use_geo else None
         )
+        enc = eng.encode(request_texts)
         picks: list = []
         chunked = self.router.uses_load and len(self.replicas) > 1
-        step = self.lb_chunk if chunked else len(request_texts)
+        step = self.lb_chunk if chunked else (pad_to or len(request_texts))
         step = max(step, 1)
         for lo in range(0, len(request_texts), step):
-            chunk = request_texts[lo : lo + step]
+            n_chunk = min(step, len(request_texts) - lo)
+            sub = enc.slice(lo, lo + n_chunk)
+            mask = self._health_mask(n_chunk)
+            reg = regions_arr[lo : lo + n_chunk] if use_geo else None
+            if pad_to is not None and sub.n < step:
+                sub = sub.pad_to(step)
+                if mask is not None:
+                    mask = np.concatenate(
+                        [mask, np.zeros((step - n_chunk, mask.shape[1]),
+                                        bool)], axis=0,
+                    )
+                if reg is not None:
+                    reg = np.concatenate(
+                        [reg, np.full(step - n_chunk, -1, np.int32)]
+                    )
             geo_kw = {}
             if use_geo:
                 geo_kw = dict(
-                    client_region=regions_arr[lo : lo + len(chunk)],
-                    region_rtt_ms=self.region_rtt_ms,
+                    client_region=reg, region_rtt_ms=self.region_rtt_ms
                 )
-            dec = eng.route_texts(
-                chunk, self._telemetry.raw(), self._utilization(),
-                failed_mask=self._health_mask(len(chunk)),
+            dec = eng.route(
+                sub, self._telemetry.raw(), self._utilization(),
+                failed_mask=mask,
                 **geo_kw,
             )
-            for qi in range(len(chunk)):
+            for qi in range(n_chunk):
                 idx = int(dec.server_idx[qi])
                 self.in_flight[idx] += 1.0
                 picks.append(

@@ -1,6 +1,8 @@
 """Fleet traffic subsystem: open-loop arrival processes, per-server
-queue/capacity stations, and the discrete-event simulator that closes the
-load->latency loop around the routing stack (SONAR vs SONAR-LB)."""
+queue/capacity stations, the discrete-event simulator that closes the
+load->latency loop around the routing stack (SONAR vs SONAR-LB), and the
+live request sources that replay the same arrival processes as online
+serving traffic for the micro-batch front-end (repro.serving)."""
 from repro.traffic.arrivals import (  # noqa: F401
     ARRIVAL_PROCESSES,
     diurnal_arrivals,
@@ -23,3 +25,4 @@ from repro.traffic.simulator import (  # noqa: F401
     Request,
     TrafficReport,
 )
+from repro.traffic.source import LiveRequest, request_schedule  # noqa: F401

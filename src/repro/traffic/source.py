@@ -1,0 +1,125 @@
+"""Live request sources: arrival processes replayed as serving traffic.
+
+The arrival generators in `traffic.arrivals` produce bare time arrays for
+the *offline* discrete-event simulator.  The online serving front-end
+(`repro.serving`) needs the same demand shapes as a stream of concrete
+requests — text, arrival time, optional response deadline, optional client
+region — arriving one at a time.  `request_schedule` bridges the two: any
+named arrival process (or a pre-built time array) becomes a deterministic
+list of `LiveRequest`s that the micro-batch pump replays in virtual time
+and the asyncio gateway replays in wall time.
+
+Everything here is jax-seeded and fully deterministic: the same
+(process, key, rate, horizon, texts) always yields the same schedule, the
+same way `core.latency` traces replay identically.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence, Union
+
+import jax
+import numpy as np
+
+from repro.traffic.arrivals import ARRIVAL_PROCESSES
+
+__all__ = ["LiveRequest", "request_schedule"]
+
+
+@dataclasses.dataclass
+class LiveRequest:
+    """One individually-arriving route request.
+
+    Parameters
+    ----------
+    rid : int
+        Request id, unique within a schedule (arrival order).
+    text : str
+        The query routed by the gateway.
+    t_ms : float
+        Arrival time in **ms** on the schedule's virtual clock (the pump
+        replays this clock directly; the asyncio front-end maps it onto
+        the wall clock).
+    deadline_ms : float, optional
+        Absolute response deadline in **ms** on the same clock.  ``None``
+        means no deadline: the request can wait the full ``max_wait_ms``
+        and is never expiry-shed.
+    region : int
+        Client region index for locality-aware routing (``-1`` =
+        untagged, the convention shared with `traffic.simulator.Request`).
+    """
+
+    rid: int
+    text: str
+    t_ms: float
+    deadline_ms: Optional[float] = None
+    region: int = -1
+
+
+def request_schedule(
+    process: Union[str, np.ndarray],
+    key: Optional[jax.Array],
+    rate_rps: float,
+    horizon_s: float,
+    texts: Sequence[str],
+    *,
+    deadline_ms: Optional[float] = None,
+    regions: Optional[np.ndarray] = None,
+    **process_kw,
+) -> list:
+    """Materialize an arrival process into a list of `LiveRequest`s.
+
+    Parameters
+    ----------
+    process : str or np.ndarray
+        Either a name in `traffic.arrivals.ARRIVAL_PROCESSES`
+        (``"poisson" | "diurnal" | "mmpp" | "flash_crowd"``) or a
+        pre-built sorted array of arrival times in **seconds**.
+    key : jax.Array, optional
+        PRNG key for the named process (ignored for a pre-built array).
+    rate_rps : float
+        Mean arrival rate in requests/**second** (named processes only).
+    horizon_s : float
+        Stream length in **seconds** (named processes only).
+    texts : Sequence[str]
+        Query texts, cycled over the arrivals (the same convention as
+        `FleetTrafficSim.run`).
+    deadline_ms : float, optional
+        Per-request *relative* deadline in **ms**: request i's absolute
+        deadline is ``t_ms + deadline_ms``.  ``None`` = no deadlines.
+    regions : np.ndarray, optional
+        i32 client-region tags aligned with the arrivals (cycled if
+        shorter); ``None`` leaves every request untagged (-1).
+    **process_kw
+        Extra keyword arguments forwarded to the named arrival process
+        (e.g. ``spike_factor=`` for ``flash_crowd``).
+
+    Returns
+    -------
+    list[LiveRequest]
+        Sorted by arrival time; ``rid`` is the arrival rank.
+    """
+    if isinstance(process, str):
+        arrivals_s = ARRIVAL_PROCESSES[process](
+            key, rate_rps, horizon_s, **process_kw
+        )
+    else:
+        arrivals_s = np.sort(np.asarray(process, np.float64))
+    if not texts:
+        raise ValueError("request_schedule needs at least one query text")
+    out = []
+    for i, t_s in enumerate(arrivals_s):
+        t_ms = 1000.0 * float(t_s)
+        out.append(
+            LiveRequest(
+                rid=i,
+                text=texts[i % len(texts)],
+                t_ms=t_ms,
+                deadline_ms=None if deadline_ms is None else t_ms + deadline_ms,
+                region=(
+                    -1 if regions is None
+                    else int(regions[i % len(regions)])
+                ),
+            )
+        )
+    return out

@@ -40,12 +40,44 @@ GOOD_GEO = {
 }
 
 
-def test_known_schemas_cover_all_five_artifacts():
+def test_known_schemas_cover_all_six_artifacts():
     assert sorted(SCHEMAS) == [
         "bench-results", "chaos-recovery", "geo-routing", "mega-fleet",
-        "offered-load",
+        "offered-load", "serving-qps",
     ]
     assert schema_name_for("some/dir/geo-routing.json") == "geo-routing"
+    # committed perf-trajectory baselines map to the plain schema names
+    assert schema_name_for("BENCH_serving_qps.json") == "serving-qps"
+    assert schema_name_for("repo/BENCH_mega_fleet.json") == "mega-fleet"
+
+
+GOOD_SERVING = {
+    "algo": "sonar_lb", "n_replicas": 4, "max_batch": 16,
+    "max_wait_ms": 2.0, "queue_limit": 64, "horizon_s": 0.6,
+    "oracle": {"oracle_qps": 5000.0, "oracle_p50_ms": 3.2,
+               "oracle_p99_ms": 4.0, "n_batches": 16},
+    "knee": None,
+    "points": [
+        {"rate_rps": 1000.0, "offered": 600, "routed": 600, "shed": 0,
+         "expired": 0, "sustained_qps": 1300.0, "p50_ms": 2.3,
+         "p99_ms": 3.6, "mean_batch": 3.2, "flushes": 180},
+        {"rate_rps": 6500.0, "offered": 3900, "routed": 3000, "shed": 900,
+         "expired": 0, "sustained_qps": 5100.0, "p50_ms": 13.0,
+         "p99_ms": 21.0, "mean_batch": 15.9, "flushes": 190},
+    ],
+}
+
+
+def test_serving_qps_schema_and_conservation():
+    assert validate_artifact("serving-qps", GOOD_SERVING) == []
+    bad = json.loads(json.dumps(GOOD_SERVING))
+    bad["points"][1]["shed"] = 1          # breaks offered == routed+shed+expired
+    errs = validate_artifact("serving-qps", bad)
+    assert any("offered != routed + shed + expired" in e for e in errs)
+    bad2 = json.loads(json.dumps(GOOD_SERVING))
+    bad2["oracle"]["oracle_p99_ms"] = "fast"
+    errs = validate_artifact("serving-qps", bad2)
+    assert any("oracle_p99_ms" in e for e in errs)
 
 
 def test_valid_geo_payload_passes():

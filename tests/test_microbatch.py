@@ -1,0 +1,266 @@
+"""Micro-batching front-end: policy edge cases, degradation, async path.
+
+The argmax-parity of the micro-batched path against direct `route_batch`
+is property-tested in tests/test_parity_prop.py; this module covers the
+batching *policy* (triggers, shedding, expiry, accounting) and the
+asyncio front-end lifecycle (drain and non-drain shutdown with in-flight
+batches).
+"""
+import asyncio
+
+import numpy as np
+import pytest
+
+from repro.core import latency as latlib
+from repro.serving.frontend import AsyncServingGateway
+from repro.serving.gateway import SonarGateway, replica_pool
+from repro.serving.microbatch import (
+    BatchingPolicy,
+    MicroBatcher,
+    MicroBatchPump,
+)
+from repro.traffic.source import LiveRequest, request_schedule
+
+TEXTS = [
+    "search the web for the latest news",
+    "what is the weather forecast tomorrow",
+    "find recent articles about machine learning research",
+]
+
+
+def _gateway(seed=0, n=4, algo="sonar_lb", **kw):
+    replicas = replica_pool([("yi-6b", "dense")] * n)
+    profiles = [latlib.ideal_profile() for _ in range(n)]
+    return SonarGateway(
+        replicas, profiles=profiles, algo=algo, seed=seed,
+        use_kernels=True, **kw,
+    )
+
+
+def _burst(n, t_ms=0.0, deadline_ms=None, spacing_ms=0.01):
+    return [
+        LiveRequest(
+            rid=i, text=TEXTS[i % len(TEXTS)], t_ms=t_ms + i * spacing_ms,
+            deadline_ms=deadline_ms,
+        )
+        for i in range(n)
+    ]
+
+
+# ---------------------------------------------------------------------------
+# MicroBatcher: the policy state machine
+# ---------------------------------------------------------------------------
+
+def test_batcher_triggers():
+    pol = BatchingPolicy(max_batch=3, max_wait_ms=10.0, slack_ms=2.0,
+                         queue_limit=8)
+    b = MicroBatcher(pol)
+    assert b.next_trigger_ms(0.0) is None                 # nothing pending
+    b.offer(LiveRequest(rid=0, text="a", t_ms=1.0), 1.0)
+    assert b.next_trigger_ms(1.0) == 11.0                 # age: 1 + 10
+    b.offer(LiveRequest(rid=1, text="b", t_ms=2.0, deadline_ms=8.0), 2.0)
+    assert b.next_trigger_ms(2.0) == 6.0                  # deadline: 8 - 2
+    b.offer(LiveRequest(rid=2, text="c", t_ms=3.0), 3.0)
+    assert b.next_trigger_ms(3.0) == 3.0                  # size: full now
+    assert [r.rid for r in b.take(4.0)] == [0, 1, 2]
+    b.check_accounting()
+
+
+def test_batcher_policy_validation():
+    with pytest.raises(ValueError):
+        BatchingPolicy(max_batch=0)
+    with pytest.raises(ValueError):
+        BatchingPolicy(max_batch=8, queue_limit=4)
+    with pytest.raises(ValueError):
+        BatchingPolicy(max_wait_ms=-1.0)
+
+
+def test_empty_queue_drain_is_noop():
+    gw = _gateway()
+    pump = MicroBatchPump(gw, BatchingPolicy(max_batch=4),
+                          service_ms=lambda t: 1.0)
+    rep = pump.replay([])
+    assert rep.n_offered == rep.n_routed == rep.n_shed == 0
+    assert rep.n_flushes == 0 and rep.sustained_qps == 0.0
+    # an explicit empty take is also a no-op
+    assert MicroBatcher(BatchingPolicy()).take(0.0) == []
+
+
+def test_all_requests_past_deadline_route_nothing():
+    """Every request shares one deadline and the flush fires exactly when
+    it expires (slack 0): the whole batch is expiry-shed, zero routed."""
+    gw = _gateway()
+    sched = [
+        LiveRequest(rid=i, text=TEXTS[i % 3], t_ms=0.1 * i, deadline_ms=5.0)
+        for i in range(6)
+    ]
+    pol = BatchingPolicy(max_batch=32, max_wait_ms=1000.0, slack_ms=0.0)
+    pump = MicroBatchPump(gw, pol, service_ms=lambda t: 1.0)
+    rep = pump.replay(sched)
+    assert rep.n_routed == 0 and rep.n_expired == 6 and rep.n_shed == 0
+    assert all(r.expired for r in rep.results)
+    assert rep.n_offered == rep.n_routed + rep.n_shed + rep.n_expired
+
+
+def test_single_request_microbatch_flushes_on_age():
+    gw = _gateway()
+    pol = BatchingPolicy(max_batch=8, max_wait_ms=5.0)
+    pump = MicroBatchPump(gw, pol, service_ms=lambda t: 1.0)
+    rep = pump.replay([LiveRequest(rid=0, text=TEXTS[0], t_ms=2.0)])
+    (res,) = rep.results
+    assert not res.shed and not res.expired and res.replica_idx >= 0
+    assert res.batch_size == 1
+    assert res.t_routed_ms == pytest.approx(7.0)          # arrival + max_wait
+    assert res.wait_ms == pytest.approx(5.0)
+
+
+def test_queue_full_shedding_accounting():
+    """A burst far beyond queue_limit: admission control sheds the excess
+    and every offered request is accounted exactly once."""
+    gw = _gateway()
+    pol = BatchingPolicy(max_batch=4, max_wait_ms=2.0, queue_limit=4)
+    pump = MicroBatchPump(gw, pol, service_ms=lambda t: 50.0)
+    rep = pump.replay(_burst(40))
+    assert rep.n_shed > 0
+    assert rep.n_offered == rep.n_routed + rep.n_shed + rep.n_expired == 40
+    shed = [r for r in rep.results if r.shed]
+    assert len(shed) == rep.n_shed
+    assert all(r.replica_idx == -1 for r in shed)
+
+
+def test_burst_degrades_to_chunked_full_batches():
+    """Arrivals 3x max_batch in one instant: the batcher degrades to
+    back-to-back max_batch flushes while the engine stays busy."""
+    gw = _gateway()
+    pol = BatchingPolicy(max_batch=8, max_wait_ms=2.0, queue_limit=64)
+    pump = MicroBatchPump(gw, pol, service_ms=lambda t: 10.0)
+    rep = pump.replay(_burst(24))
+    assert rep.n_routed == 24 and rep.n_shed == 0
+    assert [len(b) for b in pump.flush_log] == [8, 8, 8]
+    starts = sorted({r.t_routed_ms for r in rep.results})
+    # later flushes start when the engine frees, one service time apart
+    assert np.allclose(np.diff(starts), 10.0)
+
+
+def test_padded_flushes_argmax_identical():
+    """Zero-row padding to the max_batch bucket must not change any real
+    row's decision (row-wise pipeline; padded health-mask rows are False
+    so the probe RNG stream is untouched)."""
+    for algo in ("sonar", "sonar_lb", "sonar_ft"):
+        for size in (1, 3, 5):
+            a = _gateway(seed=7, algo=algo)
+            b = _gateway(seed=7, algo=algo)
+            texts = [TEXTS[i % 3] for i in range(size)]
+            ra = a.route_batch(texts)
+            rb = b.route_batch(texts, pad_to=8)
+            assert [r.replica_idx for r in ra] == [
+                r.replica_idx for r in rb
+            ], f"{algo} size={size}"
+
+
+def test_pump_replay_is_deterministic():
+    import jax
+    sched = request_schedule(
+        "flash_crowd", jax.random.PRNGKey(3), 400.0, 0.3, TEXTS,
+        deadline_ms=50.0,
+    )
+    pol = BatchingPolicy(max_batch=8, max_wait_ms=3.0, slack_ms=1.0)
+    reps = []
+    for _ in range(2):
+        pump = MicroBatchPump(_gateway(seed=11), pol,
+                              service_ms=lambda t: 2.0)
+        reps.append(pump.replay(sched))
+    a, b = reps
+    assert [r.replica_idx for r in a.results] == [
+        r.replica_idx for r in b.results
+    ]
+    assert [r.t_done_ms for r in a.results] == [r.t_done_ms for r in b.results]
+    assert (a.n_routed, a.n_shed, a.n_expired) == (
+        b.n_routed, b.n_shed, b.n_expired
+    )
+
+
+def test_pump_requires_kernel_gateway():
+    gw = _gateway()
+    gw.use_kernels = False
+    with pytest.raises(ValueError):
+        MicroBatchPump(gw)
+    with pytest.raises(ValueError):
+        AsyncServingGateway(gw)
+
+
+# ---------------------------------------------------------------------------
+# AsyncServingGateway: the event-loop front-end
+# ---------------------------------------------------------------------------
+
+def test_async_gateway_routes_all_submissions():
+    gw = _gateway()
+    gw.route_batch(TEXTS + TEXTS[:1], pad_to=4)           # warm the jit cache
+
+    async def run():
+        srv = AsyncServingGateway(
+            gw, BatchingPolicy(max_batch=4, max_wait_ms=3.0,
+                               pad_batches=True)
+        )
+        await srv.start()
+        res = await asyncio.gather(*[
+            srv.submit(TEXTS[i % 3], deadline_ms=30_000.0) for i in range(10)
+        ])
+        await srv.close()
+        return res, srv
+
+    res, srv = asyncio.run(run())
+    assert len(res) == 10
+    assert all(not r.shed and not r.expired for r in res)
+    assert all(r.replica_idx >= 0 for r in res)
+    assert 1 <= srv.n_flushes <= 10
+    srv.batcher.check_accounting()
+
+
+def test_async_shutdown_drains_in_flight_batches():
+    """close(drain=True) while submissions are still queued must route
+    every pending request before returning."""
+    gw = _gateway()
+    gw.route_batch(TEXTS, pad_to=8)
+
+    async def run():
+        # max_wait far beyond the test duration: nothing flushes until
+        # close() drains, so every request is in flight at shutdown
+        srv = AsyncServingGateway(
+            gw, BatchingPolicy(max_batch=8, max_wait_ms=60_000.0,
+                               pad_batches=True)
+        )
+        await srv.start()
+        tasks = [
+            asyncio.ensure_future(srv.submit(TEXTS[i % 3])) for i in range(6)
+        ]
+        await asyncio.sleep(0.05)                  # let submissions enqueue
+        assert srv.batcher.n_pending == 6
+        await srv.close(drain=True)
+        return await asyncio.gather(*tasks)
+
+    res = asyncio.run(run())
+    assert all(not r.shed and not r.expired for r in res)
+    assert all(r.replica_idx >= 0 for r in res)
+
+
+def test_async_shutdown_without_drain_sheds_pending():
+    gw = _gateway()
+
+    async def run():
+        srv = AsyncServingGateway(
+            gw, BatchingPolicy(max_batch=8, max_wait_ms=60_000.0)
+        )
+        await srv.start()
+        tasks = [
+            asyncio.ensure_future(srv.submit(TEXTS[i % 3])) for i in range(4)
+        ]
+        await asyncio.sleep(0.05)
+        await srv.close(drain=False)
+        res = await asyncio.gather(*tasks)
+        with pytest.raises(RuntimeError):
+            await srv.submit("after close")
+        return res
+
+    res = asyncio.run(run())
+    assert all(r.shed for r in res)

@@ -12,6 +12,11 @@ the test materializes fleet/telemetry/load/mask arrays from a seeded
 generator, so the suite runs identically under real hypothesis (CI) and
 under the deterministic fallback in conftest.py (dependency-light
 containers).
+
+The serving front-end extends the invariant to the time axis: the
+deadline-aware micro-batch pump must make the same decisions as direct
+`route_batch` calls over the same flush partitions, leaving the gateway
+in the same end state (see `test_microbatch_parity_with_direct_route_batch`).
 """
 import numpy as np
 import pytest
@@ -205,6 +210,86 @@ def test_three_path_parity_extended(seed, algo, n_servers, identical,
     _check_three_path_parity(
         seed, algo, n_servers, identical, all_offline, mask_kind
     )
+
+
+NETWORK_ALGOS = ["sonar", "sonar_lb", "sonar_ft", "sonar_geo"]
+
+
+@settings(max_examples=6, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    algo=st.sampled_from(NETWORK_ALGOS),
+    n_replicas=st.integers(2, 5),
+    max_batch=st.integers(1, 6),
+    with_deadlines=st.booleans(),
+)
+def test_microbatch_parity_with_direct_route_batch(
+    seed, algo, n_replicas, max_batch, with_deadlines
+):
+    """Serving-path parity: the deadline-aware micro-batched front-end
+    must make argmax-identical decisions to direct `route_batch` calls
+    over the same flush partitions, and leave the gateway in the same
+    end state (telemetry tick, in-flight counts, health tracking) —
+    coalescing changes *when* requests are routed, never *where*.
+    """
+    import jax
+
+    from repro.core import latency as latlib
+    from repro.serving.gateway import SonarGateway, replica_pool
+    from repro.serving.microbatch import BatchingPolicy, MicroBatchPump
+    from repro.traffic.source import request_schedule
+
+    rng = np.random.default_rng(seed)
+    profile_pool = [
+        latlib.ideal_profile(), latlib.high_latency_profile(),
+        latlib.fluctuating_profile(),
+    ]
+    profiles = [
+        profile_pool[i] for i in rng.integers(0, len(profile_pool), n_replicas)
+    ]
+    region_rtt = rng.uniform(1.0, 200.0, (2, n_replicas)).astype(np.float32)
+
+    def fresh():
+        return SonarGateway(
+            replica_pool([("yi-6b", "dense")] * n_replicas),
+            profiles=profiles, algo=algo, seed=seed % 1000,
+            use_kernels=True, region_rtt_ms=region_rtt,
+        )
+
+    schedule = request_schedule(
+        "poisson", jax.random.PRNGKey(seed % 2**31), 300.0, 0.15,
+        QUERY_TEXTS,
+        deadline_ms=8.0 if with_deadlines else None,
+        regions=rng.integers(0, 2, 16),
+    )
+    policy = BatchingPolicy(
+        max_batch=max_batch,
+        max_wait_ms=float(rng.uniform(0.5, 6.0)),
+        slack_ms=float(rng.uniform(0.0, 2.0)),
+        queue_limit=max(max_batch, 16),
+    )
+    pump = MicroBatchPump(fresh(), policy,
+                          service_ms=lambda t: float(rng.uniform(0.5, 4.0)))
+    rep = pump.replay(schedule)
+
+    ref = fresh()
+    picks_ref: dict = {}
+    for batch in pump.flush_log:
+        out = ref.route_batch(
+            [r.text for r in batch],
+            client_regions=[r.region for r in batch],
+        )
+        for req, res in zip(batch, out):
+            picks_ref[req.rid] = res.replica_idx
+    routed = [r for r in rep.results if not r.shed and not r.expired]
+    assert {r.rid: r.replica_idx for r in routed} == picks_ref, (
+        f"{algo} seed={seed} max_batch={max_batch}"
+    )
+    assert pump.gw.t == ref.t
+    np.testing.assert_array_equal(pump.gw.in_flight, ref.in_flight)
+    np.testing.assert_array_equal(pump.gw.fail_streak, ref.fail_streak)
+    np.testing.assert_array_equal(pump.gw.ejected, ref.ejected)
+    np.testing.assert_array_equal(pump.gw.telemetry, ref.telemetry)
 
 
 def test_conftest_fallback_covers_used_hypothesis_api():

@@ -91,6 +91,27 @@ def test_gateway_batched_kernel_path_agrees():
     assert all(r.replica_idx < 4 for r in r2)
 
 
+def test_engine_pending_and_drain(small_model):
+    """`pending` tracks queued + in-slot requests and `drain` finishes
+    them all (the graceful-shutdown path of the serving front-end)."""
+    cfg, model, params = small_model
+    rng = np.random.default_rng(2)
+    eng = ServeEngine(model, params, n_slots=2, cap=32)
+    assert eng.pending == 0
+    reqs = [
+        Request(rid=i, tokens=rng.integers(0, cfg.vocab_size, 4).astype(np.int32),
+                max_new_tokens=2)
+        for i in range(3)
+    ]
+    for r in reqs:
+        eng.submit(r)
+    assert eng.pending == 3
+    eng.step()                       # admits up to n_slots, decodes once
+    assert 0 < eng.pending <= 3
+    eng.drain()
+    assert eng.pending == 0 and all(r.done for r in reqs)
+
+
 def test_pad_cache_noop_when_at_capacity(small_model):
     cfg, model, params = small_model
     cache = model.init_cache(2, 16)

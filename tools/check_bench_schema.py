@@ -1,10 +1,12 @@
 """Schema validator for the CI benchmark JSON artifacts.
 
 Every benchmark that uploads a JSON artifact declares its shape here; CI
-runs this over all five artifacts after the bench-smoke steps, and
+runs this over all six artifacts after the bench-smoke steps, and
 ``benchmarks.common.write_artifact`` validates at write time — a benchmark
 that silently changes (or breaks) its output schema fails the build
 instead of producing an artifact downstream dashboards cannot parse.
+Committed perf-trajectory baselines (``BENCH_*.json`` at the repo root)
+validate against the same schemas via the ``BENCH_`` name mapping.
 
 Schemas are structural, not exhaustive: required top-level keys with type
 checks, plus per-point required keys for the ``points``-style sweeps.
@@ -148,12 +150,50 @@ def check_geo_routing(payload: dict) -> list:
     return errs
 
 
+def check_serving_qps(payload: dict) -> list:
+    errs = []
+    for k, t in (("algo", str), ("n_replicas", int), ("max_batch", int),
+                 ("max_wait_ms", NUM), ("queue_limit", int),
+                 ("horizon_s", NUM), ("oracle", dict)):
+        if k not in payload:
+            errs.append(f"missing key '{k}'")
+        else:
+            errs.extend(_check_type(k, payload[k], t))
+    oracle = payload.get("oracle")
+    if isinstance(oracle, dict):
+        for k in ("oracle_qps", "oracle_p50_ms", "oracle_p99_ms"):
+            if not _is_num(oracle.get(k)):
+                errs.append(f"oracle.{k}: expected number, "
+                            f"got {type(oracle.get(k)).__name__}")
+    errs.extend(_check_points(payload, {
+        "rate_rps": NUM, "offered": int, "routed": int, "shed": int,
+        "expired": int, "sustained_qps": NUM, "p50_ms": NUM, "p99_ms": NUM,
+        "mean_batch": NUM,
+    }, min_points=2))
+    # conservation: every point accounts for every offered request
+    for i, p in enumerate(payload.get("points") or []):
+        if isinstance(p, dict) and all(
+            isinstance(p.get(k), int)
+            for k in ("offered", "routed", "shed", "expired")
+        ):
+            if p["offered"] != p["routed"] + p["shed"] + p["expired"]:
+                errs.append(
+                    f"points[{i}]: offered != routed + shed + expired "
+                    f"({p['offered']} != {p['routed']} + {p['shed']} + "
+                    f"{p['expired']})"
+                )
+    if "knee" in payload and payload["knee"] is not None:
+        errs.extend(_check_type("knee", payload["knee"], dict))
+    return errs
+
+
 SCHEMAS: dict = {
     "bench-results": check_bench_results,
     "offered-load": check_offered_load,
     "chaos-recovery": check_chaos_recovery,
     "mega-fleet": check_mega_fleet,
     "geo-routing": check_geo_routing,
+    "serving-qps": check_serving_qps,
 }
 
 
@@ -169,7 +209,16 @@ def validate_artifact(name: str, payload: dict) -> list:
 
 
 def schema_name_for(path: str) -> str:
-    return pathlib.Path(path).stem
+    """Infer the schema name from a path's basename.
+
+    Plain artifacts map by stem (``serving-qps.json`` -> ``serving-qps``);
+    committed perf-trajectory baselines use the ``BENCH_`` prefix with
+    underscores (``BENCH_serving_qps.json``) and map to the same schema.
+    """
+    stem = pathlib.Path(path).stem
+    if stem.startswith("BENCH_"):
+        stem = stem[len("BENCH_"):].replace("_", "-")
+    return stem
 
 
 def main(argv=None) -> int:
