@@ -1,0 +1,246 @@
+"""Observability overhead: instrumented vs uninstrumented serving knee p99.
+
+The observability layer (docs/observability.md) claims to cost ~nothing:
+a disabled tracer is one attribute check per call site, registry counters
+are dict-free float adds, and `DeviceRouteStats` accumulation is an async
+device dispatch with no host sync.  This benchmark holds it to that claim
+at the point where it matters — tail latency near the serving knee.
+
+Method (interleaved A/B so machine drift cancels):
+
+1. Warm the jit cache, then measure the batch-oracle QPS of the hot path
+   (as `serving_qps` does) to pick a knee-region offered rate (0.75x).
+2. Alternate trials of the same flash-crowd replay through
+   `MicroBatchPump`, baseline vs instrumented:
+
+   - **baseline**: default `Observability()` — registry only, no spans,
+     no device stats (what every gateway carries anyway).
+   - **instrumented**: `Observability(trace=True, jit_stats=True)` —
+     full lifecycle spans per request/flush plus device-side route-stat
+     accumulation on every engine call.
+
+3. Compare median-of-trials p99 serve latency.  Gates:
+
+   - full mode: instrumented knee p99 within **3%** of baseline.
+   - --smoke (CI): within 10% (short horizon, noisier medians).
+   - --baseline BENCH_obs_overhead.json: fail if the measured overhead
+     regresses by more than 10 percentage points over the committed
+     trajectory (the CI regression gate).
+
+  PYTHONPATH=src:. python benchmarks/obs_overhead.py            # full
+  PYTHONPATH=src:. python benchmarks/obs_overhead.py --smoke    # CI
+  PYTHONPATH=src:. python benchmarks/obs_overhead.py --json out.json \
+      --baseline BENCH_obs_overhead.json --trace obs-trace.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+import numpy as np
+
+from repro.core import latency as latlib
+from repro.obs import Observability
+from repro.serving.gateway import SonarGateway, replica_pool
+from repro.serving.microbatch import BatchingPolicy, MicroBatchPump
+from repro.traffic.source import request_schedule
+
+QUERY_TEXTS = [
+    "what is the latest news about the stock market today",
+    "search the web for current weather information",
+    "find recent articles about machine learning research",
+    "look up live election results online",
+]
+
+REGRESSION_PCT_POINTS = 10.0     # CI gate vs the committed baseline
+
+
+def make_gateway(n_replicas: int, algo: str, seed: int,
+                 obs: Observability | None = None) -> SonarGateway:
+    replicas = replica_pool([("yi-6b", "dense")] * n_replicas)
+    profiles = [latlib.ideal_profile() for _ in range(n_replicas)]
+    return SonarGateway(
+        replicas, profiles=profiles, algo=algo, seed=seed,
+        use_kernels=True, device_telemetry=True, obs=obs,
+    )
+
+
+def measure_oracle_qps(n_requests: int, max_batch: int, *,
+                       n_replicas: int, algo: str, seed: int) -> float:
+    """Back-to-back padded slices; warms the jit cache as a side effect."""
+    gw = make_gateway(n_replicas, algo, seed)
+    texts = [QUERY_TEXTS[i % len(QUERY_TEXTS)] for i in range(n_requests)]
+    gw.route_batch(texts[:max_batch], pad_to=max_batch)          # compile
+    gw.route_batch(texts[: max(max_batch // 2, 1)], pad_to=max_batch)
+    t0 = time.perf_counter()
+    for lo in range(0, n_requests, max_batch):
+        gw.route_batch(texts[lo: lo + max_batch], pad_to=max_batch)
+    return n_requests / max(time.perf_counter() - t0, 1e-9)
+
+
+def run_trial(rate_rps: float, policy: BatchingPolicy, *, n_replicas: int,
+              algo: str, horizon_s: float, seed: int, instrumented: bool,
+              reps: int = 3) -> dict:
+    """One arm of one trial: ``reps`` replays of the same flash-crowd
+    schedule (fresh gateway each), keeping the replay with the lowest
+    p99.  A single scheduler preemption during the spike cascades
+    through the virtual-time queue and dominates p99; min-of-k keeps the
+    cleanest execution of identical work, which is the quantity the two
+    arms actually differ on."""
+    best = None
+    for _ in range(max(reps, 1)):
+        obs = (
+            Observability(trace=True, jit_stats=True)
+            if instrumented else Observability()
+        )
+        gw = make_gateway(n_replicas, algo, seed, obs=obs)
+        schedule = request_schedule(
+            "flash_crowd", jax.random.PRNGKey(seed), rate_rps, horizon_s,
+            QUERY_TEXTS, spike_factor=3.0,
+        )
+        pump = MicroBatchPump(gw, policy)
+        rep = pump.replay(schedule)
+        lat = np.asarray([
+            r.t_done_ms - r.t_arrival_ms
+            for r in pump.results.values()
+            if not (r.shed or r.expired)
+        ], np.float64)
+        out = {
+            "offered": rep.n_offered, "routed": rep.n_routed,
+            "shed": rep.n_shed, "expired": rep.n_expired,
+            "p50_ms": rep.p50_ms, "p99_ms": rep.p99_ms,
+            "n_trace_events": len(obs.tracer.events),
+            "latencies": lat,
+            "obs": obs,
+        }
+        if best is None or out["p99_ms"] < best["p99_ms"]:
+            best = out
+    return best
+
+
+def _summarize(trials: list) -> dict:
+    """Pool the per-trial latency samples and quantile the pool: one
+    arm-level p99 over every request the arm served, which is a far
+    lower-variance estimator than a median of per-trial p99s (each of
+    which rides on its trial's worst flush)."""
+    pooled = np.concatenate([t["latencies"] for t in trials])
+    return {
+        "n_trials": len(trials),
+        "n_requests": int(pooled.size),
+        "p50_ms": float(np.percentile(pooled, 50)),
+        "p99_ms": float(np.percentile(pooled, 99)),
+        "offered": int(trials[0]["offered"]),
+        "routed": int(trials[0]["routed"]),
+        "n_trace_events": int(max(t["n_trace_events"] for t in trials)),
+    }
+
+
+def main(print_fn=print, *, smoke: bool = False, algo: str = "sonar_lb",
+         seed: int = 0, trace_path: str | None = None) -> dict:
+    if smoke:
+        n_replicas, n_oracle, max_batch = 4, 128, 16
+        horizon_s, n_trials, gate_pct = 0.4, 3, 10.0
+    else:
+        n_replicas, n_oracle, max_batch = 4, 512, 16
+        horizon_s, n_trials, gate_pct = 1.0, 5, 3.0
+
+    oracle_qps = measure_oracle_qps(
+        n_oracle, max_batch, n_replicas=n_replicas, algo=algo, seed=seed
+    )
+    rate = 0.75 * oracle_qps      # knee region: loaded but not shedding
+    print_fn(f"obs_overhead,oracle qps={oracle_qps:.0f} rate={rate:.0f}rps")
+
+    policy = BatchingPolicy(
+        max_batch=max_batch, max_wait_ms=2.0, slack_ms=0.0,
+        queue_limit=4096, pad_batches=True,
+    )
+    base_trials, instr_trials = [], []
+    last_instr_obs = None
+    # interleave A/B so clock drift and thermal state cancel
+    for t in range(n_trials):
+        for instrumented in (False, True):
+            trial = run_trial(
+                rate, policy, n_replicas=n_replicas, algo=algo,
+                horizon_s=horizon_s, seed=seed + t, instrumented=instrumented,
+            )
+            obs = trial.pop("obs")
+            if instrumented:
+                instr_trials.append(trial)
+                last_instr_obs = obs
+            else:
+                base_trials.append(trial)
+        print_fn(
+            f"obs_overhead,trial {t},base p99={base_trials[-1]['p99_ms']:.2f}ms "
+            f"instr p99={instr_trials[-1]['p99_ms']:.2f}ms"
+        )
+
+    base = _summarize(base_trials)
+    instr = _summarize(instr_trials)
+    overhead_pct = 100.0 * (instr["p99_ms"] / max(base["p99_ms"], 1e-9) - 1.0)
+    results = {
+        "algo": algo,
+        "n_replicas": n_replicas,
+        "max_batch": max_batch,
+        "rate_rps": rate,
+        "horizon_s": horizon_s,
+        "n_trials": n_trials,
+        "gate_pct": gate_pct,
+        "baseline": base,
+        "instrumented": instr,
+        "overhead_pct": overhead_pct,
+    }
+    print_fn(
+        f"obs_overhead,base p99={base['p99_ms']:.2f}ms "
+        f"instr p99={instr['p99_ms']:.2f}ms overhead={overhead_pct:+.2f}% "
+        f"(gate {gate_pct:.0f}%)"
+    )
+    if trace_path and last_instr_obs is not None:
+        last_instr_obs.tracer.write(trace_path)
+        print_fn(f"obs_overhead,wrote trace {trace_path} "
+                 f"({len(last_instr_obs.tracer.events)} events)")
+    return results
+
+
+if __name__ == "__main__":
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--smoke", action="store_true",
+                        help="short horizon / fewer trials for CI")
+    parser.add_argument("--json", metavar="PATH", default=None)
+    parser.add_argument("--baseline", metavar="PATH", default=None,
+                        help="committed BENCH_obs_overhead.json to gate "
+                             "regressions against")
+    parser.add_argument("--trace", metavar="PATH", default=None,
+                        help="write the last instrumented trial's Chrome "
+                             "trace to PATH")
+    args = parser.parse_args()
+    res = main(smoke=args.smoke, trace_path=args.trace)
+    if args.json:
+        try:
+            from benchmarks.common import write_artifact
+        except ImportError:            # run as a bare script
+            from common import write_artifact
+        write_artifact(args.json, res, schema="obs-overhead")
+
+    # acceptance gate: instrumentation must not move the knee tail
+    assert res["overhead_pct"] <= res["gate_pct"], (
+        f"instrumented knee p99 {res['instrumented']['p99_ms']:.2f}ms is "
+        f"{res['overhead_pct']:.2f}% over baseline "
+        f"{res['baseline']['p99_ms']:.2f}ms (gate {res['gate_pct']:.0f}%)"
+    )
+    # tracing must actually have traced
+    assert res["instrumented"]["n_trace_events"] > 0, "no trace events"
+
+    if args.baseline:
+        committed = json.loads(open(args.baseline).read())
+        # a noise-negative committed overhead must not tighten the gate
+        drift = res["overhead_pct"] - max(committed["overhead_pct"], 0.0)
+        print(
+            f"obs_overhead,baseline overhead={committed['overhead_pct']:+.2f}% "
+            f"drift={drift:+.2f}pp (gate {REGRESSION_PCT_POINTS:.0f}pp)"
+        )
+        assert drift <= REGRESSION_PCT_POINTS, (
+            f"observability overhead regressed {drift:.2f} percentage points "
+            f"over the committed baseline (gate {REGRESSION_PCT_POINTS:.0f})"
+        )

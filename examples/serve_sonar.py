@@ -5,6 +5,11 @@ batching, prefill + KV-cache decode); the gateway routes each request by
 fused capability-BM25 x network-QoS, under a hybrid network scenario where
 one replica is mostly down and another has 350 ms latency.
 
+Per-request lines go through the launcher's structured logging (pass
+``--quiet`` to keep only the machine-readable ``gateway report:`` line);
+the metrics-registry snapshot is written next to the run so the counters
+behind the report are inspectable (docs/observability.md).
+
 Run:  PYTHONPATH=src python examples/serve_sonar.py
 """
 import sys
@@ -12,5 +17,8 @@ import sys
 from repro.launch.serve import main
 
 if __name__ == "__main__":
-    sys.argv = [sys.argv[0], "--n-requests", "16", "--scenario", "hybrid"]
+    sys.argv = [
+        sys.argv[0], "--n-requests", "16", "--scenario", "hybrid",
+        "--metrics-json", "serve-sonar-metrics.json",
+    ]
     main()

@@ -63,6 +63,7 @@ from repro.core.routing import (
 )
 from repro.kernels import ops
 from repro.kernels import ref as kref
+from repro.obs import trace as obs_trace
 
 NEG = kref.NEG
 
@@ -432,6 +433,8 @@ class BatchRoutingEngine:
         client_rtt_ms: Optional[np.ndarray] = None,
         client_region: Optional[np.ndarray] = None,
         region_rtt_ms: Optional[np.ndarray] = None,
+        route_stats=None,
+        n_real=None,
     ) -> BatchDecisions:
         """Route an encoded batch through the jit pipeline.
 
@@ -468,6 +471,13 @@ class BatchRoutingEngine:
         region_rtt_ms : np.ndarray, optional
             f32 [n_regions, n_servers] region->server propagation RTT
             matrix (e.g. `repro.geo.GeoPlacement.region_server_rtt`).
+        route_stats : repro.obs.DeviceRouteStats, optional
+            Jit-safe observability accumulator: the pipeline's *device*
+            outputs are folded into it by a donated jit `.at[].add`
+            before any host conversion — one extra async dispatch, zero
+            added syncs.  ``n_real`` (dynamic scalar) excludes trailing
+            padded rows (the gateway's ``pad_to`` path) from the stats
+            without specializing the compiled program per real count.
 
         Returns
         -------
@@ -501,41 +511,45 @@ class BatchRoutingEngine:
             elif client_region is not None and region_rtt_ms is not None:
                 reg_idx = jnp.asarray(client_region, jnp.int32)
                 reg_rtt = jnp.asarray(region_rtt_ms, jnp.float32)
-        server_idx, tool_idx, c, n, s = _route_pipeline(
-            jnp.asarray(batch.q_server),
-            jnp.asarray(batch.q_tool),
-            jnp.asarray(batch.q_rerank) if batch.q_rerank is not None else None,
-            self._w_server,
-            self._w_tool,
-            self._tool_server,
-            lat,
-            load,
-            age,
-            dead,
-            rtt,
-            reg_idx,
-            reg_rtt,
-            top_s=self.cfg.top_s,
-            top_k=self.cfg.top_k,
-            alpha=self.cfg.alpha,
-            beta=self.cfg.beta,
-            gamma=self.cfg.gamma,
-            load_knee=self.cfg.load_knee,
-            load_sharp=self.cfg.load_sharp,
-            delta=self.cfg.delta,
-            rtt_scale=self.cfg.rtt_scale_ms,
-            temp=self.cfg.expertise_temp,
-            stale_half_life=self.cfg.stale_half_life_s,
-            use_network=self.uses_network and lat is not None,
-            use_load=load is not None,
-            use_staleness=age is not None,
-            use_failover=dead is not None,
-            use_rtt=rtt is not None or reg_idx is not None,
-            rerank=self.rerank,
-            use_kernels=self.use_kernels,
-            qos_params=self.cfg.qos,
-            interpret=self.interpret,
-        )
+        with obs_trace.annotate("netmcp.route_pipeline"):
+            server_idx, tool_idx, c, n, s = _route_pipeline(
+                jnp.asarray(batch.q_server),
+                jnp.asarray(batch.q_tool),
+                jnp.asarray(batch.q_rerank)
+                if batch.q_rerank is not None else None,
+                self._w_server,
+                self._w_tool,
+                self._tool_server,
+                lat,
+                load,
+                age,
+                dead,
+                rtt,
+                reg_idx,
+                reg_rtt,
+                top_s=self.cfg.top_s,
+                top_k=self.cfg.top_k,
+                alpha=self.cfg.alpha,
+                beta=self.cfg.beta,
+                gamma=self.cfg.gamma,
+                load_knee=self.cfg.load_knee,
+                load_sharp=self.cfg.load_sharp,
+                delta=self.cfg.delta,
+                rtt_scale=self.cfg.rtt_scale_ms,
+                temp=self.cfg.expertise_temp,
+                stale_half_life=self.cfg.stale_half_life_s,
+                use_network=self.uses_network and lat is not None,
+                use_load=load is not None,
+                use_staleness=age is not None,
+                use_failover=dead is not None,
+                use_rtt=rtt is not None or reg_idx is not None,
+                rerank=self.rerank,
+                use_kernels=self.use_kernels,
+                qos_params=self.cfg.qos,
+                interpret=self.interpret,
+            )
+        if route_stats is not None:
+            route_stats.accumulate(server_idx, c, n, s, n_real=n_real)
         return BatchDecisions(
             server_idx=np.asarray(server_idx),
             tool_idx=np.asarray(tool_idx),

@@ -70,6 +70,7 @@ from jax.sharding import Mesh
 
 from repro.core import bm25
 from repro.core.batch_routing import BatchDecisions, EncodedBatch, encode_for_index
+from repro.obs import trace as obs_trace
 from repro.core.dataset import Server
 from repro.core.qos import (
     QosParams,
@@ -801,6 +802,8 @@ class ShardedRoutingEngine:
         region_rtt_ms: Optional[np.ndarray] = None,
         *,
         telemetry_templates: Optional[tuple] = None,
+        route_stats=None,
+        n_real=None,
     ) -> BatchDecisions:
         """Route an encoded batch across the sharded fleet.
 
@@ -873,9 +876,14 @@ class ShardedRoutingEngine:
             dyn["dead"] = self._shard_vec(
                 np.asarray(failed_mask, np.float32)
             )
-        server_idx, tool_idx, c, n, s = _route_sharded(
-            dyn, mesh=self.mesh, sc=self._sc
-        )
+        with obs_trace.annotate("netmcp.route_sharded"):
+            server_idx, tool_idx, c, n, s = _route_sharded(
+                dyn, mesh=self.mesh, sc=self._sc
+            )
+        if route_stats is not None:
+            # fold this call's device outputs into the jit-safe stats
+            # buffer (donated .at[].add) before any host conversion
+            route_stats.accumulate(server_idx, c, n, s, n_real=n_real)
         return BatchDecisions(
             server_idx=np.asarray(server_idx, np.int32),
             tool_idx=np.asarray(tool_idx, np.int32),

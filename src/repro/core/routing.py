@@ -263,6 +263,7 @@ class Router:
         telemetry_age_s: Optional[np.ndarray] = None,
         failed_mask: Optional[np.ndarray] = None,
         client_rtt_ms: Optional[np.ndarray] = None,
+        audit=None,
     ) -> Decision:
         """Route one query (Algorithm 1): two-stage retrieval, Eq. 5
         softmax expertise, QoS/load/staleness/locality fusion, argmax.
@@ -293,6 +294,12 @@ class Router:
             client's region to each server (one row of the region->server
             RTT matrix).  SONAR-GEO only; None, delta=0 or all-zero RTTs
             reduce byte-identically to SONAR-LB.
+        audit : repro.obs.audit.AuditTap, optional
+            Score-decomposition tap: after the argmax the tap receives
+            the exact candidate component arrays that were fused
+            (C, post-staleness N, U, R, dead mask, S), so the decision
+            can be recomposed term-by-term bit-exactly ("why this
+            server").  ``None`` (default) costs one identity check.
 
         Returns
         -------
@@ -319,7 +326,8 @@ class Router:
 
         C = self._expertise(scores)
 
-        if self.uses_network and latency_hist is not None:
+        network_used = self.uses_network and latency_hist is not None
+        if network_used:
             hist = latency_hist[cand_hosts]
             N = np.asarray(network_score(hist, self.cfg.qos))
             if self.uses_staleness and telemetry_age_s is not None:
@@ -332,6 +340,7 @@ class Router:
             N = np.zeros_like(C)
             S = C
 
+        U = None
         if self.uses_load and server_load is not None and self.cfg.gamma != 0.0:
             rho = np.asarray(server_load, np.float32)
             rho = rho[cand_hosts]
@@ -340,11 +349,13 @@ class Router:
             )
             S = S - self.cfg.gamma * U
 
+        R = None
         if self.uses_rtt and client_rtt_ms is not None and self.cfg.delta != 0.0:
             rtt = np.asarray(client_rtt_ms, np.float32)[cand_hosts]
             R = np.asarray(rtt_penalty(rtt, self.cfg.rtt_scale_ms))
             S = S - self.cfg.delta * R
 
+        dead = None
         if self.uses_failover and failed_mask is not None:
             # known-failed servers are removed from the argmax but keep
             # their softmax mass, so surviving candidates score identically
@@ -354,7 +365,7 @@ class Router:
 
         best = int(np.argmax(S))
         tool_idx = int(cand_tools[best])
-        return Decision(
+        decision = Decision(
             server_idx=int(self.index.tool_server[tool_idx]),
             tool_idx=tool_idx,
             expertise=float(C[best]),
@@ -364,6 +375,16 @@ class Router:
             candidate_servers=[int(s) for s in cand_servers],
             candidate_tools=[int(t) for t in cand_tools],
         )
+        if audit is not None:
+            audit.record(
+                algo=self.name, query=query, cfg=self.cfg,
+                cand_servers=cand_servers, cand_tools=cand_tools,
+                cand_hosts=cand_hosts, expertise=C,
+                network=N if network_used else None,
+                load_pen=U, rtt_pen=R, dead=dead, fused=S,
+                best=best, decision=decision,
+            )
+        return decision
 
     def select_failover(
         self,
@@ -375,12 +396,15 @@ class Router:
         failed_mask: Optional[np.ndarray] = None,
         budget: Optional[int] = None,
         client_rtt_ms: Optional[np.ndarray] = None,
+        audit=None,
     ) -> tuple[Decision, int]:
         """Failover loop (SONAR-FT): route, probe the pick against `alive`,
         and on a dead pick re-route with that server masked out — at most
         `budget` (default cfg.failover_budget) extra routes.  Returns the
         final decision and the number of failovers taken.  With every
-        server alive this is exactly one `select` call."""
+        server alive this is exactly one `select` call.  An ``audit`` tap
+        records every hop, so a failover chain reads as consecutive
+        audit records."""
         budget = self.cfg.failover_budget if budget is None else int(budget)
         n_servers = len(self.index.servers)
         mask = (
@@ -396,6 +420,7 @@ class Router:
                 telemetry_age_s=telemetry_age_s,
                 failed_mask=mask if mask.any() else None,
                 client_rtt_ms=client_rtt_ms,
+                audit=audit,
             )
             if up is None or up[d.server_idx] or failovers >= budget:
                 return d, failovers

@@ -16,20 +16,28 @@ Two modes:
     The online serving front-end (docs/serving.md): requests arrive
     individually from a named arrival process, the asyncio
     `AsyncServingGateway` coalesces them into deadline-aware
-    micro-batches, and every flush runs the jit batch hot path.  Prints
-    per-flush routing plus the latency/shedding summary.
+    micro-batches, and every flush runs the jit batch hot path.
+
+Observability (docs/observability.md): per-request lines go through
+structured logging (suppress with ``--quiet``; the final machine-readable
+summary line always prints), ``--metrics-json PATH`` writes the full
+`MetricsRegistry` snapshot, ``--trace PATH`` writes a Perfetto-loadable
+Chrome trace of every request's lifecycle spans, and ``--dashboard``
+repaints a live text panel while the online run progresses.
 
 Usage:
   PYTHONPATH=src python -m repro.launch.serve --arch internlm2-1.8b \
       --n-replicas 4 --n-requests 24 --scenario hybrid
   PYTHONPATH=src python -m repro.launch.serve --mode online \
       --algo sonar_lb --arrivals flash_crowd --rate 300 --horizon-s 1.0 \
-      --max-batch 16 --max-wait-ms 5 --deadline-ms 100
+      --max-batch 16 --max-wait-ms 5 --deadline-ms 100 \
+      --trace serve-trace.json --metrics-json serve-metrics.json
 """
 from __future__ import annotations
 
 import argparse
 import asyncio
+import logging
 import time
 
 import jax
@@ -38,11 +46,48 @@ import numpy as np
 from repro import configs
 from repro.core import latency as latlib
 from repro.models.api import get_model
+from repro.obs import LiveDashboard, Observability
 from repro.serving.engine import Request, ServeEngine
 from repro.serving.frontend import AsyncServingGateway
 from repro.serving.gateway import SonarGateway, replica_pool
 from repro.serving.microbatch import BatchingPolicy
 from repro.traffic.source import request_schedule
+
+log = logging.getLogger("repro.serve")
+
+
+def _setup_logging(quiet: bool) -> None:
+    logging.basicConfig(
+        level=logging.WARNING if quiet else logging.INFO,
+        format="%(message)s",
+    )
+
+
+def _build_obs(args) -> Observability:
+    """One bundle for the whole stack: tracing only when a trace path is
+    requested (spans cost allocations), device route stats whenever the
+    jit batch path runs (accumulation is async, fold happens at exit)."""
+    return Observability(
+        trace=bool(args.trace), jit_stats=(args.mode == "online")
+    )
+
+
+def _emit_artifacts(args, obs: Observability, summary: dict) -> None:
+    """Write the --trace / --metrics-json artifacts, if requested."""
+    if args.trace:
+        obs.tracer.write(args.trace)
+        log.info("wrote trace: %s (%d events)", args.trace,
+                 len(obs.tracer.events))
+    if args.metrics_json:
+        extra = {"summary": summary}
+        stats = obs.fold_route_stats()
+        if stats is not None:
+            extra["route_stats"] = {
+                k: (v.tolist() if hasattr(v, "tolist") else v)
+                for k, v in stats.items()
+            }
+        obs.registry.to_json(args.metrics_json, extra=extra)
+        log.info("wrote metrics: %s", args.metrics_json)
 
 
 def scenario_profiles(name: str, n: int):
@@ -80,11 +125,12 @@ def serve_online(args) -> dict:
     ``--time-scale``; >1 slows the replay down).  Returns the summary
     dict that is also printed.
     """
+    obs = _build_obs(args)
     replicas = replica_pool([("yi-6b", "dense")] * args.n_replicas)
     profiles = scenario_profiles(args.scenario, args.n_replicas)
     gw = SonarGateway(
         replicas, profiles=profiles, algo=args.algo, seed=args.seed,
-        use_kernels=True, device_telemetry=True,
+        use_kernels=True, device_telemetry=True, obs=obs,
     )
     policy = BatchingPolicy(
         max_batch=args.max_batch, max_wait_ms=args.max_wait_ms,
@@ -92,12 +138,19 @@ def serve_online(args) -> dict:
         pad_batches=True,
     )
     gw.route_batch(QUERIES * args.max_batch, pad_to=args.max_batch)  # warm jit
+    obs.fold_route_stats(reset=True)   # drop the warm-up picks
     schedule = request_schedule(
         args.arrivals, jax.random.PRNGKey(args.seed), args.rate,
         args.horizon_s, QUERIES,
     )
     if args.n_requests > 0:
         schedule = schedule[: args.n_requests]
+
+    dash = (
+        LiveDashboard(obs.registry, route_stats_fn=obs.fold_route_stats,
+                      title=f"netmcp online ({args.algo})")
+        if args.dashboard else None
+    )
 
     async def run():
         srv = AsyncServingGateway(gw, policy)
@@ -108,13 +161,18 @@ def serve_online(args) -> dict:
             wait_s = (t0 + req.t_ms * args.time_scale - srv.now_ms()) / 1000.0
             if wait_s > 0:
                 await asyncio.sleep(wait_s)
-            return await srv.submit(req.text, deadline_ms=args.deadline_ms)
+            res = await srv.submit(req.text, deadline_ms=args.deadline_ms)
+            if dash is not None:
+                dash.update()
+            return res
 
         results = await asyncio.gather(*[one(r) for r in schedule])
         await srv.close(drain=True)
         return results, srv
 
     results, srv = asyncio.run(run())
+    if dash is not None:
+        dash.update(force=True)
     routed = [r for r in results if not r.shed and not r.expired]
     lat = np.asarray([r.serve_ms for r in routed], np.float64)
     summary = {
@@ -128,10 +186,16 @@ def serve_online(args) -> dict:
     }
     for r in results[: min(len(results), 12)]:
         state = "shed" if r.shed else ("expired" if r.expired else "routed")
-        print(
-            f"req {r.rid:3d} -> replica {r.replica_idx:2d} [{state}] "
-            f"wait={r.wait_ms:6.1f}ms batch={r.batch_size}"
+        log.info(
+            "req %3d -> replica %2d [%s] wait=%6.1fms batch=%d",
+            r.rid, r.replica_idx, state, r.wait_ms, r.batch_size,
         )
+    # registry cross-check: the batcher/front-end counters are the same
+    # events the result list tallies — one source of truth
+    reg = obs.registry
+    summary["registry_routed"] = int(reg.value("serving_routed_total"))
+    summary["gateway_p99_ms"] = round(reg.get("gateway_latency_ms").p99, 2)
+    _emit_artifacts(args, obs, summary)
     print("online serving summary:", summary)
     return summary
 
@@ -160,7 +224,17 @@ def main():
     ap.add_argument("--queue-limit", type=int, default=256)
     ap.add_argument("--time-scale", type=float, default=1.0,
                     help="wall-clock seconds per virtual second (>1 = slower)")
+    # observability (docs/observability.md)
+    ap.add_argument("--quiet", action="store_true",
+                    help="suppress per-request lines (summary still prints)")
+    ap.add_argument("--metrics-json", type=str, default=None,
+                    help="write the metrics-registry snapshot to PATH")
+    ap.add_argument("--trace", type=str, default=None,
+                    help="write a Chrome trace (Perfetto-loadable) to PATH")
+    ap.add_argument("--dashboard", action="store_true",
+                    help="live text dashboard during --mode online")
     args = ap.parse_args()
+    _setup_logging(args.quiet)
 
     if args.mode == "online":
         serve_online(args)
@@ -169,10 +243,11 @@ def main():
     cfg = configs.get_reduced(args.arch)
     model = get_model(cfg)
     params, _ = model.init_params(jax.random.PRNGKey(args.seed))
+    obs = _build_obs(args)
 
     # one engine per replica (same weights; independent network profiles)
     engines = [
-        ServeEngine(model, params, n_slots=args.n_slots, cap=256)
+        ServeEngine(model, params, n_slots=args.n_slots, cap=256, obs=obs)
         for _ in range(args.n_replicas)
     ]
     replicas = replica_pool([(cfg.name, "dense")] * args.n_replicas)
@@ -193,16 +268,20 @@ def main():
         return net_ms + 0.0 * compute_ms  # network latency dominates routing
 
     gateway = SonarGateway(
-        replicas, profiles=profiles, seed=args.seed, executor=executor
+        replicas, profiles=profiles, seed=args.seed, executor=executor,
+        obs=obs,
     )
 
     for i in range(args.n_requests):
         res = gateway.route(QUERIES[i % len(QUERIES)])
-        print(
-            f"req {i:3d} -> replica {res.replica_idx} "
-            f"lat={res.latency_ms:7.1f}ms ok={res.ok} C={res.expertise:.2f} N={res.network:.2f}"
+        log.info(
+            "req %3d -> replica %d lat=%7.1fms ok=%s C=%.2f N=%.2f",
+            i, res.replica_idx, res.latency_ms, res.ok,
+            res.expertise, res.network,
         )
-    print("gateway report:", gateway.report())
+    report = gateway.report()
+    _emit_artifacts(args, obs, report)
+    print("gateway report:", report)
 
 
 if __name__ == "__main__":

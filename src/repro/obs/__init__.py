@@ -1,0 +1,123 @@
+"""End-to-end routing observability (tracing, metrics, score audits).
+
+The serving stack accepts one `Observability` bundle and threads it
+through every layer:
+
+  * `SpanTracer` (`repro.obs.trace`) — request-lifecycle spans with
+    Chrome trace-event export (Perfetto-loadable) and `jax.profiler`
+    annotation hooks around the jit/Pallas hot paths.
+  * `MetricsRegistry` (`repro.obs.metrics`) — counters / gauges /
+    log-bucket histograms; the single source of truth for gateway,
+    micro-batcher, front-end, engine, and simulator counts.
+  * `DeviceRouteStats` (`repro.obs.metrics`) — jit-safe device-side
+    accumulation of routing picks/scores, folded to host only at flush
+    boundaries.
+  * `AuditTap` (`repro.obs.audit`) — α/β/γ/δ score decomposition of
+    every winning server ("why this server"), bit-exact by
+    construction.
+
+The default bundle (`Observability()`) keeps everything off except the
+host metrics registry, whose per-event cost is a few dict-free float
+adds — `benchmarks/obs_overhead.py` gates the fully-instrumented knee
+p99 within 3% of this baseline.
+"""
+from __future__ import annotations
+
+from typing import Callable, Optional
+
+from repro.obs.audit import AuditTap, ScoreAudit
+from repro.obs.dashboard import LiveDashboard, render_dashboard
+from repro.obs.metrics import (
+    Counter,
+    DeviceRouteStats,
+    Gauge,
+    Histogram,
+    MetricsRegistry,
+)
+from repro.obs.trace import (
+    NULL_TRACER,
+    SpanTracer,
+    annotate,
+    emit_chaos_events,
+    emit_flush_spans,
+    emit_request_spans,
+    enable_jax_annotations,
+)
+
+__all__ = [
+    "AuditTap",
+    "Counter",
+    "DeviceRouteStats",
+    "Gauge",
+    "Histogram",
+    "LiveDashboard",
+    "MetricsRegistry",
+    "NULL_TRACER",
+    "Observability",
+    "ScoreAudit",
+    "SpanTracer",
+    "annotate",
+    "emit_chaos_events",
+    "emit_flush_spans",
+    "emit_request_spans",
+    "enable_jax_annotations",
+    "render_dashboard",
+]
+
+
+class Observability:
+    """One bundle the serving stack threads end to end.
+
+    Parameters
+    ----------
+    trace : bool
+        Record lifecycle spans (`tracer` is a `NULL_TRACER`-style
+        disabled instance otherwise; call sites cost one boolean check).
+    jit_stats : bool
+        Thread `DeviceRouteStats` through the routing engines (device
+        accumulation, host fold at flush boundaries).
+    audit : bool
+        Attach an `AuditTap` to scalar routing decisions.
+    registry : MetricsRegistry, optional
+        Share an existing registry (all layers of one serving stack
+        should see the same one); default creates a fresh one.
+    clock_ms : callable, optional
+        Timeline for the tracer (virtual/sim clocks); default wall.
+    """
+
+    def __init__(
+        self,
+        trace: bool = False,
+        jit_stats: bool = False,
+        audit: bool = False,
+        registry: Optional[MetricsRegistry] = None,
+        clock_ms: Optional[Callable[[], float]] = None,
+        max_trace_events: int = 200_000,
+    ):
+        self.registry = registry if registry is not None else MetricsRegistry()
+        self.tracer = SpanTracer(
+            enabled=trace, clock_ms=clock_ms, max_events=max_trace_events
+        )
+        self.jit_stats = bool(jit_stats)
+        self.audit_tap: Optional[AuditTap] = AuditTap() if audit else None
+        # per-fleet DeviceRouteStats, created by the gateway on demand
+        self.route_stats: Optional[DeviceRouteStats] = None
+
+    def ensure_route_stats(self, n_servers: int) -> Optional[DeviceRouteStats]:
+        """The gateway's device-side accumulator (one per fleet size)."""
+        if not self.jit_stats:
+            return None
+        if self.route_stats is None or self.route_stats.n_servers != n_servers:
+            self.route_stats = DeviceRouteStats(n_servers)
+        return self.route_stats
+
+    def drain_route_stats(self) -> None:
+        """Dispatch pending device-stat updates; the serving drivers call
+        this at flush boundaries, outside their latency-timed windows."""
+        if self.route_stats is not None:
+            self.route_stats.drain()
+
+    def fold_route_stats(self, reset: bool = False) -> Optional[dict]:
+        if self.route_stats is None:
+            return None
+        return self.route_stats.fold(reset=reset)

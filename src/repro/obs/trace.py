@@ -1,0 +1,354 @@
+"""Span-based request tracing with Chrome trace-event export.
+
+One `SpanTracer` records the full lifecycle of every request through the
+serving stack — admission, queue wait, encode, device dispatch, merge,
+failover hops, completion — as *complete* ("X") trace events on a single
+timeline, plus instant ("i") events for discrete occurrences (sheds,
+expiries, chaos fault injections) and counter ("C") events for live
+series.  `to_chrome_trace()` emits the Trace Event Format JSON that
+Perfetto / chrome://tracing load directly.
+
+Design rules (the observability layer must cost ~nothing when off):
+
+  * A disabled tracer's `span()` returns a cached no-op context manager
+    and every `add_*` call is a single attribute check — no allocation,
+    no clock read.  `NULL_TRACER` is the shared disabled singleton.
+  * The event buffer is bounded (`max_events`); past the cap new events
+    are dropped and counted (`n_dropped`), never silently lost — the
+    export records the drop count in metadata.
+  * Timestamps are **milliseconds** on the *caller's* clock: the
+    virtual-time pump passes its virtual clock, the asyncio front-end
+    its wall clock, the discrete-event simulator its sim clock.  Export
+    converts to the microseconds Chrome expects.
+
+`annotate(name)` is the `jax.profiler` hook: when profiler annotations
+are enabled (see `enable_jax_annotations`), the jit/Pallas hot paths run
+inside a `jax.profiler.TraceAnnotation`, so an `xprof`/TensorBoard
+profile shows routing phases by name.  Disabled, it is one module-level
+boolean check.
+"""
+from __future__ import annotations
+
+import contextlib
+import json
+import time
+from typing import Callable, Optional, Sequence
+
+__all__ = [
+    "NULL_TRACER",
+    "SpanTracer",
+    "annotate",
+    "emit_chaos_events",
+    "emit_flush_spans",
+    "emit_request_spans",
+    "enable_jax_annotations",
+    "jax_annotations_enabled",
+]
+
+
+def _wall_ms() -> float:
+    return 1000.0 * time.perf_counter()
+
+
+class _NoopSpan:
+    """Reusable no-op context manager for disabled tracers."""
+
+    __slots__ = ()
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        return False
+
+
+_NOOP_SPAN = _NoopSpan()
+
+
+class _LiveSpan:
+    """Context manager that records one X event on exit."""
+
+    __slots__ = ("tracer", "name", "cat", "tid", "args", "t0")
+
+    def __init__(self, tracer, name, cat, tid, args):
+        self.tracer = tracer
+        self.name = name
+        self.cat = cat
+        self.tid = tid
+        self.args = args
+        self.t0 = 0.0
+
+    def __enter__(self):
+        self.t0 = self.tracer.clock_ms()
+        return self
+
+    def __exit__(self, *exc):
+        self.tracer.add_span(
+            self.name, self.t0, self.tracer.clock_ms(),
+            cat=self.cat, tid=self.tid, args=self.args,
+        )
+        return False
+
+
+class SpanTracer:
+    """Bounded in-memory trace-event recorder (ms timestamps).
+
+    Parameters
+    ----------
+    enabled : bool
+        A disabled tracer records nothing and costs one attribute check
+        per call site.
+    clock_ms : callable, optional
+        ``() -> float`` returning the current time in **ms**.  Default is
+        a wall clock (`time.perf_counter`); drivers with their own
+        timeline (virtual-time pump, discrete-event simulator) pass
+        theirs so every span lands on one consistent axis.
+    pid : str
+        Process name grouping the events in the Perfetto UI.
+    max_events : int
+        Event-buffer bound; events past it are dropped and counted.
+    """
+
+    def __init__(
+        self,
+        enabled: bool = True,
+        clock_ms: Optional[Callable[[], float]] = None,
+        pid: str = "netmcp",
+        max_events: int = 200_000,
+    ):
+        self.enabled = enabled
+        self.clock_ms = clock_ms if clock_ms is not None else _wall_ms
+        self.pid = pid
+        self.max_events = int(max_events)
+        self.events: list = []
+        self.n_dropped = 0
+
+    # -- recording -----------------------------------------------------------
+    def _push(self, ev: dict) -> None:
+        if len(self.events) >= self.max_events:
+            self.n_dropped += 1
+            return
+        self.events.append(ev)
+
+    def span(self, name: str, cat: str = "serving", tid=0,
+             args: Optional[dict] = None):
+        """Context manager timing a block on this tracer's clock."""
+        if not self.enabled:
+            return _NOOP_SPAN
+        return _LiveSpan(self, name, cat, tid, args)
+
+    def add_span(self, name: str, t0_ms: float, t1_ms: float, *,
+                 cat: str = "serving", tid=0, pid: Optional[str] = None,
+                 args: Optional[dict] = None) -> None:
+        """Record one complete span with explicit [t0, t1] timestamps."""
+        if not self.enabled:
+            return
+        ev = {
+            "name": name, "cat": cat, "ph": "X",
+            "ts": 1000.0 * t0_ms, "dur": 1000.0 * max(t1_ms - t0_ms, 0.0),
+            "pid": pid or self.pid, "tid": tid,
+        }
+        if args:
+            ev["args"] = args
+        self._push(ev)
+
+    def instant(self, name: str, t_ms: Optional[float] = None, *,
+                cat: str = "event", tid=0, pid: Optional[str] = None,
+                args: Optional[dict] = None) -> None:
+        """Record an instant event (sheds, expiries, fault injections)."""
+        if not self.enabled:
+            return
+        ev = {
+            "name": name, "cat": cat, "ph": "i", "s": "t",
+            "ts": 1000.0 * (self.clock_ms() if t_ms is None else t_ms),
+            "pid": pid or self.pid, "tid": tid,
+        }
+        if args:
+            ev["args"] = args
+        self._push(ev)
+
+    def counter(self, name: str, values: dict,
+                t_ms: Optional[float] = None, *, tid=0) -> None:
+        """Record a counter sample (rendered as a stacked series)."""
+        if not self.enabled:
+            return
+        self._push({
+            "name": name, "ph": "C",
+            "ts": 1000.0 * (self.clock_ms() if t_ms is None else t_ms),
+            "pid": self.pid, "tid": tid, "args": dict(values),
+        })
+
+    # -- export --------------------------------------------------------------
+    def to_chrome_trace(self) -> dict:
+        """Trace Event Format payload (Perfetto / chrome://tracing)."""
+        meta = [{
+            "name": "process_name", "ph": "M", "pid": self.pid, "tid": 0,
+            "args": {"name": self.pid},
+        }]
+        payload = {
+            "traceEvents": meta + list(self.events),
+            "displayTimeUnit": "ms",
+            "otherData": {
+                "n_events": len(self.events),
+                "n_dropped": self.n_dropped,
+            },
+        }
+        return payload
+
+    def write(self, path: str) -> None:
+        with open(path, "w") as f:
+            json.dump(self.to_chrome_trace(), f)
+
+    def clear(self) -> None:
+        self.events = []
+        self.n_dropped = 0
+
+
+NULL_TRACER = SpanTracer(enabled=False)
+
+
+# ---------------------------------------------------------------------------
+# jax.profiler annotation hook (the jit/Pallas hot-path marker)
+# ---------------------------------------------------------------------------
+
+_JAX_ANNOTATIONS = False
+
+
+def enable_jax_annotations(on: bool = True) -> None:
+    """Toggle `jax.profiler.TraceAnnotation` wrapping of the routing hot
+    paths (`BatchRoutingEngine.route`, `ShardedRoutingEngine.route`, the
+    telemetry-ring push).  Off (the default), `annotate` is a single
+    boolean check; on, an `xprof` profile captured around serving shows
+    the device work attributed to named routing phases."""
+    global _JAX_ANNOTATIONS
+    _JAX_ANNOTATIONS = bool(on)
+
+
+def jax_annotations_enabled() -> bool:
+    return _JAX_ANNOTATIONS
+
+
+@contextlib.contextmanager
+def annotate(name: str):
+    """Wrap a jit dispatch in a profiler annotation when enabled."""
+    if _JAX_ANNOTATIONS:
+        import jax
+
+        with jax.profiler.TraceAnnotation(name):
+            yield
+    else:
+        yield
+
+
+# ---------------------------------------------------------------------------
+# Structured emission helpers shared by the serving drivers
+# ---------------------------------------------------------------------------
+
+def emit_flush_spans(
+    tracer: SpanTracer,
+    t0_ms: float,
+    t1_ms: float,
+    phases: Sequence[tuple],
+    rids: Sequence[int],
+    *,
+    tid=0,
+    flush_idx: Optional[int] = None,
+) -> None:
+    """Emit one flush's span tree: a parent ``flush`` span over
+    [t0, t1] and child phase spans (encode / dispatch / merge) that
+    **tile the interval exactly** — phase durations (measured wall ms
+    inside `SonarGateway.route_batch`) are rescaled so their sum equals
+    the caller-observed flush duration, and the last phase absorbs the
+    rounding remainder.  Tiling is what lets tests assert that
+    per-request span sums reproduce the measured end-to-end latency.
+    """
+    if not tracer.enabled:
+        return
+    args = {"rids": list(rids), "batch": len(rids)}
+    if flush_idx is not None:
+        args["flush"] = flush_idx
+    tracer.add_span("flush", t0_ms, t1_ms, cat="serving", tid=tid, args=args)
+    total = sum(max(d, 0.0) for _, d in phases)
+    span_ms = max(t1_ms - t0_ms, 0.0)
+    if total <= 0.0 or span_ms <= 0.0:
+        return
+    scale = span_ms / total
+    cur = t0_ms
+    for j, (name, dur) in enumerate(phases):
+        end = t1_ms if j == len(phases) - 1 else cur + max(dur, 0.0) * scale
+        tracer.add_span(
+            name, cur, end, cat="serving", tid=tid,
+            args=None if flush_idx is None else {"flush": flush_idx},
+        )
+        cur = end
+
+
+def emit_request_spans(
+    tracer: SpanTracer,
+    rid: int,
+    t_arrival_ms: float,
+    t_routed_ms: float,
+    t_done_ms: float,
+    *,
+    replica_idx: int = -1,
+    flush_idx: Optional[int] = None,
+) -> None:
+    """Per-request lifecycle spans on the ``requests`` track: ``serve``
+    (arrival -> completion) wrapping ``queue_wait`` (arrival -> flush
+    start).  The remainder of ``serve`` is exactly the flush interval the
+    request rode, whose phase spans `emit_flush_spans` records."""
+    if not tracer.enabled:
+        return
+    args = {"rid": rid, "replica": replica_idx}
+    if flush_idx is not None:
+        args["flush"] = flush_idx
+    tracer.add_span("serve", t_arrival_ms, t_done_ms, cat="request",
+                    pid="requests", tid=rid, args=args)
+    tracer.add_span("queue_wait", t_arrival_ms, t_routed_ms, cat="request",
+                    pid="requests", tid=rid, args={"rid": rid})
+
+
+def _mask_intervals(row) -> list:
+    """[(start_step, end_step)] maximal runs of True in a bool vector."""
+    out = []
+    start = None
+    for t, v in enumerate(row):
+        if v and start is None:
+            start = t
+        elif not v and start is not None:
+            out.append((start, t))
+            start = None
+    if start is not None:
+        out.append((start, len(row)))
+    return out
+
+
+def emit_chaos_events(tracer: SpanTracer, schedule, dt_s: float) -> None:
+    """Render a `repro.chaos.ChaosSchedule` onto the trace timeline.
+
+    Every fault injection becomes visible structure: per-server ``down``
+    spans (with an ``inject:down`` instant at onset), ``degraded`` spans
+    where the latency inflation exceeds 1, and ``telemetry-stale`` spans
+    for monitoring blackouts — all on a dedicated ``chaos`` process with
+    one track per server, aligned with the serving/request spans.
+    """
+    if not tracer.enabled or schedule is None:
+        return
+    step_ms = 1000.0 * dt_s
+
+    def spans(mask_row, name, server):
+        for s, e in _mask_intervals(mask_row):
+            tracer.add_span(
+                name, s * step_ms, e * step_ms, cat="chaos",
+                pid="chaos", tid=server, args={"server": server},
+            )
+            if name == "down":
+                tracer.instant(
+                    "inject:down", s * step_ms, cat="chaos",
+                    pid="chaos", tid=server, args={"server": server},
+                )
+
+    for i in range(schedule.n_servers):
+        spans(schedule.down[i], "down", i)
+        spans(schedule.degrade[i] > 1.0, "degraded", i)
+        spans(schedule.stale[i], "telemetry-stale", i)

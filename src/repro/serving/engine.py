@@ -18,6 +18,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models.api import Model
+from repro.obs import Observability
+from repro.obs import trace as obs_trace
 
 
 def _axes_is_leaf(x):
@@ -83,6 +85,13 @@ class ServeEngine:
         Concurrent sequences in the batched cache (the static batch dim).
     cap : int
         Cache capacity in tokens per slot (static sequence dim).
+    obs : repro.obs.Observability, optional
+        Shared observability bundle: the engine counts admissions /
+        completions / decode steps and tracks active-slot + queue-depth
+        gauges in ``obs.registry`` — the same registry the gateway
+        reports from, so execution-side counters come from the one
+        source of truth.  Spans (prefill/decode) are recorded when the
+        bundle's tracer is enabled.
 
     Notes
     -----
@@ -93,7 +102,8 @@ class ServeEngine:
     batch dimension rather than dynamic structures.
     """
 
-    def __init__(self, model: Model, params, n_slots: int, cap: int):
+    def __init__(self, model: Model, params, n_slots: int, cap: int,
+                 obs: Optional[Observability] = None):
         self.model = model
         self.params = params
         self.n_slots = n_slots
@@ -106,6 +116,14 @@ class ServeEngine:
         self._decode = jax.jit(model.decode_step)
         self._prefill = jax.jit(model.prefill)
         self.queue: list = []
+        self.obs = obs if obs is not None else Observability()
+        reg = self.obs.registry
+        self._m_admitted = reg.counter("engine_admitted_total", "req")
+        self._m_completed = reg.counter("engine_completed_total", "req")
+        self._m_steps = reg.counter("engine_steps_total", "steps")
+        self._m_tokens = reg.counter("engine_tokens_total", "tokens")
+        self._m_active = reg.gauge("engine_active_slots", "slots")
+        self._m_queue = reg.gauge("engine_queue_depth", "req")
 
     # -- request lifecycle --------------------------------------------------
     @property
@@ -120,6 +138,7 @@ class ServeEngine:
         """Enqueue one request; it is admitted to a slot by the next
         `step` with free capacity."""
         self.queue.append(req)
+        self._m_queue.set(len(self.queue))
 
     def _admit(self):
         for slot in range(self.n_slots):
@@ -128,7 +147,10 @@ class ServeEngine:
                 batch = {"tokens": jnp.asarray(req.tokens[None, :])}
                 if req.extras:
                     batch.update({k: jnp.asarray(v[None]) for k, v in req.extras.items()})
-                logits, cache1 = self._prefill(self.params, batch)
+                with self.obs.tracer.span(
+                    "prefill", cat="engine", args={"rid": req.rid}
+                ), obs_trace.annotate("netmcp.prefill"):
+                    logits, cache1 = self._prefill(self.params, batch)
                 cache1 = pad_cache_to_capacity(cache1, self.axes, self.cap)
                 self.cache = insert_slot(self.cache, self.axes, cache1, slot)
                 tok = int(np.argmax(np.asarray(logits[0, -1])))
@@ -136,6 +158,10 @@ class ServeEngine:
                 self.slot_req[slot] = req
                 self.slot_len[slot] = len(req.tokens)
                 self.last_token[slot, 0] = tok
+                self._m_admitted.inc()
+                self._m_tokens.inc()
+        self._m_queue.set(len(self.queue))
+        self._m_active.set(sum(1 for r in self.slot_req if r is not None))
 
     def _evict(self):
         for slot, req in enumerate(self.slot_req):
@@ -144,6 +170,8 @@ class ServeEngine:
             if len(req.generated) >= req.max_new_tokens or self.slot_len[slot] + 1 >= self.cap:
                 req.done = True
                 self.slot_req[slot] = None
+                self._m_completed.inc()
+        self._m_active.set(sum(1 for r in self.slot_req if r is not None))
 
     def step(self):
         """One continuous-batching engine step."""
@@ -156,15 +184,20 @@ class ServeEngine:
         # (we decode with the max active length; shorter slots' caches are
         # zero-padded which the mask excludes).
         cache_len = jnp.int32(int(self.slot_len[active].max()))
-        logits, self.cache = self._decode(
-            self.params, self.cache, jnp.asarray(self.last_token), cache_len
-        )
+        with self.obs.tracer.span(
+            "decode_step", cat="engine", args={"active": len(active)}
+        ), obs_trace.annotate("netmcp.decode_step"):
+            logits, self.cache = self._decode(
+                self.params, self.cache, jnp.asarray(self.last_token), cache_len
+            )
         toks = np.argmax(np.asarray(logits[:, -1]), axis=-1)
         for slot in active:
             req = self.slot_req[slot]
             req.generated.append(int(toks[slot]))
             self.slot_len[slot] += 1
             self.last_token[slot, 0] = int(toks[slot])
+        self._m_steps.inc()
+        self._m_tokens.inc(len(active))
         self._evict()
         return True
 

@@ -23,7 +23,12 @@ import asyncio
 import time
 from typing import Optional
 
-from repro.serving.microbatch import BatchingPolicy, MicroBatcher, ServeResult
+from repro.serving.microbatch import (
+    BatchingPolicy,
+    MicroBatcher,
+    ServeResult,
+    _emit_flush_trace,
+)
 from repro.traffic.source import LiveRequest
 
 __all__ = ["AsyncServingGateway"]
@@ -54,7 +59,15 @@ class AsyncServingGateway:
             raise ValueError("AsyncServingGateway requires use_kernels=True")
         self.gw = gateway
         self.policy = policy
-        self.batcher = MicroBatcher(policy)
+        self.obs = gateway.obs
+        self.batcher = MicroBatcher(policy, registry=self.obs.registry)
+        self._m_flushes = self.obs.registry.counter(
+            "serving_flushes_total", "flushes"
+        )
+        self._m_serve = self.obs.registry.histogram("serving_latency_ms", "ms")
+        if self.obs.tracer.enabled:
+            # wall-clock timeline: ms since this front-end started
+            self.obs.tracer.clock_ms = self.now_ms
         self._futures: dict = {}          # rid -> asyncio.Future[ServeResult]
         self._next_rid = 0
         self._wake: Optional[asyncio.Event] = None
@@ -99,6 +112,7 @@ class AsyncServingGateway:
             self._futures[rid] = fut
             self._wake.set()
         else:
+            self.obs.tracer.instant("shed", now, args={"rid": rid})
             fut.set_result(ServeResult(
                 rid=rid, shed=True, t_arrival_ms=now,
                 t_routed_ms=now, t_done_ms=now,
@@ -163,8 +177,20 @@ class AsyncServingGateway:
             )
         )
         done = self.now_ms()
+        # flush boundary: dispatch deferred device-stat updates outside
+        # the per-request latency window
+        self.obs.drain_route_stats()
+        fidx = self.n_flushes
         self.n_flushes += 1
+        self._m_flushes.inc()
+        tracer = self.obs.tracer
+        if tracer.enabled:
+            _emit_flush_trace(
+                tracer, fidx, batch, routed, now, done - now,
+                list(self.gw.last_flush_phases),
+            )
         for req, res in zip(batch, routed):
+            self._m_serve.observe(done - req.t_ms)
             fut = self._futures.pop(req.rid, None)
             if fut is not None and not fut.done():
                 fut.set_result(ServeResult(
@@ -176,6 +202,9 @@ class AsyncServingGateway:
     def _resolve_dropped(self, req, *, shed: bool,
                          now: Optional[float] = None) -> None:
         now = self.now_ms() if now is None else now
+        self.obs.tracer.instant(
+            "shed" if shed else "expired", now, args={"rid": req.rid}
+        )
         fut = self._futures.pop(req.rid, None)
         if fut is not None and not fut.done():
             fut.set_result(ServeResult(

@@ -20,6 +20,7 @@ telemetry window to a device-resident ring buffer advanced in place
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Callable, Optional, Sequence
 
 import jax
@@ -31,6 +32,7 @@ from repro.core.batch_routing import BatchRoutingEngine
 from repro.core.dataset import Server, Tool
 from repro.core.mesh_routing import ShardedRoutingEngine
 from repro.core.routing import ALGORITHMS, RoutingConfig, SonarRouter  # noqa: F401
+from repro.obs import Observability
 
 ARCH_CAPABILITIES = {
     "dense": "general purpose text generation chat completion dense transformer",
@@ -171,6 +173,14 @@ class SonarGateway:
         .region_server_rtt()`).  With a locality-aware algorithm
         (``algo="sonar_geo"``) requests routed with a ``client_region``
         pay attention to distance; other algorithms ignore it.
+    obs : repro.obs.Observability, optional
+        The observability bundle (docs/observability.md).  The gateway
+        binds its counters/gauges/histograms in ``obs.registry`` — the
+        single source of truth `report()` reads — passes ``obs.audit_tap``
+        to scalar routing decisions, and threads ``obs.route_stats`` (the
+        jit-safe device accumulator) through the batched engines.  The
+        default bundle keeps tracing/audit/device-stats off; metrics
+        registration alone is a few float adds per request.
     device_telemetry : bool, optional
         Keep the telemetry window device-resident (the donated
         `DeviceTelemetry` ring) even without ``shards``.  The ring is
@@ -200,6 +210,7 @@ class SonarGateway:
         mesh="auto",
         region_rtt_ms: Optional[np.ndarray] = None,
         device_telemetry: Optional[bool] = None,
+        obs: Optional[Observability] = None,
     ):
         self.replicas = list(replicas)
         self.algo = algo.lower().replace("-", "_")
@@ -245,6 +256,30 @@ class SonarGateway:
         )
         self.t = history
         self.stats: list = []
+        # observability: all gateway accounting lives in the registry
+        # (report() reads it back — one source of truth shared with the
+        # micro-batcher / front-end / engine layers bound to the same
+        # bundle); the device-side route stats are threaded through the
+        # batched engines when obs.jit_stats is on.
+        self.obs = obs if obs is not None else Observability()
+        reg = self.obs.registry
+        self._m_requests = reg.counter("gateway_requests_total", "req")
+        self._m_failures = reg.counter("gateway_failures_total", "req")
+        self._m_ejections = reg.counter("gateway_ejections_total", "events")
+        self._m_readmissions = reg.counter(
+            "gateway_readmissions_total", "events"
+        )
+        self._m_latency = reg.histogram("gateway_latency_ms", "ms")
+        self._m_in_flight = reg.gauge("gateway_in_flight", "req")
+        self._m_ejected = reg.gauge("gateway_ejected", "replicas")
+        self._m_phase = {
+            ph: reg.histogram(f"gateway_phase_{ph}_ms", "ms")
+            for ph in ("encode", "dispatch", "merge")
+        }
+        self._route_stats = self.obs.ensure_route_stats(n)
+        # per-flush phase durations (wall ms), for span emission by the
+        # serving drivers: [("encode", ms), ("dispatch", ms), ("merge", ms)]
+        self.last_flush_phases: list = []
 
     @property
     def telemetry(self) -> np.ndarray:
@@ -301,13 +336,35 @@ class SonarGateway:
         return mask[0] if n_requests is None else mask
 
     def _record_outcome(self, idx: int, ok: bool) -> None:
+        was_ejected = bool(self.ejected[idx])
         if ok:
             self.fail_streak[idx] = 0
             self.ejected[idx] = False           # probe succeeded: readmit
+            if was_ejected:
+                self._m_readmissions.inc()
+                self._m_ejected.dec()
+                self.obs.tracer.instant(
+                    "readmit", cat="health", args={"replica": idx}
+                )
         else:
+            self._m_failures.inc()
             self.fail_streak[idx] += 1
             if self.fail_streak[idx] >= self.eject_after:
                 self.ejected[idx] = True
+                if not was_ejected:
+                    self._m_ejections.inc()
+                    self._m_ejected.inc()
+                    self.obs.tracer.instant(
+                        "eject", cat="health", args={"replica": idx}
+                    )
+
+    def _account(self, res: RouteResult) -> RouteResult:
+        """Single completion-accounting path (route / finish /
+        route_batch): the stats list and the registry stay in lockstep."""
+        self.stats.append(res)
+        self._m_requests.inc()
+        self._m_latency.observe(res.latency_ms)
+        return res
 
     # -- concurrent dispatch accounting (SONAR-LB) --------------------------
     def begin(
@@ -320,9 +377,11 @@ class SonarGateway:
             request_text, self.telemetry, self._utilization(),
             failed_mask=self._health_mask(),
             client_rtt_ms=self._rtt_row(client_region),
+            audit=self.obs.audit_tap,
         )
         idx = decision.server_idx
         self.in_flight[idx] += 1.0
+        self._m_in_flight.inc()
         return RouteResult(
             replica_idx=idx, latency_ms=0.0, ok=True,
             expertise=decision.expertise, network=decision.network,
@@ -331,24 +390,25 @@ class SonarGateway:
     def finish(self, replica_idx: int, latency_ms: float) -> RouteResult:
         """Complete a begun dispatch: record telemetry, release the slot."""
         self.in_flight[replica_idx] = max(self.in_flight[replica_idx] - 1.0, 0.0)
+        self._m_in_flight.dec()
         ok = latency_ms < latlib.OFFLINE_MS
         self._record_outcome(replica_idx, ok)
         self._observe(replica_idx, latency_ms)
-        res = RouteResult(
+        return self._account(RouteResult(
             replica_idx=replica_idx, latency_ms=latency_ms, ok=ok,
             expertise=0.0, network=0.0,
-        )
-        self.stats.append(res)
-        return res
+        ))
 
     def route(
         self, request_text: str, client_region: Optional[int] = None
     ) -> RouteResult:
-        decision = self.router.select(
-            request_text, self.telemetry, self._utilization(),
-            failed_mask=self._health_mask(),
-            client_rtt_ms=self._rtt_row(client_region),
-        )
+        with self.obs.tracer.span("route", cat="gateway"):
+            decision = self.router.select(
+                request_text, self.telemetry, self._utilization(),
+                failed_mask=self._health_mask(),
+                client_rtt_ms=self._rtt_row(client_region),
+                audit=self.obs.audit_tap,
+            )
         idx = decision.server_idx
         if self.executor is not None:
             latency = float(self.executor(idx, request_text))
@@ -357,12 +417,10 @@ class SonarGateway:
         ok = latency < latlib.OFFLINE_MS
         self._record_outcome(idx, ok)
         self._observe(idx, latency)
-        res = RouteResult(
+        return self._account(RouteResult(
             replica_idx=idx, latency_ms=latency, ok=ok,
             expertise=decision.expertise, network=decision.network,
-        )
-        self.stats.append(res)
-        return res
+        ))
 
     def engine(self):
         """The batched engine over this fleet (built once, lazily).
@@ -439,7 +497,10 @@ class SonarGateway:
         regions_arr = (
             np.asarray(client_regions, np.int32) if use_geo else None
         )
+        t_phase = time.perf_counter()
         enc = eng.encode(request_texts)
+        encode_ms = 1000.0 * (time.perf_counter() - t_phase)
+        dispatch_ms = 0.0
         picks: list = []
         chunked = self.router.uses_load and len(self.replicas) > 1
         step = self.lb_chunk if chunked else (pad_to or len(request_texts))
@@ -465,17 +526,23 @@ class SonarGateway:
                 geo_kw = dict(
                     client_region=reg, region_rtt_ms=self.region_rtt_ms
                 )
+            t_phase = time.perf_counter()
             dec = eng.route(
                 sub, self._telemetry.raw(), self._utilization(),
                 failed_mask=mask,
+                route_stats=self._route_stats,
+                n_real=n_chunk if sub.n != n_chunk else None,
                 **geo_kw,
             )
+            dispatch_ms += 1000.0 * (time.perf_counter() - t_phase)
             for qi in range(n_chunk):
                 idx = int(dec.server_idx[qi])
                 self.in_flight[idx] += 1.0
+                self._m_in_flight.inc()
                 picks.append(
                     (idx, float(dec.expertise[qi]), float(dec.network[qi]))
                 )
+        t_phase = time.perf_counter()
         out = []
         for idx, expertise, network in picks:
             latency = float(self.traces[idx, min(self.t, self.traces.shape[1] - 1)])
@@ -483,20 +550,39 @@ class SonarGateway:
             self._record_outcome(idx, ok)
             self._observe(idx, latency)
             self.in_flight[idx] = max(self.in_flight[idx] - 1.0, 0.0)
-            res = RouteResult(
+            self._m_in_flight.dec()
+            out.append(self._account(RouteResult(
                 replica_idx=idx, latency_ms=latency, ok=ok,
                 expertise=expertise, network=network,
-            )
-            self.stats.append(res)
-            out.append(res)
+            )))
+        merge_ms = 1000.0 * (time.perf_counter() - t_phase)
+        self.last_flush_phases = [
+            ("encode", encode_ms), ("dispatch", dispatch_ms),
+            ("merge", merge_ms),
+        ]
+        self._m_phase["encode"].observe(encode_ms)
+        self._m_phase["dispatch"].observe(dispatch_ms)
+        self._m_phase["merge"].observe(merge_ms)
         return out
 
     def report(self) -> dict:
-        lat = np.array([r.latency_ms for r in self.stats])
-        ok = np.array([r.ok for r in self.stats])
+        """Gateway summary, read from the metrics registry (the same
+        instruments the serving layers above update — one source of
+        truth for request counts, failures, health ejections, shed, and
+        in-flight).  ``p99_ms`` is the log-bucket histogram quantile
+        (docs/observability.md lists the error bound); count, mean, and
+        failure rate are exact."""
+        reg = self.obs.registry
+        n = int(self._m_latency.count)
         return {
-            "n": len(self.stats),
-            "al_ms": float(lat.mean()) if len(lat) else 0.0,
-            "p99_ms": float(np.percentile(lat, 99)) if len(lat) else 0.0,
-            "failure_rate": float(1.0 - ok.mean()) if len(ok) else 0.0,
+            "n": n,
+            "al_ms": self._m_latency.mean,
+            "p99_ms": self._m_latency.p99,
+            "failure_rate": self._m_failures.value / n if n else 0.0,
+            "in_flight": self._m_in_flight.value,
+            "ejected": self._m_ejected.value,
+            "ejections": self._m_ejections.value,
+            "readmissions": self._m_readmissions.value,
+            "shed": reg.value("serving_shed_total"),
+            "expired": reg.value("serving_expired_total"),
         }

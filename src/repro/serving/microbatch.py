@@ -49,6 +49,7 @@ from typing import Optional, Sequence
 
 import numpy as np
 
+from repro.obs.trace import SpanTracer, emit_flush_spans, emit_request_spans
 from repro.traffic.source import LiveRequest
 
 __all__ = [
@@ -169,13 +170,25 @@ class MicroBatcher:
     (1, [0, 1], 0)
     """
 
-    def __init__(self, policy: BatchingPolicy = BatchingPolicy()):
+    def __init__(self, policy: BatchingPolicy = BatchingPolicy(),
+                 registry=None):
         self.policy = policy
         self._pending: collections.deque = collections.deque()
         self.n_offered = 0
         self.n_shed = 0
         self.n_expired = 0
         self.n_taken = 0
+        # mirror the accounting in the shared metrics registry so shed /
+        # expired counts surface alongside the gateway's (one source of
+        # truth; the conservation identity over these registry counters
+        # is property-tested against check_accounting)
+        self._reg = registry
+        if registry is not None:
+            self._m_offered = registry.counter("serving_offered_total", "req")
+            self._m_shed = registry.counter("serving_shed_total", "req")
+            self._m_expired = registry.counter("serving_expired_total", "req")
+            self._m_taken = registry.counter("serving_routed_total", "req")
+            self._m_depth = registry.gauge("serving_queue_depth", "req")
 
     @property
     def n_pending(self) -> int:
@@ -186,10 +199,16 @@ class MicroBatcher:
         shed) when the queue is at ``queue_limit`` — bounded queue depth
         is the load-shedding backpressure under burst."""
         self.n_offered += 1
+        if self._reg is not None:
+            self._m_offered.inc()
         if len(self._pending) >= self.policy.queue_limit:
             self.n_shed += 1
+            if self._reg is not None:
+                self._m_shed.inc()
             return False
         self._pending.append(req)
+        if self._reg is not None:
+            self._m_depth.set(len(self._pending))
         return True
 
     def next_trigger_ms(self, now_ms: float) -> Optional[float]:
@@ -228,6 +247,10 @@ class MicroBatcher:
                 continue
             batch.append(req)
         self.n_taken += len(batch)
+        if self._reg is not None:
+            self._m_expired.inc(len(self._expired_now))
+            self._m_taken.inc(len(batch))
+            self._m_depth.set(len(self._pending))
         return batch
 
     def take_expired(self) -> list:
@@ -242,6 +265,9 @@ class MicroBatcher:
         out = list(self._pending)
         self._pending.clear()
         self.n_shed += len(out)
+        if self._reg is not None:
+            self._m_shed.inc(len(out))
+            self._m_depth.set(0)
         return out
 
     def check_accounting(self) -> None:
@@ -253,6 +279,23 @@ class MicroBatcher:
                 f"taken={self.n_taken} + shed={self.n_shed} + "
                 f"expired={self.n_expired} + pending={self.n_pending}"
             )
+
+
+def _emit_flush_trace(tracer, fidx, batch, routed, t_flush_ms, busy_ms,
+                      phases) -> None:
+    """One flush's spans: the flush+phase tree on the serving track and
+    serve/queue_wait per request.  Pure function of flush-log data, so
+    the live trace and `MicroBatchPump.replay_spans` emit identical
+    events."""
+    emit_flush_spans(
+        tracer, t_flush_ms, t_flush_ms + busy_ms, phases,
+        [r.rid for r in batch], flush_idx=fidx,
+    )
+    for req, res in zip(batch, routed):
+        emit_request_spans(
+            tracer, req.rid, req.t_ms, t_flush_ms, t_flush_ms + busy_ms,
+            replica_idx=res.replica_idx, flush_idx=fidx,
+        )
 
 
 @dataclasses.dataclass
@@ -302,10 +345,22 @@ class MicroBatchPump:
             raise ValueError("MicroBatchPump requires use_kernels=True")
         self.gw = gateway
         self.policy = policy
-        self.batcher = MicroBatcher(policy)
+        self.obs = gateway.obs
+        self.batcher = MicroBatcher(policy, registry=self.obs.registry)
         self._service_ms = service_ms
         self.flush_log: list = []     # list[list[LiveRequest]] actually routed
+        self.flush_times: list = []   # [(t_flush_ms, busy_ms)] per flush
+        self.flush_phases: list = []  # per-flush gateway phase durations
         self.results: dict = {}       # rid -> ServeResult
+        self._now_ms = 0.0            # virtual clock, for the tracer
+        self._m_flushes = self.obs.registry.counter(
+            "serving_flushes_total", "flushes"
+        )
+        self._m_serve = self.obs.registry.histogram("serving_latency_ms", "ms")
+        if self.obs.tracer.enabled:
+            # spans land on the pump's virtual timeline, aligned with the
+            # gateway's health instants (ejection/readmission)
+            self.obs.tracer.clock_ms = lambda: self._now_ms
 
     # -- one flush ----------------------------------------------------------
     def _flush(self, now_ms: float) -> float:
@@ -313,11 +368,13 @@ class MicroBatchPump:
         returns the engine-busy duration in virtual ms (0.0 when the take
         yielded nothing to route)."""
         batch = self.batcher.take(now_ms)
+        tracer = self.obs.tracer
         for req in self.batcher.take_expired():
             self.results[req.rid] = ServeResult(
                 rid=req.rid, expired=True, t_arrival_ms=req.t_ms,
                 t_routed_ms=now_ms, t_done_ms=now_ms,
             )
+            tracer.instant("expired", now_ms, args={"rid": req.rid})
         if not batch:
             return 0.0
         texts = [r.text for r in batch]
@@ -329,17 +386,30 @@ class MicroBatchPump:
         t0 = time.perf_counter()
         routed = self.gw.route_batch(texts, client_regions=regions, pad_to=pad)
         wall_ms = 1000.0 * (time.perf_counter() - t0)
+        # device-stat fold boundary — after the timed window, so the
+        # deferred jit dispatches never land in a measured flush
+        self.obs.drain_route_stats()
         busy_ms = (
             wall_ms if self._service_ms is None else
             float(self._service_ms(texts))
         )
+        fidx = len(self.flush_log)
         self.flush_log.append(batch)
+        self.flush_times.append((now_ms, busy_ms))
+        self.flush_phases.append(list(self.gw.last_flush_phases))
+        self._m_flushes.inc()
         for req, res in zip(batch, routed):
             self.results[req.rid] = ServeResult(
                 rid=req.rid, replica_idx=res.replica_idx, ok=res.ok,
                 latency_ms=res.latency_ms, t_arrival_ms=req.t_ms,
                 t_routed_ms=now_ms, t_done_ms=now_ms + busy_ms,
                 batch_size=len(batch),
+            )
+            self._m_serve.observe(now_ms + busy_ms - req.t_ms)
+        if tracer.enabled:
+            _emit_flush_trace(
+                tracer, fidx, batch, routed, now_ms, busy_ms,
+                self.flush_phases[-1],
             )
         return busy_ms
 
@@ -352,17 +422,20 @@ class MicroBatchPump:
         i, n = 0, len(schedule)
         free_ms = 0.0                 # engine free-at time (virtual)
         now_ms = 0.0
+        tracer = self.obs.tracer
         while i < n or self.batcher.n_pending:
             trig = self.batcher.next_trigger_ms(now_ms)
             if trig is None:
                 # idle: jump to the next arrival
                 req = schedule[i]
                 now_ms = max(now_ms, req.t_ms)
+                self._now_ms = now_ms
                 if not self.batcher.offer(req, now_ms):
                     self.results[req.rid] = ServeResult(
                         rid=req.rid, shed=True, t_arrival_ms=req.t_ms,
                         t_routed_ms=now_ms, t_done_ms=now_ms,
                     )
+                    tracer.instant("shed", now_ms, args={"rid": req.rid})
                 i += 1
                 continue
             t_flush = max(trig, free_ms, now_ms)
@@ -371,18 +444,39 @@ class MicroBatchPump:
                 # (it may tighten the trigger via size or deadline)
                 req = schedule[i]
                 now_ms = max(now_ms, req.t_ms)
+                self._now_ms = now_ms
                 if not self.batcher.offer(req, now_ms):
                     self.results[req.rid] = ServeResult(
                         rid=req.rid, shed=True, t_arrival_ms=req.t_ms,
                         t_routed_ms=now_ms, t_done_ms=now_ms,
                     )
+                    tracer.instant("shed", now_ms, args={"rid": req.rid})
                 i += 1
                 continue
             now_ms = t_flush
+            self._now_ms = now_ms
             busy = self._flush(now_ms)
             free_ms = now_ms + busy
+            self._now_ms = free_ms
         self.batcher.check_accounting()
         return self.report()
+
+    def replay_spans(self) -> SpanTracer:
+        """Deterministically rebuild the flush/request span timeline from
+        `flush_log` (+ recorded flush times/phases and results) into a
+        fresh tracer.  Emits exactly the events the live trace recorded
+        (the live path and this replay share `_emit_flush_trace`), so a
+        replay of a replay is byte-identical — tested in
+        tests/test_obs.py."""
+        tracer = SpanTracer(enabled=True, clock_ms=lambda: 0.0)
+        for fidx, batch in enumerate(self.flush_log):
+            t_flush, busy = self.flush_times[fidx]
+            routed = [self.results[r.rid] for r in batch]
+            _emit_flush_trace(
+                tracer, fidx, batch, routed, t_flush, busy,
+                self.flush_phases[fidx],
+            )
+        return tracer
 
     def report(self) -> PumpReport:
         res = [self.results[k] for k in sorted(self.results)]

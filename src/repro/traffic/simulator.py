@@ -59,6 +59,8 @@ import numpy as np
 from repro.core import latency as L
 from repro.core.platform import NetMCPPlatform
 from repro.core.routing import Router
+from repro.obs import Observability
+from repro.obs.trace import emit_chaos_events, emit_request_spans
 from repro.traffic.queueing import QueueConfig, ServerQueue
 
 _ARRIVAL, _FINISH, _HEDGE = 0, 1, 2
@@ -151,6 +153,7 @@ class FleetTrafficSim:
         retry_budget: int = 2,
         deadline_ms: Optional[float] = None,
         seed: int = 0,
+        obs: Optional[Observability] = None,
     ):
         self.platform = platform
         self.router = router
@@ -159,6 +162,20 @@ class FleetTrafficSim:
         self.retry_budget = retry_budget
         self.deadline_ms = deadline_ms
         self.seed = seed
+        # observability: counters mirror the TrafficReport tallies into the
+        # shared registry; with tracing enabled, every request becomes a
+        # serve/queue_wait span pair on the sim clock and every chaos fault
+        # is rendered as structure on a dedicated "chaos" track
+        self.obs = obs if obs is not None else Observability()
+        reg = self.obs.registry
+        self._m_offered = reg.counter("sim_offered_total", "req")
+        self._m_completed = reg.counter("sim_completed_total", "req")
+        self._m_failed = reg.counter("sim_failed_total", "req")
+        self._m_drops = reg.counter("sim_drops_total", "drops")
+        self._m_crashes = reg.counter("sim_crashes_total", "crashes")
+        self._m_hedges = reg.counter("sim_hedges_total", "hedges")
+        self._m_routes = reg.counter("sim_routes_total", "routes")
+        self._m_latency = reg.histogram("sim_latency_ms", "ms")
         self._heap: list = []
         self._seq = 0
         self._draws: np.ndarray = np.zeros((0,))
@@ -225,6 +242,14 @@ class FleetTrafficSim:
         req.n_drops += 1
         if server_dead:
             req.failed_servers.add(server)
+        # keep the registry aligned with TrafficReport: `sim_drops_total`
+        # mirrors n_drop_events (queue overflow only); dead-station kills
+        # are a separate series
+        (self._m_crashes if server_dead else self._m_drops).inc()
+        self.obs.tracer.instant(
+            "crash" if server_dead else "drop", now_ms, cat="fault",
+            args={"rid": req.rid, "server": server},
+        )
         self.platform.record_observation(
             server, self._tick(now_ms), L.OFFLINE_MS
         )
@@ -233,11 +258,16 @@ class FleetTrafficSim:
             self._dispatch(req, now_ms, exclude)
         elif req.live_copies == 0 and not req.done:
             req.failed = True
+            self._m_failed.inc()
+            self.obs.tracer.instant(
+                "fail", now_ms, cat="fault", args={"rid": req.rid}
+            )
 
     # -- event handlers ------------------------------------------------------
     def _dispatch(self, req: Request, now_ms: float, exclude: frozenset = frozenset()):
         server = self._route(req.text, now_ms, req.failed_servers, req.region)
         req.n_routes += 1
+        self._m_routes.inc()
         if not self.platform.is_alive(server, self._tick(now_ms)):
             # connection refused: the station is crashed or partitioned
             self._fail_copy(req, server, now_ms, exclude, server_dead=True)
@@ -303,6 +333,14 @@ class FleetTrafficSim:
         req.service_ms = disp.service_ms
         req.net_ms = net_ms
         req.server_idx = disp.server
+        self._m_completed.inc()
+        self._m_latency.observe(req.t_finish_ms - req.t_arrival_ms)
+        # serve (arrival -> client completion) wrapping queue_wait
+        # (arrival -> service start of the winning copy), sim-clock ms
+        emit_request_spans(
+            self.obs.tracer, req.rid, req.t_arrival_ms,
+            disp.t_start_ms, req.t_finish_ms, replica_idx=disp.server,
+        )
         # feed-forward: the *client-observed* latency, queueing included
         self.platform.record_observation(
             disp.server, self._tick(req.t_finish_ms),
@@ -333,6 +371,10 @@ class FleetTrafficSim:
         req.budget -= 1
         req.n_hedges += 1
         req.hedged = True
+        self._m_hedges.inc()
+        self.obs.tracer.instant(
+            "hedge", now_ms, cat="fault", args={"rid": req.rid}
+        )
         self._dispatch(req, now_ms, hosts)
 
     # -- driver --------------------------------------------------------------
@@ -374,6 +416,13 @@ class FleetTrafficSim:
             for i, t in enumerate(arrivals_s)
         ]
         self._heap, self._seq = [], 0
+        self._m_offered.inc(n)
+        if self.obs.tracer.enabled:
+            # render the fault schedule (if any) before the request spans
+            # so the chaos track aligns with what the requests experience
+            emit_chaos_events(
+                self.obs.tracer, self.platform.chaos, self.platform.dt_s
+            )
         for req in requests:
             self._push(req.t_arrival_ms, _ARRIVAL, req)
 

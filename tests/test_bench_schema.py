@@ -40,15 +40,19 @@ GOOD_GEO = {
 }
 
 
-def test_known_schemas_cover_all_six_artifacts():
+def test_known_schemas_cover_all_artifacts():
     assert sorted(SCHEMAS) == [
         "bench-results", "chaos-recovery", "geo-routing", "mega-fleet",
-        "offered-load", "serving-qps",
+        "obs-overhead", "offered-load", "serve-metrics", "serve-trace",
+        "serving-qps",
     ]
     assert schema_name_for("some/dir/geo-routing.json") == "geo-routing"
     # committed perf-trajectory baselines map to the plain schema names
     assert schema_name_for("BENCH_serving_qps.json") == "serving-qps"
     assert schema_name_for("repo/BENCH_mega_fleet.json") == "mega-fleet"
+    assert schema_name_for("BENCH_obs_overhead.json") == "obs-overhead"
+    assert schema_name_for("ci/serve-trace.json") == "serve-trace"
+    assert schema_name_for("ci/serve-metrics.json") == "serve-metrics"
 
 
 GOOD_SERVING = {

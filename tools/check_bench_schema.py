@@ -187,6 +187,91 @@ def check_serving_qps(payload: dict) -> list:
     return errs
 
 
+def check_obs_overhead(payload: dict) -> list:
+    errs = []
+    for k, t in (("algo", str), ("n_replicas", int), ("max_batch", int),
+                 ("rate_rps", NUM), ("n_trials", int), ("gate_pct", NUM),
+                 ("baseline", dict), ("instrumented", dict),
+                 ("overhead_pct", NUM)):
+        if k not in payload:
+            errs.append(f"missing key '{k}'")
+        else:
+            errs.extend(_check_type(k, payload[k], t))
+    for arm in ("baseline", "instrumented"):
+        d = payload.get(arm)
+        if not isinstance(d, dict):
+            continue
+        for k in ("p50_ms", "p99_ms"):
+            if not _is_num(d.get(k)):
+                errs.append(f"{arm}.{k}: expected number, "
+                            f"got {type(d.get(k)).__name__}")
+        for k in ("offered", "routed", "n_trials"):
+            if not isinstance(d.get(k), int):
+                errs.append(f"{arm}.{k}: expected int, "
+                            f"got {type(d.get(k)).__name__}")
+    instr = payload.get("instrumented")
+    if isinstance(instr, dict) and instr.get("n_trace_events") == 0:
+        errs.append("instrumented.n_trace_events: expected > 0 "
+                    "(tracing never ran)")
+    return errs
+
+
+def check_serve_trace(payload: dict) -> list:
+    """Chrome Trace Event Format sanity (the --trace artifact)."""
+    errs = []
+    evs = payload.get("traceEvents")
+    if not isinstance(evs, list):
+        return [f"traceEvents: expected list, got {type(evs).__name__}"]
+    if not evs:
+        errs.append("traceEvents: empty trace")
+    n_x = 0
+    for i, ev in enumerate(evs[:10_000]):
+        if not isinstance(ev, dict):
+            errs.append(f"traceEvents[{i}]: expected dict")
+            continue
+        ph = ev.get("ph")
+        if ph not in ("X", "i", "C", "M"):
+            errs.append(f"traceEvents[{i}]: bad phase {ph!r}")
+            continue
+        if not isinstance(ev.get("name"), str):
+            errs.append(f"traceEvents[{i}]: missing name")
+        if ph != "M" and not _is_num(ev.get("ts")):
+            errs.append(f"traceEvents[{i}]: missing ts")
+        if ph == "X":
+            n_x += 1
+            if not (_is_num(ev.get("dur")) and ev["dur"] >= 0):
+                errs.append(f"traceEvents[{i}]: X event needs dur >= 0")
+    if evs and n_x == 0:
+        errs.append("traceEvents: no complete (X) spans")
+    return errs
+
+
+def check_serve_metrics(payload: dict) -> list:
+    """MetricsRegistry.to_json output (the --metrics-json artifact)."""
+    errs = []
+    metrics = payload.get("metrics")
+    if not isinstance(metrics, dict):
+        return [f"metrics: expected dict, got {type(metrics).__name__}"]
+    if not metrics:
+        errs.append("metrics: empty registry snapshot")
+    for name, m in metrics.items():
+        if not isinstance(m, dict):
+            errs.append(f"metrics.{name}: expected dict")
+            continue
+        kind = m.get("type")
+        if kind not in ("counter", "gauge", "histogram"):
+            errs.append(f"metrics.{name}: bad type {kind!r}")
+        elif kind == "histogram":
+            for k in ("count", "mean", "p50", "p99", "p999"):
+                if not _is_num(m.get(k)):
+                    errs.append(f"metrics.{name}.{k}: expected number")
+        elif not _is_num(m.get("value")):
+            errs.append(f"metrics.{name}.value: expected number")
+    if "summary" in payload:
+        errs.extend(_check_type("summary", payload["summary"], dict))
+    return errs
+
+
 SCHEMAS: dict = {
     "bench-results": check_bench_results,
     "offered-load": check_offered_load,
@@ -194,6 +279,9 @@ SCHEMAS: dict = {
     "mega-fleet": check_mega_fleet,
     "geo-routing": check_geo_routing,
     "serving-qps": check_serving_qps,
+    "obs-overhead": check_obs_overhead,
+    "serve-trace": check_serve_trace,
+    "serve-metrics": check_serve_metrics,
 }
 
 
