@@ -20,9 +20,9 @@ def run(scenario: str, algo: str, cfg: RoutingConfig = RoutingConfig(), seed: in
     plat = platform.NetMCPPlatform(SERVERS, scenario=scenario, seed=seed)
     router = routing.make_router(algo, SERVERS, cfg)
     ag = agent.Agent(plat, router)
-    t0 = time.time()
+    t0 = time.monotonic()
     recs = ag.run_benchmark(QUERIES, ticks_per_query=60)
-    wall = time.time() - t0
+    wall = time.monotonic() - t0
     rep = metrics.evaluate(recs, SERVERS)
     return rep, wall
 

@@ -33,20 +33,20 @@ def main(
     # (kernels auto-select per backend: Pallas on TPU, jnp on CPU) --
     engine = make_engine("sonar", cluster, cfg)
     dec = engine.route_texts(queries, telemetry)   # warm-up (compile)
-    t0 = time.time()
+    t0 = time.monotonic()
     for _ in range(n_iter):
         dec = engine.route_texts(queries, telemetry)
-    batched_s = (time.time() - t0) / n_iter
+    batched_s = (time.monotonic() - t0) / n_iter
     us_batched = 1e6 * batched_s / len(queries)
 
     # -- scalar path: one Router.select per query (numpy argsorts) --
     router = make_router("sonar", cluster, cfg)
     scalar_iter = max(1, n_iter // 5)
     router.select(queries[0], telemetry)           # warm-up
-    t0 = time.time()
+    t0 = time.monotonic()
     for _ in range(scalar_iter):
         scalar_picks = [router.select(q, telemetry) for q in queries]
-    scalar_s = (time.time() - t0) / scalar_iter
+    scalar_s = (time.monotonic() - t0) / scalar_iter
     us_scalar = 1e6 * scalar_s / len(queries)
 
     # -- parity: argmax-identical selections --

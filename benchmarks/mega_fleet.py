@@ -20,7 +20,8 @@ JSON artifact schema (``--json out.json``)::
 
   {
     "config": {"sizes": [...], "shards": [...], "n_queries": ...,
-               "window": ..., "algos": [...], "mesh_devices": ...},
+               "window": ..., "algos": [...], "mesh_devices": ...,
+               "quantize": "none"|"bf16"|"int8"},
     "parity": {"size": ..., "algos": [...], "ok": true},
     "points": [
       {"algo": ..., "n_servers": ..., "n_tools": ..., "n_shards": ...,
@@ -41,6 +42,7 @@ import time
 
 import numpy as np
 
+from repro.core import quantize
 from repro.core.batch_routing import BatchRoutingEngine
 from repro.core.mesh_routing import ShardedRoutingEngine
 from repro.core.routing import RoutingConfig
@@ -58,12 +60,25 @@ def _queries(n: int) -> list:
     return [QUERY_TEXTS[i % len(QUERY_TEXTS)] + f" variant {i}" for i in range(n)]
 
 
-def build_point(size: int, window: int, seed: int = 0):
-    """Tiled index + tiled platform + compact telemetry for one fleet size."""
-    index = mega_fleet_index(size, seed=seed)
+def build_point(size: int, window: int, seed: int = 0,
+                quantize_mode: str = "none"):
+    """Tiled index + tiled platform + compact telemetry for one fleet size.
+
+    ``quantize_mode`` ("none" / "bf16" / "int8") rounds the
+    bandwidth-bound operands ONCE at build — corpus weights at the stated
+    precision, the compact telemetry window to bf16 — per the contract in
+    `core.quantize`: every routing path then consumes the identical
+    rounded values, so the parity gate below still holds bit-for-bit.
+    """
+    wdtype = {"none": "float32", "bf16": "bfloat16", "int8": "int8"}[
+        quantize_mode
+    ]
+    index = mega_fleet_index(size, seed=seed, weights_dtype=wdtype)
     plat = mega_platform(size, n_tel_templates=16, seed=seed,
                          horizon_s=float(4 * window), dt_s=1.0)
     compact, tel_map = plat.compact_window(2 * window, window=window)
+    if quantize_mode != "none":
+        compact = quantize.quantize_bf16(np.asarray(compact))
     rng = np.random.default_rng(seed)
     load = (rng.random(size) * 1.5).astype(np.float32)
     age = (rng.random(size) * 400.0).astype(np.float32)
@@ -84,10 +99,10 @@ def time_sharded(
         telemetry_templates=(compact, tel_map),
     )
     dec = eng.route(batch, **kw)                     # warm-up (compile)
-    t0 = time.time()
+    t0 = time.monotonic()
     for _ in range(n_iter):
         dec = eng.route(batch, **kw)
-    dt = (time.time() - t0) / n_iter
+    dt = (time.monotonic() - t0) / n_iter
     return eng, dec, dt
 
 
@@ -136,6 +151,11 @@ def main(argv=None) -> dict:
     parser.add_argument("--json", metavar="PATH", default=None)
     parser.add_argument("--queries", type=int, default=16)
     parser.add_argument("--window", type=int, default=32)
+    parser.add_argument(
+        "--quantize", choices=["none", "bf16", "int8"], default="bf16",
+        help="operand precision for corpus weights + telemetry window "
+             "(rounded once at build; parity gate still exact)",
+    )
     args = parser.parse_args(argv)
 
     import jax
@@ -161,7 +181,7 @@ def main(argv=None) -> dict:
     points, parity = [], None
     for size in sizes:
         index, compact, tel_map, load, age, mask = build_point(
-            size, args.window
+            size, args.window, quantize_mode=args.quantize
         )
         eng0 = ShardedRoutingEngine(cfg=cfg, algo="sonar", n_shards=1,
                                     use_kernels=False, index=index)
@@ -203,6 +223,7 @@ def main(argv=None) -> dict:
             "sizes": sizes, "shards": shards_list,
             "n_queries": args.queries, "window": args.window,
             "algos": algos, "mesh_devices": n_dev,
+            "quantize": args.quantize,
         },
         "parity": parity,
         "points": points,

@@ -1,17 +1,25 @@
 """§Roofline report: aggregate the dry-run JSONs into the per-(arch x shape)
 three-term table and pick the hillclimb cells.
 
-Reads experiments/dryrun/*.json (written by repro.launch.dryrun); emits one
+Reads ``experiments/dryrun_baseline/*.json`` by default (written by
+``repro.launch.dryrun --all``; override with ``--dryrun-dir``) and emits one
 CSV row per cell:  name, us_per_call(=roofline step time), derived terms.
+
+An empty dry-run directory exits non-zero unless ``--allow-empty`` is given,
+so a misconfigured path cannot silently report a green-but-vacuous table.
 """
 from __future__ import annotations
 
+import argparse
 import glob
 import json
 import os
+import sys
+
+DEFAULT_DRYRUN_DIR = "experiments/dryrun_baseline"
 
 
-def load_cells(dryrun_dir: str = "experiments/dryrun_baseline") -> list:
+def load_cells(dryrun_dir: str = DEFAULT_DRYRUN_DIR) -> list:
     cells = []
     for path in sorted(glob.glob(os.path.join(dryrun_dir, "*.json"))):
         with open(path) as f:
@@ -21,10 +29,19 @@ def load_cells(dryrun_dir: str = "experiments/dryrun_baseline") -> list:
     return cells
 
 
-def main(print_fn=print, dryrun_dir: str = "experiments/dryrun_baseline") -> list:
+def main(
+    print_fn=print,
+    dryrun_dir: str = DEFAULT_DRYRUN_DIR,
+    allow_empty: bool = True,
+) -> list:
     cells = load_cells(dryrun_dir)
     if not cells:
-        print_fn("roofline_table,0,no dry-run artifacts found (run repro.launch.dryrun --all)")
+        print_fn(
+            f"roofline_table,0,no dry-run artifacts found in {dryrun_dir} "
+            "(run repro.launch.dryrun --all)"
+        )
+        if not allow_empty:
+            raise SystemExit(2)
         return []
     for r in cells:
         roof = r["roofline"]
@@ -62,4 +79,18 @@ def main(print_fn=print, dryrun_dir: str = "experiments/dryrun_baseline") -> lis
 
 
 if __name__ == "__main__":
-    main()
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument(
+        "--dryrun-dir", default=DEFAULT_DRYRUN_DIR,
+        help="directory of dry-run JSON artifacts "
+             f"(default: {DEFAULT_DRYRUN_DIR})",
+    )
+    ap.add_argument(
+        "--allow-empty", action="store_true",
+        help="exit 0 even when no dry-run artifacts are found",
+    )
+    args = ap.parse_args()
+    try:
+        main(dryrun_dir=args.dryrun_dir, allow_empty=args.allow_empty)
+    except SystemExit as e:
+        sys.exit(e.code)

@@ -45,7 +45,7 @@ def main(argv=None) -> dict:
     )
 
     print("name,us_per_call,derived")
-    t0 = time.time()
+    t0 = time.monotonic()
     results: dict = {"mode": "smoke" if args.smoke else "full"}
     if args.smoke:
         # the kernel-path hot loop (regression signal for per-PR perf diffs)
@@ -63,7 +63,7 @@ def main(argv=None) -> dict:
         results["fleet_sim"] = fleet_sim.main()
         results["offered_load"] = _jsonable(offered_load.main())
         results["roofline"] = _jsonable(roofline.main())
-    results["wall_s"] = time.time() - t0
+    results["wall_s"] = time.monotonic() - t0
     print(f"# total wall {results['wall_s']:.1f}s", file=sys.stderr)
 
     if args.json:

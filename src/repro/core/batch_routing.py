@@ -8,8 +8,14 @@ inside one jit-compiled JAX pipeline (paper Sec. IV, Eq. 1-9):
   2. stage-1 candidate mask over tools      (Eq. 3 mask)
   3. stage-2 tool scoring                   (Eq. 3-4, BM25 matmul)
   4. fused candidate top-k + softmax expertise + QoS fusion + argmax
-                                            (Eq. 4, 5, 8, 9 — one Pallas
-                                             kernel, see kernels/select_fuse)
+                                            (Eq. 4, 5, 8, 9)
+
+On the kernel path steps 3-4 run as ONE single-pass Pallas kernel
+(`kernels/score_fuse`): the stage-2 matmul, candidate mask, streaming
+top-k, softmax, fusion and argmax are fused over tool stripes so the
+[n_q, n_tools] score matrix never exists in HBM; the unfused jnp path
+(`kernels/ref.fused_select_ref` on materialized matrices) remains the
+oracle.
 
 with the QoS scores N (Eq. 7) produced by the Pallas `qos_scores` kernel
 over the telemetry matrix.  No per-query Python runs anywhere between the
@@ -250,21 +256,14 @@ def _route_pipeline(
     )                                                       # [n_q, n_servers]
     in_cand = jnp.take(member, tool_server, axis=1)         # [n_q, n_tools]
 
-    # -- stage 2: tool scores, masked outside candidate servers (Eq. 3-4) --
-    if use_kernels:
-        t_scores = ops.bm25_scores(q_tool, w_tool, interpret=interpret)
-    else:
+    # -- stage 2: tool scores, masked outside candidate servers (Eq. 3-4),
+    # plus the rerank re-valuation (RerankRAG).  Only the unfused path
+    # materializes the [n_q, n_tools] matrices — the kernel path streams
+    # them stripe-by-stripe inside `ops.fused_score_select` below --
+    if not use_kernels:
         t_scores = q_tool @ w_tool.T
-    sel = jnp.where(in_cand, t_scores, NEG)
-
-    # -- rerank re-valuation over the same candidates (RerankRAG) --
-    if rerank:
-        if use_kernels:
-            val = ops.bm25_scores(q_rerank, w_tool, interpret=interpret)
-        else:
-            val = q_rerank @ w_tool.T
-    else:
-        val = sel
+        sel = jnp.where(in_cand, t_scores, NEG)
+        val = (q_rerank @ w_tool.T) if rerank else sel
 
     # -- QoS N per tool (Eq. 6-7): Pallas kernel over the telemetry matrix --
     if use_network and latency_hist is not None:
@@ -350,10 +349,14 @@ def _route_pipeline(
     else:
         tool_dead = None
 
-    # -- fused candidate top-k + Eq. 5 softmax + Eq. 8 fusion + argmax --
+    # -- fused stage-2 scoring + candidate top-k + Eq. 5 softmax + Eq. 8
+    # fusion + argmax: one Pallas pass (kernels/score_fuse) on the kernel
+    # path; the unfused jnp oracle otherwise --
     if use_kernels:
-        tool_idx, c, n, s = ops.fused_select(
-            sel, val, tool_qos, tool_load, tool_dead,
+        tool_idx, c, n, s = ops.fused_score_select(
+            q_tool, w_tool, tool_server, cand_servers,
+            tool_qos, tool_load, tool_dead,
+            q_rerank if rerank else None,
             k=top_k, alpha=eff_alpha, beta=eff_beta, gamma=eff_gamma,
             tool_rtt=tool_rtt, delta=eff_delta,
             temp=temp, interpret=interpret,

@@ -68,7 +68,7 @@ import numpy as np
 from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh
 
-from repro.core import bm25
+from repro.core import bm25, quantize
 from repro.core.batch_routing import BatchDecisions, EncodedBatch, encode_for_index
 from repro.obs import trace as obs_trace
 from repro.core.dataset import Server
@@ -114,6 +114,17 @@ class TiledFleetIndex:
         server ``i`` are its template's tools, in template order, so the
         global tool axis stays grouped by host server (ascending), which
         the shard plan requires.
+    weights_dtype : str
+        Storage dtype of the template BM25 weights: ``"float32"`` (exact),
+        ``"bfloat16"`` (weights rounded once to the nearest bf16 at build
+        time) or ``"int8"`` (symmetric per-template-doc scales).  Rounding
+        happens HERE, before any path consumes the index, so the scalar
+        oracle, the batched engine, the Pallas kernels and the sharded
+        engine all score the *identical* rounded operands and stay
+        argmax-identical to each other by construction (the documented
+        quantization carve-out in docs/benchmarks.md).  ``densify()``
+        gathers from the already-rounded rows and therefore inherits the
+        exact same values.
 
     BM25 corpus statistics (IDF, average doc length) are computed as if
     every template doc were replicated its multiplicity — scoring against
@@ -124,7 +135,12 @@ class TiledFleetIndex:
 
     is_tiled = True
 
-    def __init__(self, templates: Sequence[Server], server_template: np.ndarray):
+    def __init__(
+        self,
+        templates: Sequence[Server],
+        server_template: np.ndarray,
+        weights_dtype: str = "float32",
+    ):
         self.templates = list(templates)
         stpl = np.asarray(server_template, np.int64)
         assert stpl.min() >= 0 and stpl.max() < len(self.templates)
@@ -158,6 +174,27 @@ class TiledFleetIndex:
         self.tool_doc_map = (
             np.repeat(doc0[stpl], n_per_server) + within
         ).astype(np.int32)
+
+        # one-time operand rounding (quantized storage contract): every
+        # consumer — template matmuls and densified parity views alike —
+        # sees the same rounded weights, so decisions cannot diverge
+        # across routing paths because of the storage dtype.
+        self.weights_dtype = weights_dtype
+        if weights_dtype not in ("float32", "f32"):
+            self.server_corpus = bm25.Bm25Corpus(
+                vocab=self.server_corpus.vocab,
+                weights=quantize.round_weights(
+                    self.server_corpus.weights, weights_dtype
+                ),
+                n_docs=self.server_corpus.n_docs,
+            )
+            self.tool_corpus = bm25.Bm25Corpus(
+                vocab=self.tool_corpus.vocab,
+                weights=quantize.round_weights(
+                    self.tool_corpus.weights, weights_dtype
+                ),
+                n_docs=self.tool_corpus.n_docs,
+            )
 
     def densify(self) -> _DenseIndexView:
         """Expanded-weights view (for the single-device parity engine)."""
@@ -264,6 +301,11 @@ class _StaticCfg(NamedTuple):
     use_kernels: bool
     interpret: Optional[bool]
     qos_params: QosParams
+    # compacted candidate stage-2 (tiled mega fleets): score only the
+    # ≤ top_s * k_slot tools hosted on candidate servers instead of
+    # running shard-local top-k over the full tool axis
+    compact2: bool = False
+    k_slot: int = 0               # max tools hosted on any one server
 
 
 # ---------------------------------------------------------------------------
@@ -420,6 +462,136 @@ def _stage2_stacked(d: dict, cand_gids: jax.Array, sc: _StaticCfg) -> tuple:
         gather(tool_rtt), gather(tool_dead), gid
 
 
+def _gflat(x: jax.Array) -> jax.Array:
+    """[J, B, s_pad] -> [B, J*s_pad]; columns land in global server-id
+    order because shard slices are contiguous ([j*s_pad, (j+1)*s_pad))."""
+    J, B, S = x.shape
+    return jnp.transpose(x, (1, 0, 2)).reshape(B, J * S)
+
+
+def _stage2_compact(
+    d: dict, t_full: jax.Array, v_full, nt, cand_gids: jax.Array,
+    sc: _StaticCfg,
+) -> tuple:
+    """Candidate-compacted stage 2 for tiled mega fleets.
+
+    Instead of scoring/masking/top-k'ing the full tool axis (the
+    dominant cost at 10^5+ servers: the mask and ``lax.top_k`` are both
+    O(n_tools)), expand only the tools hosted on the ≤ top_s candidate
+    servers: candidate server ids are sorted ascending and each expands
+    ``k_slot`` slots (global tool id = server's first tool + slot; pad
+    slots beyond the server's tool count carry ``NEG`` and gid 0).
+
+    Parity with the full stage-2 + merge (and hence with the
+    single-device engine): the compacted axis lists candidate tools in
+    ascending-global-id order (ascending candidate gids × per-server
+    tool blocks contiguous and ascending), so ``lax.top_k``'s
+    first-max-wins tie rule resolves to the lowest global tool id —
+    exactly the full-axis order.  All candidate-tool values (BM25 sel,
+    rerank val, QoS, load, RTT, dead) are gathered from the same
+    replicated template scores / per-server vectors the full path uses,
+    so the downstream softmax + fusion runs over identical floats in
+    identical order.  Requires every server to host ≥ 1 tool and
+    ``n_servers >= top_s`` (no pad/duplicate candidates) — the engine
+    falls back to the full stage-2 otherwise.
+
+    Returns seven flattened [n_q, W] arrays (sel, val, qos, load, rtt,
+    dead, gid) with ``W = top_s_eff * k_slot`` (padded up to the final
+    top-k width so the merge semantics match the full path).
+    """
+    n_q = t_full.shape[0]
+    m_docs = t_full.shape[1]
+    cand = jnp.sort(cand_gids, axis=-1).astype(jnp.int32)  # [n_q, S] asc
+    S = cand.shape[1]
+    K = sc.k_slot
+    start = jnp.take(d["tool_start_g"], cand)              # [n_q, S]
+    count = jnp.take(d["tool_count_g"], cand)
+    doc0 = jnp.take(d["tool_doc0_g"], cand)
+    slot = jnp.arange(K, dtype=jnp.int32)
+    ok3 = slot[None, None, :] < count[:, :, None]          # [n_q, S, K]
+    gid3 = jnp.where(ok3, start[:, :, None] + slot[None, None, :], 0)
+    doc3 = jnp.clip(doc0[:, :, None] + slot[None, None, :], 0, m_docs - 1)
+    W = S * K
+    ok = ok3.reshape(n_q, W)
+    gid = gid3.reshape(n_q, W)
+    doc = doc3.reshape(n_q, W)
+
+    sel = jnp.where(ok, jnp.take_along_axis(t_full, doc, axis=1), NEG)
+    if sc.rerank:
+        val = jnp.where(ok, jnp.take_along_axis(v_full, doc, axis=1), NEG)
+    else:
+        val = sel
+
+    def gath(x):                                           # [J, B, s_pad]
+        f = _gflat(x)                                      # -> [n_q, S]
+        if f.shape[0] == 1:
+            return f[0][cand]
+        return jnp.take_along_axis(f, cand, axis=1)
+
+    def expand(x):                                         # [n_q, S] ->
+        return jnp.broadcast_to(                           # [n_q, W]
+            x[:, :, None], (n_q, S, K)
+        ).reshape(n_q, W)
+
+    net_active = sc.use_network and (nt is not None or "lat" in d)
+    if net_active:
+        if nt is not None:                                 # template QoS
+            tmf = d["tel_map"].reshape(-1)                 # [J*s_pad]
+            qos_s = jnp.take(nt, jnp.take(tmf, cand))      # [n_q, S]
+        elif d["lat"].ndim == 4:                           # per-query hist
+            J, B, Sp, T = d["lat"].shape
+            flat = jnp.transpose(d["lat"], (1, 0, 2, 3)).reshape(B, J * Sp, T)
+            rows = jnp.take_along_axis(
+                flat, cand[:, :, None], axis=1
+            )                                              # [n_q, S, T]
+            qos_s = _qos_2d(rows.reshape(n_q * S, T), sc).reshape(n_q, S)
+        else:                                              # shared snapshot
+            J, Sp, T = d["lat"].shape
+            rows = d["lat"].reshape(J * Sp, T)[cand.reshape(-1)]
+            qos_s = _qos_2d(rows, sc).reshape(n_q, S)
+        if sc.use_staleness and "age" in d:
+            qos_s = qos_s * staleness_discount(gath(d["age"]), sc.stale_half_life)
+        qos = expand(qos_s)
+    else:
+        qos = jnp.zeros((n_q, W), jnp.float32)
+
+    if sc.use_load and "load" in d:
+        load = expand(load_penalty(gath(d["load"]), sc.load_knee, sc.load_sharp))
+    else:
+        load = jnp.zeros((n_q, W), jnp.float32)
+
+    if sc.use_rtt and ("rtt" in d or "rtt_region" in d):
+        if "rtt_region" in d:
+            ridx = d["region_idx"]
+            rr = jnp.transpose(d["rtt_region"], (1, 0, 2))  # [R, J, s_pad]
+            rr = rr.reshape(rr.shape[0], -1)                # [R, J*s_pad]
+            rows = jnp.take(rr, jnp.maximum(ridx, 0), axis=0)  # [n_q, J*s_pad]
+            rtt_s = jnp.take_along_axis(rows, cand, axis=1)
+            rtt_s = jnp.where((ridx >= 0)[:, None], rtt_s, 0.0)
+        else:
+            rtt_s = gath(d["rtt"])
+        rtt = expand(rtt_penalty(rtt_s, sc.rtt_scale))
+    else:
+        rtt = jnp.zeros((n_q, W), jnp.float32)
+
+    if sc.use_failover and "dead" in d:
+        dead = expand(gath(d["dead"]))
+    else:
+        dead = jnp.zeros((n_q, W), jnp.float32)
+
+    k_final = min(sc.top_k, sc.n_tools)
+    if W < k_final:                                        # keep the merge
+        pad = k_final - W                                  # k identical to
+        sel = jnp.pad(sel, ((0, 0), (0, pad)), constant_values=NEG)
+        val = jnp.pad(val, ((0, 0), (0, pad)), constant_values=NEG)
+        qos = jnp.pad(qos, ((0, 0), (0, pad)))
+        load = jnp.pad(load, ((0, 0), (0, pad)))
+        rtt = jnp.pad(rtt, ((0, 0), (0, pad)))
+        dead = jnp.pad(dead, ((0, 0), (0, pad)))
+        gid = jnp.pad(gid, ((0, 0), (0, pad)))
+    return sel, val, qos, load, rtt, dead, gid
+
+
 def _packed(stage_fn, layout: tuple, sc: _StaticCfg, *extra):
     """Positional-args adapter so optional inputs can run under shard_map
     (which needs one PartitionSpec per positional argument)."""
@@ -489,27 +661,37 @@ def _route_sharded(dyn: dict, *, mesh: Optional[Mesh], sc: _StaticCfg):
     supplied) — a different key set is a different pytree structure, so jit
     re-traces exactly when the mode changes."""
     # -- tiled template scoring (replicated small matmuls + gathers) --
+    # Quantized storage: template weights may live in bf16 on device; the
+    # upcast to f32 is exact (bf16 ⊂ f32), so scoring matches scoring the
+    # rounded-f32 weights bit-for-bit.  All accumulation stays f32.
+    compact2 = sc.compact2 and "tool_doc_map" in dyn
     pre: dict = {}
+    t_full = v_full = nt = None
     if "server_doc_map" in dyn:
-        s_full = _bm25_2d(dyn["q_server"], dyn["w_server_t"], sc)
+        w_server_t = dyn["w_server_t"].astype(jnp.float32)
+        s_full = _bm25_2d(dyn["q_server"], w_server_t, sc)
         pre["s_pre"] = jnp.transpose(
             jnp.take(s_full, dyn["server_doc_map"], axis=1), (1, 0, 2)
         )
     if "tool_doc_map" in dyn:
-        t_full = _bm25_2d(dyn["q_tool"], dyn["w_tool_t"], sc)
-        pre["t_pre"] = jnp.transpose(
-            jnp.take(t_full, dyn["tool_doc_map"], axis=1), (1, 0, 2)
-        )
+        w_tool_t = dyn["w_tool_t"].astype(jnp.float32)
+        t_full = _bm25_2d(dyn["q_tool"], w_tool_t, sc)
         if sc.rerank:
-            v_full = _bm25_2d(dyn["q_rerank"], dyn["w_tool_t"], sc)
-            pre["val_pre"] = jnp.transpose(
-                jnp.take(v_full, dyn["tool_doc_map"], axis=1), (1, 0, 2)
+            v_full = _bm25_2d(dyn["q_rerank"], w_tool_t, sc)
+        if not compact2:
+            pre["t_pre"] = jnp.transpose(
+                jnp.take(t_full, dyn["tool_doc_map"], axis=1), (1, 0, 2)
             )
+            if sc.rerank:
+                pre["val_pre"] = jnp.transpose(
+                    jnp.take(v_full, dyn["tool_doc_map"], axis=1), (1, 0, 2)
+                )
     if "lat_t" in dyn:
-        nt = _qos_2d(dyn["lat_t"], sc)[None, :]            # [1, M_t]
-        pre["qos_pre"] = jnp.transpose(
-            jnp.take(nt, dyn["tel_map"], axis=1), (1, 0, 2)
-        )
+        nt = _qos_2d(dyn["lat_t"].astype(jnp.float32), sc)  # [M_t]
+        if not compact2:
+            pre["qos_pre"] = jnp.transpose(
+                jnp.take(nt[None, :], dyn["tel_map"], axis=1), (1, 0, 2)
+            )
 
     # -- stage 1: shard-local server top-s --
     layout1, specs1 = [], []
@@ -537,65 +719,74 @@ def _route_sharded(dyn: dict, *, mesh: Optional[Mesh], sc: _StaticCfg):
     cand_gids = jnp.take_along_axis(_flatten_shards(gid_sh), pos, axis=-1)
 
     # -- stage 2: shard-local tool candidates + telemetry terms --
-    layout2, specs2 = [], []
-
-    def add2(name, spec):
-        val = pre.get(name, dyn.get(name))
-        if val is not None:
-            layout2.append(name)
-            specs2.append(spec)
-
-    if "t_pre" in pre:
-        add2("t_pre", _SH3)
+    if compact2:
+        # candidate-compacted stage 2: replicated gathers over the ≤
+        # top_s * k_slot candidate tools only — no full-tool-axis mask,
+        # gather or top-k anywhere (see _stage2_compact for the parity
+        # argument).  Runs outside shard_map, like the merges.
+        sel, val, qos, load, rtt, dead, gid = _stage2_compact(
+            dyn, t_full, v_full, nt, cand_gids, sc
+        )
     else:
-        add2("q_tool", _REP2)
-        add2("w_tool", _SH3)
-    if sc.rerank and "t_pre" not in pre:
-        add2("q_rerank", _REP2)
-    if "val_pre" in pre:
-        add2("val_pre", _SH3)
-    add2("tool_host_global", _SH2)
-    add2("tool_host_local", _SH2)
-    add2("tool_gid", _SH2)
-    add2("tool_valid", _SH2)
-    if "qos_pre" in pre:
-        add2("qos_pre", _SH3)
-    elif "lat" in dyn:
-        add2("lat", _SH4 if dyn["lat"].ndim == 4 else _SH3)
-    add2("load", _SH3)
-    add2("age", _SH3)
-    add2("rtt", _SH3)
-    add2("rtt_region", _SH3)
-    add2("region_idx", _REP1)
-    add2("dead", _SH3)
-    arrays2 = [pre.get(n, dyn.get(n)) for n in layout2]
+        layout2, specs2 = [], []
 
-    def f2(*arrs):
-        d = dict(zip(tuple(layout2), arrs))
-        return _stage2_stacked(d, cand_gids, sc)
+        def add2(name, spec):
+            val = pre.get(name, dyn.get(name))
+            if val is not None:
+                layout2.append(name)
+                specs2.append(spec)
 
-    if mesh is not None:
-        # candidate set is replicated input to every shard
-        layout2_m = tuple(layout2) + ("cand_gids",)
-        specs2_m = list(specs2) + [_REP2]
+        if "t_pre" in pre:
+            add2("t_pre", _SH3)
+        else:
+            add2("q_tool", _REP2)
+            add2("w_tool", _SH3)
+        if sc.rerank and "t_pre" not in pre:
+            add2("q_rerank", _REP2)
+        if "val_pre" in pre:
+            add2("val_pre", _SH3)
+        add2("tool_host_global", _SH2)
+        add2("tool_host_local", _SH2)
+        add2("tool_gid", _SH2)
+        add2("tool_valid", _SH2)
+        if "qos_pre" in pre:
+            add2("qos_pre", _SH3)
+        elif "lat" in dyn:
+            add2("lat", _SH4 if dyn["lat"].ndim == 4 else _SH3)
+        add2("load", _SH3)
+        add2("age", _SH3)
+        add2("rtt", _SH3)
+        add2("rtt_region", _SH3)
+        add2("region_idx", _REP1)
+        add2("dead", _SH3)
+        arrays2 = [pre.get(n, dyn.get(n)) for n in layout2]
 
-        def f2m(*arrs):
-            d = dict(zip(layout2_m, arrs))
-            return _stage2_stacked(d, d["cand_gids"], sc)
+        def f2(*arrs):
+            d = dict(zip(tuple(layout2), arrs))
+            return _stage2_stacked(d, cand_gids, sc)
 
-        outs = _run_stage(f2m, mesh, arrays2 + [cand_gids], specs2_m, 7)
-    else:
-        outs = f2(*arrays2)
-    sel_c, val_c, qos_c, load_c, rtt_c, dead_c, gid_c = outs
+        if mesh is not None:
+            # candidate set is replicated input to every shard
+            layout2_m = tuple(layout2) + ("cand_gids",)
+            specs2_m = list(specs2) + [_REP2]
 
-    # -- merge 2: all-gather candidates, fused softmax/fusion/argmax --
-    sel = _flatten_shards(sel_c)
-    val = _flatten_shards(val_c)
-    qos = _flatten_shards(qos_c)
-    load = _flatten_shards(load_c)
-    rtt = _flatten_shards(rtt_c)
-    dead = _flatten_shards(dead_c)
-    gid = _flatten_shards(gid_c)
+            def f2m(*arrs):
+                d = dict(zip(layout2_m, arrs))
+                return _stage2_stacked(d, d["cand_gids"], sc)
+
+            outs = _run_stage(f2m, mesh, arrays2 + [cand_gids], specs2_m, 7)
+        else:
+            outs = f2(*arrays2)
+        sel_c, val_c, qos_c, load_c, rtt_c, dead_c, gid_c = outs
+
+        # -- merge 2: all-gather candidates before the fused tail --
+        sel = _flatten_shards(sel_c)
+        val = _flatten_shards(val_c)
+        qos = _flatten_shards(qos_c)
+        load = _flatten_shards(load_c)
+        rtt = _flatten_shards(rtt_c)
+        dead = _flatten_shards(dead_c)
+        gid = _flatten_shards(gid_c)
 
     net_active = sc.use_network and (
         "lat" in dyn or "lat_t" in dyn
@@ -669,6 +860,7 @@ class ShardedRoutingEngine:
         use_kernels: Optional[bool] = None,
         interpret: Optional[bool] = None,
         index=None,
+        compact_stage2: Optional[bool] = None,
     ):
         if use_kernels is None:
             use_kernels = jax.default_backend() == "tpu"
@@ -704,16 +896,59 @@ class ShardedRoutingEngine:
         self._tool_valid = jnp.asarray(self.plan.tool_valid)
         self._tool_host_g = jnp.asarray(self.plan.tool_host_global)
         self._tool_host_l = jnp.asarray(self.plan.tool_host_local)
+        self.compact_stage2 = False
+        k_slot = 0
         if self.tiled:
-            self._w_server_t = jnp.asarray(index.server_corpus.weights)
-            self._w_tool_t = jnp.asarray(index.tool_corpus.weights)
+            # quantized storage: bf16-rounded template weights live on
+            # device in bf16 (half the HBM traffic per route); the
+            # pipeline's f32 upcast is exact, so scores are identical to
+            # scoring the rounded weights in f32
+            w_dtype = (
+                jnp.bfloat16
+                if getattr(index, "weights_dtype", "float32")
+                in ("bfloat16", "bf16")
+                else jnp.float32
+            )
+            self._w_server_t = jnp.asarray(
+                index.server_corpus.weights, w_dtype
+            )
+            self._w_tool_t = jnp.asarray(index.tool_corpus.weights, w_dtype)
             self._server_doc_sh = jnp.asarray(
                 index.server_doc_map[self.plan.server_gid]
             )
             self._tool_doc_sh = jnp.asarray(
                 index.tool_doc_map[self.plan.tool_gid]
             )
+            # candidate-compacted stage-2 tables: first global tool id,
+            # tool count and first tool-doc id per server.  The compacted
+            # path needs every server to host >= 1 tool and the candidate
+            # set to be free of pad/duplicate gids (n_servers >= top_s) —
+            # outside those preconditions fall back to the full stage-2.
+            ts = np.asarray(index.tool_server, np.int64)
+            counts = np.bincount(ts, minlength=self.n_servers)
+            eligible = (
+                int(counts.min()) >= 1 and self.n_servers >= cfg.top_s
+            )
+            if compact_stage2 is None:
+                self.compact_stage2 = eligible
+            elif compact_stage2:
+                assert eligible, (
+                    "compact_stage2 requires every server to host >= 1 "
+                    "tool and n_servers >= cfg.top_s"
+                )
+                self.compact_stage2 = True
+            if self.compact_stage2:
+                starts = np.cumsum(counts) - counts
+                self._tool_start_g = jnp.asarray(starts, jnp.int32)
+                self._tool_count_g = jnp.asarray(counts, jnp.int32)
+                self._tool_doc0_g = jnp.asarray(
+                    np.asarray(index.tool_doc_map)[starts], jnp.int32
+                )
+                k_slot = int(counts.max())
         else:
+            assert not compact_stage2, (
+                "compact_stage2 requires a TiledFleetIndex"
+            )
             ws = np.asarray(index.server_corpus.weights)
             wt = np.asarray(index.tool_corpus.weights)
             self._w_server_sh = jnp.asarray(ws[self.plan.server_gid])
@@ -736,6 +971,7 @@ class ShardedRoutingEngine:
             use_rtt=self.uses_rtt,
             rerank=self.rerank, use_kernels=use_kernels,
             interpret=interpret, qos_params=cfg.qos,
+            compact2=self.compact_stage2, k_slot=k_slot,
         )
 
     def _resolve_mesh(self, mesh):
@@ -843,6 +1079,10 @@ class ShardedRoutingEngine:
             dyn["w_tool_t"] = self._w_tool_t
             dyn["server_doc_map"] = self._server_doc_sh
             dyn["tool_doc_map"] = self._tool_doc_sh
+            if self.compact_stage2:
+                dyn["tool_start_g"] = self._tool_start_g
+                dyn["tool_count_g"] = self._tool_count_g
+                dyn["tool_doc0_g"] = self._tool_doc0_g
         else:
             dyn["w_server"] = self._w_server_sh
             dyn["w_tool"] = self._w_tool_sh

@@ -74,6 +74,7 @@ def ewma(lat: jnp.ndarray, alpha: float) -> jnp.ndarray:
     the (1-alpha)^T carry of the first sample) so it is O(T) with no scan —
     this is the formulation the Pallas kernel reuses.
     """
+    lat = jnp.asarray(lat, jnp.float32)
     T = lat.shape[-1]
     k = jnp.arange(T - 1, -1, -1, dtype=jnp.float32)  # age of each sample
     w = alpha * (1.0 - alpha) ** k
@@ -96,7 +97,14 @@ def base_score(ewma_ms: jnp.ndarray, p: QosParams = DEFAULT_QOS) -> jnp.ndarray:
 
 
 def penalties(lat: jnp.ndarray, p: QosParams = DEFAULT_QOS):
-    """Compute (ewma, P_high, P_trend, P_outage, P_instab) for L [..., T]."""
+    """Compute (ewma, P_high, P_trend, P_outage, P_instab) for L [..., T].
+
+    Upcasts at entry: quantized (bf16) telemetry windows are widened to
+    f32 *exactly* before any arithmetic, so every accumulation below runs
+    in f32 regardless of the storage dtype — the quantization contract
+    (rounding happens once, at the ring; math never re-rounds).
+    """
+    lat = jnp.asarray(lat, jnp.float32)
     T = lat.shape[-1]
     m = _window_mask(T, p.window)
     n_w = jnp.sum(m)
@@ -128,7 +136,12 @@ def penalties(lat: jnp.ndarray, p: QosParams = DEFAULT_QOS):
 
 
 def network_score(lat: jnp.ndarray, p: QosParams = DEFAULT_QOS) -> jnp.ndarray:
-    """Eq. 7 + offline clamp.  lat [..., T] -> N [...] in [-1, 1]."""
+    """Eq. 7 + offline clamp.  lat [..., T] -> N [...] in [-1, 1].
+
+    Accepts any float storage dtype (f32 or a quantized bf16 window);
+    all math runs in f32 (see `penalties`).
+    """
+    lat = jnp.asarray(lat, jnp.float32)
     ew, p_high, p_trend, p_outage, p_instab = penalties(lat, p)
     base = base_score(ew, p)
     score = (

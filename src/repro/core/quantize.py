@@ -1,0 +1,88 @@
+"""Deterministic operand quantization for the routing hot path.
+
+The mega-fleet scoring chain is bandwidth-bound: the tiled corpus weights
+and the telemetry windows dominate bytes moved per route, while every
+downstream reduction (BM25 matmul, EWMA, softmax) accumulates in f32.
+This module provides the *rounding* half of that contract:
+
+* ``quantize_bf16`` — round f32 values to the nearest bfloat16
+  (round-to-nearest-even) and return them widened back to f32.  The
+  result is exactly representable in bf16, so storing the array as
+  bf16 and upcasting later reproduces the same floats bit-for-bit.
+* ``quantize_int8_rows`` / ``dequantize_int8_rows`` — symmetric int8
+  with one f32 scale per row (per corpus template / per telemetry
+  profile), ``scale = max_abs / 127``.
+
+The parity contract (docs/benchmarks.md "Quantized scoring carve-out"):
+quantization happens ONCE, at index/telemetry build time, so every
+routing path — scalar oracle, batched jnp, Pallas kernels, mesh-sharded
+— consumes the *identical* rounded operands and therefore makes
+argmax-identical decisions by construction.  Nothing re-rounds mid-chain:
+all arithmetic after the rounding step is f32 (``core/qos.py`` and the
+kernels upcast at entry), so there is no accumulation-dtype drift between
+paths, only the documented one-time operand rounding versus fp32.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+try:  # ml_dtypes ships with jax; guard anyway so numpy-only users survive
+    import ml_dtypes
+
+    _BF16 = np.dtype(ml_dtypes.bfloat16)
+except ImportError:  # pragma: no cover - ml_dtypes is baked into the image
+    _BF16 = None
+
+WEIGHT_DTYPES = ("float32", "bfloat16", "int8")
+
+
+def quantize_bf16(x: np.ndarray) -> np.ndarray:
+    """Round f32 → nearest bf16 (ties-to-even), widened back to f32.
+
+    The output is a f32 array whose every value is exactly representable
+    in bfloat16 — the canonical "stored as bf16" form used across the
+    routing paths.  Special values (±inf, nan) survive the round trip.
+    """
+    x = np.asarray(x, np.float32)
+    if _BF16 is not None:
+        return x.astype(_BF16).astype(np.float32)
+    # fallback: manual RNE via the upper 16 bits of the f32 encoding
+    bits = x.view(np.uint32)
+    rounded = (bits + 0x7FFF + ((bits >> 16) & 1)).astype(np.uint32)
+    out = (rounded & np.uint32(0xFFFF0000)).view(np.float32)
+    return np.where(np.isfinite(x), out, x).astype(np.float32)
+
+
+def quantize_int8_rows(x: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+    """Symmetric per-row int8: returns ``(q, scales)`` with
+    ``q ∈ [-127, 127]`` (int8) and ``scales`` f32 of shape ``x.shape[:-1]``.
+
+    ``scale = max|row| / 127`` (1.0 for all-zero rows so dequantization
+    is exact zeros); rounding is banker's rounding via ``np.rint``.
+    """
+    x = np.asarray(x, np.float32)
+    max_abs = np.max(np.abs(x), axis=-1)
+    scales = np.where(max_abs > 0, max_abs / 127.0, 1.0).astype(np.float32)
+    q = np.rint(x / scales[..., None]).astype(np.int8)
+    return q, scales
+
+
+def dequantize_int8_rows(q: np.ndarray, scales: np.ndarray) -> np.ndarray:
+    """Inverse of :func:`quantize_int8_rows` (f32 output)."""
+    return (q.astype(np.float32) * np.asarray(scales, np.float32)[..., None])
+
+
+def round_weights(x: np.ndarray, dtype: str) -> np.ndarray:
+    """Round an operand array per the storage-dtype contract.
+
+    ``dtype`` ∈ ``WEIGHT_DTYPES``.  Always returns f32 *values*: callers
+    that want physical bf16/int8 storage re-pack losslessly (the values
+    are already exactly representable at the target precision).
+    """
+    if dtype in ("float32", "f32", None):
+        return np.asarray(x, np.float32)
+    if dtype in ("bfloat16", "bf16"):
+        return quantize_bf16(x)
+    if dtype == "int8":
+        return dequantize_int8_rows(*quantize_int8_rows(x))
+    raise ValueError(f"unknown weights dtype {dtype!r}; use one of {WEIGHT_DTYPES}")

@@ -19,6 +19,7 @@ from repro.kernels import bm25_score as _bm25
 from repro.kernels import decode_attention as _dec
 from repro.kernels import flash_attention as _fa
 from repro.kernels import qos_score as _qos
+from repro.kernels import score_fuse as _scf
 from repro.kernels import select_fuse as _sel
 
 
@@ -154,6 +155,100 @@ def fused_select(
         sel, val, qos, load, rtt, dead,
         k=k, alpha=float(alpha), beta=float(beta), gamma=float(gamma),
         delta=float(delta), temp=float(temp),
+        per_query_qos=per_query_qos, per_query_load=per_query_load,
+        per_query_rtt=per_query_rtt, per_query_dead=per_query_dead,
+        interpret=_auto_interpret(interpret),
+    )
+    return idx[:n_q], c[:n_q], n[:n_q], s[:n_q]
+
+
+# ---------------------------------------------------------------------------
+# Single-pass fused scoring (stage-2 BM25 matmul + candidate mask + top-k +
+# softmax + QoS fusion + argmax — see kernels/score_fuse)
+# ---------------------------------------------------------------------------
+
+def fused_score_select(
+    q_tool: jax.Array,        # [n_q, V] stage-2 query term counts (f32/bf16)
+    w_tool: jax.Array,        # [n_tools, V] tool corpus weights (f32/bf16)
+    tool_server: jax.Array,   # [n_tools] i32 host server per tool
+    cand_servers: jax.Array,  # [n_q, top_s] i32 stage-1 candidates
+    tool_qos: jax.Array,      # [n_q, n_tools] or [n_tools] per-tool N
+    tool_load: Optional[jax.Array] = None,
+    tool_dead: Optional[jax.Array] = None,
+    q_rerank: Optional[jax.Array] = None,   # [n_q, V] (RerankRAG)
+    *,
+    k: int,
+    alpha: float,
+    beta: float,
+    gamma: float = 0.0,
+    temp: float = 1.0,
+    tool_rtt: Optional[jax.Array] = None,
+    delta: float = 0.0,
+    interpret: Optional[bool] = None,
+):
+    """Winning (tool_idx, C, N, S) per query, never materializing the
+    [n_q, n_tools] stage-2 score matrix: the BM25 matmul, candidate-server
+    mask, streaming top-k, softmax, QoS/load/RTT fusion and argmax run as
+    ONE Pallas pass over tool stripes (with ragged stripe-skipping for
+    stripes hosting no candidate tools).  Decision parity with
+    `bm25_scores` + `fused_select` / `kernels.ref.fused_select_ref`; bf16
+    operands are upcast to f32 exactly at block load (the quantized
+    carve-out in docs/benchmarks.md)."""
+    n_q, V = q_tool.shape
+    n_t, top_s = w_tool.shape[0], cand_servers.shape[1]
+    k = min(k, n_t)
+    assert k <= _scf.K_MAX and top_s <= 128
+
+    q = _pad_to(_pad_to(jnp.asarray(q_tool), 1, 128), 0, _scf.QUERY_TILE)
+    qr = q if q_rerank is None else _pad_to(
+        _pad_to(jnp.asarray(q_rerank), 1, 128), 0, _scf.QUERY_TILE
+    )
+    w = _pad_to(_pad_to(jnp.asarray(w_tool), 1, 128), 0, _scf.STRIPE)
+    T_pad = w.shape[0]
+    # gids (and their retire/sentinel offsets) ride in f32 lanes: exact
+    # only below the 24-bit integer horizon
+    assert T_pad + _scf.K_MAX + _scf.STRIPE < 2 ** 24
+    host = _pad_to(
+        jnp.asarray(tool_server, jnp.int32)[None, :], 1, _scf.STRIPE, value=-1
+    )
+    cand = _pad_to(
+        jnp.asarray(cand_servers, jnp.int32), 0, _scf.QUERY_TILE, value=-1
+    )
+
+    def _row_arg(x):
+        if x is None:
+            return jnp.zeros((1, n_t), jnp.float32), False
+        x = jnp.asarray(x, jnp.float32)
+        per_query = x.ndim == 2
+        return (x if per_query else x[None, :]), per_query
+
+    def _pad_rows(x, per_query):
+        x = _pad_to(x, 1, _scf.STRIPE)
+        return _pad_to(x, 0, _scf.QUERY_TILE) if per_query else x
+
+    qos, per_query_qos = _row_arg(tool_qos)
+    load, per_query_load = _row_arg(tool_load)
+    rtt, per_query_rtt = _row_arg(tool_rtt)
+    dead, per_query_dead = _row_arg(tool_dead)
+    qos = _pad_rows(qos, per_query_qos)
+    load = _pad_rows(load, per_query_load)
+    rtt = _pad_rows(rtt, per_query_rtt)
+    dead = _pad_rows(dead, per_query_dead)
+
+    # stripe-liveness flags [n_q_tiles, n_stripes]: does any query in the
+    # tile have a candidate server hosting a tool in the stripe?
+    n_st = T_pad // _scf.STRIPE
+    hp = host.reshape(1, n_st, _scf.STRIPE, 1)
+    live = jnp.any(hp == cand[:, None, None, :], axis=(2, 3))
+    flags = jnp.any(
+        live.reshape(-1, _scf.QUERY_TILE, n_st), axis=1
+    ).astype(jnp.int32)
+
+    idx, c, n, s = _scf.fused_score_select_pallas(
+        q, qr, w, host, cand, qos, load, rtt, dead, flags,
+        k=k, top_s=top_s, alpha=float(alpha), beta=float(beta),
+        gamma=float(gamma), delta=float(delta), temp=float(temp),
+        rerank=q_rerank is not None,
         per_query_qos=per_query_qos, per_query_load=per_query_load,
         per_query_rtt=per_query_rtt, per_query_dead=per_query_dead,
         interpret=_auto_interpret(interpret),

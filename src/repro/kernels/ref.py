@@ -71,6 +71,44 @@ def fused_select_ref(
     return take(top_i), take(c), take(n), take(s)
 
 
+def fused_score_select_ref(
+    q_tool: jax.Array,        # [n_q, V]
+    w_tool: jax.Array,        # [n_tools, V]
+    tool_server: jax.Array,   # [n_tools] i32
+    cand_servers: jax.Array,  # [n_q, top_s] i32
+    tool_qos: jax.Array,
+    tool_load: jax.Array | None = None,
+    tool_dead: jax.Array | None = None,
+    q_rerank: jax.Array | None = None,
+    *,
+    k: int,
+    alpha: float,
+    beta: float,
+    gamma: float = 0.0,
+    temp: float = 1.0,
+    tool_rtt: jax.Array | None = None,
+    delta: float = 0.0,
+):
+    """Pure-jnp oracle for kernels/score_fuse: materialize the full
+    stage-2 score matrix (BM25 matmul + candidate-server mask) and feed
+    it to `fused_select_ref` — exactly the unfused two-pass pipeline the
+    single-pass kernel replaces."""
+    t = q_tool.astype(jnp.float32) @ w_tool.astype(jnp.float32).T
+    in_cand = jnp.any(
+        tool_server[None, None, :] == cand_servers[:, :, None], axis=1
+    )                                                        # [n_q, n_tools]
+    sel = jnp.where(in_cand, t, NEG)
+    if q_rerank is not None:
+        val = q_rerank.astype(jnp.float32) @ w_tool.astype(jnp.float32).T
+    else:
+        val = sel
+    return fused_select_ref(
+        sel, val, tool_qos, tool_load, tool_dead,
+        k=k, alpha=alpha, beta=beta, gamma=gamma, temp=temp,
+        tool_rtt=tool_rtt, delta=delta,
+    )
+
+
 def repeat_kv(k: jax.Array, n_rep: int) -> jax.Array:
     """[B, Hkv, S, D] -> [B, Hkv*n_rep, S, D] (GQA expansion)."""
     if n_rep == 1:

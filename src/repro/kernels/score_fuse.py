@@ -1,0 +1,309 @@
+"""Single-pass fused SONAR scoring Pallas kernel (TPU target).
+
+`select_fuse` fuses the *tail* of the routing decision but still consumes a
+pre-materialized [n_q, n_tools] score matrix from a separate BM25 kernel
+pass plus a separately materialized candidate mask.  This kernel fuses the
+whole stage-2 chain into ONE pass over tool stripes:
+
+    BM25 matmul (Eq. 3)  ->  candidate-server mask (Eq. 2/4)
+      ->  streaming top-k  ->  softmax expertise (Eq. 5)
+      ->  QoS / load / RTT fusion (Eq. 8)  ->  argmax (Eq. 9)
+
+so the [n_q, n_tools] score matrix never exists in HBM: each
+(query-tile, tool-stripe) block of scores is produced by the MXU, masked,
+and folded into a running per-query top-k held in VMEM scratch, carried
+across the stripe grid axis.  Operands may arrive quantized (bf16 query /
+weight / telemetry-derived rows); they are upcast to f32 *exactly* at
+block load and every accumulation (dot products, softmax, fusion) runs in
+f32 — the quantization carve-out documented in docs/benchmarks.md.
+
+Ragged tile-skipping: a host-computed [n_query_tiles, n_stripes] flag
+array marks stripes that contain no candidate-server tools for any query
+in the tile (at top_s candidates per query, almost all stripes at fleet
+scale).  Skipped stripes cost one flag load and zero MXU/VPU work —
+mostly-dead or all-NEG shards are free.
+
+Selection semantics replicate `kernels.ref.fused_select_ref` (and hence
+the scalar `Router.select`): the running top-k orders candidates by
+(score desc, global tool id asc) — exactly ``lax.top_k``'s tie rule over
+the full tool axis — because each stripe merge re-peels the combined
+(scratch ∪ stripe) pool with a min-global-id tie-break; scratch entries
+from earlier stripes always carry lower gids than the current stripe, so
+stability is preserved.  The softmax / fusion / argmax finale mirrors
+`select_fuse._select_kernel` term for term.  One caveat: a query whose
+candidate servers host zero tools (every stripe skipped) returns tool 0
+with neutral (zero) metadata — reachable only on degenerate pools where
+stage-1 candidates have no tools at all.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+QUERY_TILE = 8      # f32 sublane granularity
+STRIPE = 512        # tool-axis stripe width (lanes)
+K_MAX = 128         # running top-k scratch width (one lane register row)
+NEG = -1e30         # finite -inf stand-in
+
+
+def _score_kernel(
+    q_ref, qr_ref, w_ref, host_ref, cand_ref,
+    qos_ref, load_ref, rtt_ref, dead_ref, flag_ref,
+    idx_ref, c_ref, n_ref, s_ref,
+    sel_s, val_s, qos_s, load_s, rtt_s, dead_s, gid_s,
+    *, k: int, n_stripes: int, t_total: int, top_s: int,
+    alpha: float, beta: float, gamma: float, delta: float, temp: float,
+    rerank: bool,
+):
+    j = pl.program_id(1)
+    QT = QUERY_TILE
+    lane = jax.lax.broadcasted_iota(jnp.float32, (QT, K_MAX), 1)
+
+    # --- scratch init: empty running top-k (NEG scores, sentinel gids
+    # above every real tool id so they lose every min-gid tie-break) ---
+    @pl.when(j == 0)
+    def _init():
+        sel_s[...] = jnp.full((QT, K_MAX), NEG, jnp.float32)
+        val_s[...] = jnp.full((QT, K_MAX), NEG, jnp.float32)
+        qos_s[...] = jnp.zeros((QT, K_MAX), jnp.float32)
+        load_s[...] = jnp.zeros((QT, K_MAX), jnp.float32)
+        rtt_s[...] = jnp.zeros((QT, K_MAX), jnp.float32)
+        dead_s[...] = jnp.zeros((QT, K_MAX), jnp.float32)
+        gid_s[...] = float(t_total) + lane
+
+    # --- stripe merge: only when the stripe hosts candidate tools ---
+    @pl.when(flag_ref[0, 0] > 0)
+    def _merge():
+        q = q_ref[...].astype(jnp.float32)                   # [QT, V]
+        w = w_ref[...].astype(jnp.float32)                   # [TS, V]
+        scores = jax.lax.dot_general(
+            q, w, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )                                                    # [QT, TS]
+        TS = scores.shape[1]
+        host = host_ref[...].astype(jnp.int32)               # [1, TS]
+        cand = cand_ref[...].astype(jnp.int32)               # [QT, top_s]
+        member = jnp.zeros((QT, TS), jnp.bool_)
+        for s_i in range(top_s):
+            member = member | (host == cand[:, s_i:s_i + 1])
+        stripe_sel = jnp.where(member, scores, NEG)
+        if rerank:
+            qr = qr_ref[...].astype(jnp.float32)
+            stripe_val = jax.lax.dot_general(
+                qr, w, (((1,), (1,)), ((), ())),
+                preferred_element_type=jnp.float32,
+            )
+        else:
+            stripe_val = stripe_sel
+        stripe_lane = jax.lax.broadcasted_iota(jnp.float32, (QT, TS), 1)
+        stripe_gid = float(STRIPE) * j.astype(jnp.float32) + stripe_lane
+
+        def row(ref):                                        # [QT|1, TS]
+            return ref[...].astype(jnp.float32)
+
+        comb_sel = jnp.concatenate([sel_s[...], stripe_sel], axis=1)
+        comb_val = jnp.concatenate([val_s[...], stripe_val], axis=1)
+        comb_qos = jnp.concatenate(
+            [qos_s[...], jnp.broadcast_to(row(qos_ref), (QT, TS))], axis=1
+        )
+        comb_load = jnp.concatenate(
+            [load_s[...], jnp.broadcast_to(row(load_ref), (QT, TS))], axis=1
+        )
+        comb_rtt = jnp.concatenate(
+            [rtt_s[...], jnp.broadcast_to(row(rtt_ref), (QT, TS))], axis=1
+        )
+        comb_dead = jnp.concatenate(
+            [dead_s[...], jnp.broadcast_to(row(dead_ref), (QT, TS))], axis=1
+        )
+        comb_gid = jnp.concatenate(
+            [gid_s[...], jnp.broadcast_to(stripe_gid, (QT, TS))], axis=1
+        )
+        big = float(t_total + K_MAX + STRIPE)
+
+        # peel the combined pool k times: (score desc, gid asc) order —
+        # gids are unique across scratch ∪ stripe (stripes are disjoint
+        # ranges; scratch holds earlier stripes' gids or sentinels), so
+        # the min-gid one-hot selects exactly one entry per step
+        news = []
+        for _ in range(k):
+            m = jnp.max(comb_sel, axis=-1, keepdims=True)    # [QT, 1]
+            is_max = comb_sel >= m
+            g = jnp.min(jnp.where(is_max, comb_gid, big), axis=-1,
+                        keepdims=True)
+            onehot = (comb_gid == g).astype(jnp.float32)     # [QT, C]
+            news.append((
+                m,
+                jnp.sum(comb_val * onehot, axis=-1, keepdims=True),
+                jnp.sum(comb_qos * onehot, axis=-1, keepdims=True),
+                jnp.sum(comb_load * onehot, axis=-1, keepdims=True),
+                jnp.sum(comb_rtt * onehot, axis=-1, keepdims=True),
+                jnp.sum(comb_dead * onehot, axis=-1, keepdims=True),
+                g,
+            ))
+            # retire the peeled entry from BOTH pools: score AND gid —
+            # leaving the gid live would let a later all-NEG tie re-pick
+            # it, duplicating gids in scratch and double-counting the
+            # gid-keyed one-hot sums on the next stripe merge
+            comb_sel = jnp.where(onehot > 0.0, NEG, comb_sel)
+            comb_gid = jnp.where(onehot > 0.0, big, comb_gid)
+
+        # write the re-sorted top-k back into scratch lanes [0, k)
+        def pack(vals, fill):
+            acc = jnp.where(lane >= float(k), fill, 0.0)
+            for slot, v in enumerate(vals):
+                acc = acc + jnp.where(lane == float(slot), v, 0.0)
+            return acc
+
+        sel_s[...] = pack([t[0] for t in news], NEG)
+        val_s[...] = pack([t[1] for t in news], NEG)
+        qos_s[...] = pack([t[2] for t in news], 0.0)
+        load_s[...] = pack([t[3] for t in news], 0.0)
+        rtt_s[...] = pack([t[4] for t in news], 0.0)
+        dead_s[...] = pack([t[5] for t in news], 0.0)
+        gid_s[...] = pack([t[6] for t in news], float(t_total)) + jnp.where(
+            lane >= float(k), lane, 0.0
+        )
+
+    # --- finale on the last stripe: softmax + fusion + argmax over the
+    # k running candidates (mirrors select_fuse._select_kernel) ---
+    @pl.when(j == n_stripes - 1)
+    def _finale():
+        cand_val, cand_qos, cand_load, cand_rtt, cand_dead, cand_idx = (
+            [], [], [], [], [], []
+        )
+        for slot in range(k):
+            onehot = (lane == float(slot)).astype(jnp.float32)
+            m = jnp.sum(sel_s[...] * onehot, axis=-1, keepdims=True)
+            v = jnp.sum(val_s[...] * onehot, axis=-1, keepdims=True)
+            valid = m > NEG / 2.0
+            cand_val.append(jnp.where(valid, v, NEG))
+            cand_qos.append(jnp.sum(qos_s[...] * onehot, axis=-1,
+                                    keepdims=True))
+            cand_load.append(jnp.sum(load_s[...] * onehot, axis=-1,
+                                     keepdims=True))
+            cand_rtt.append(jnp.sum(rtt_s[...] * onehot, axis=-1,
+                                    keepdims=True))
+            cand_dead.append(jnp.sum(dead_s[...] * onehot, axis=-1,
+                                     keepdims=True))
+            cand_idx.append(jnp.sum(gid_s[...] * onehot, axis=-1,
+                                    keepdims=True))
+
+        vmax = cand_val[0]
+        for v in cand_val[1:]:
+            vmax = jnp.maximum(vmax, v)
+        exps = [jnp.exp((v - vmax) / temp) for v in cand_val]
+        denom = exps[0]
+        for e in exps[1:]:
+            denom = denom + e
+        denom = jnp.maximum(denom, 1e-30)
+
+        best_s = jnp.full((QT, 1), NEG, jnp.float32)
+        best_c = exps[0] / denom
+        best_n = cand_qos[0]
+        best_i = cand_idx[0]
+        for v, e, n, u, r, d, i in zip(
+            cand_val, exps, cand_qos, cand_load, cand_rtt, cand_dead,
+            cand_idx,
+        ):
+            c = e / denom
+            s = alpha * c + beta * n - gamma * u - delta * r
+            s = jnp.where(v > NEG / 2.0, s, NEG)
+            s = jnp.where(d > 0.0, NEG, s)
+            take = s > best_s
+            best_c = jnp.where(take, c, best_c)
+            best_n = jnp.where(take, n, best_n)
+            best_i = jnp.where(take, i, best_i)
+            best_s = jnp.where(take, s, best_s)
+
+        # all-stripes-skipped rows still hold the sentinel gid: clamp to
+        # tool 0, matching np.argmax over an all--inf vector
+        best_i = jnp.where(best_i >= float(t_total), 0.0, best_i)
+        idx_ref[...] = best_i.astype(jnp.int32)
+        c_ref[...] = best_c
+        n_ref[...] = best_n
+        s_ref[...] = best_s
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "k", "top_s", "alpha", "beta", "gamma", "delta", "temp",
+        "rerank", "per_query_qos", "per_query_load", "per_query_rtt",
+        "per_query_dead", "interpret",
+    ),
+)
+def fused_score_select_pallas(
+    q: jax.Array,      # [n_q_pad, V_pad] f32/bf16 stage-2 query counts
+    qr: jax.Array,     # [n_q_pad, V_pad] rerank counts (== q when unused)
+    w: jax.Array,      # [T_pad, V_pad] f32/bf16 tool weights
+    host: jax.Array,   # [1, T_pad] i32 host server per tool (-1 = pad)
+    cand: jax.Array,   # [n_q_pad, top_s] i32 candidate servers (-1 = pad)
+    qos: jax.Array,    # [n_q_pad or 1, T_pad] f32 per-tool N
+    load: jax.Array,   # [n_q_pad or 1, T_pad] f32 per-tool U
+    rtt: jax.Array,    # [n_q_pad or 1, T_pad] f32 per-tool R
+    dead: jax.Array,   # [n_q_pad or 1, T_pad] f32 failover mask
+    flags: jax.Array,  # [n_q_pad // QUERY_TILE, n_stripes] i32 stripe-live
+    *,
+    k: int,
+    top_s: int,
+    alpha: float,
+    beta: float,
+    gamma: float,
+    delta: float,
+    temp: float,
+    rerank: bool,
+    per_query_qos: bool,
+    per_query_load: bool,
+    per_query_rtt: bool,
+    per_query_dead: bool,
+    interpret: bool = False,
+):
+    n_q, V_pad = q.shape
+    T_pad = w.shape[0]
+    assert n_q % QUERY_TILE == 0 and T_pad % STRIPE == 0
+    assert V_pad % 128 == 0 and 0 < k <= K_MAX
+    n_stripes = T_pad // STRIPE
+    grid = (n_q // QUERY_TILE, n_stripes)
+
+    def _row_spec(per_query: bool) -> pl.BlockSpec:
+        return (
+            pl.BlockSpec((QUERY_TILE, STRIPE), lambda i, j: (i, j))
+            if per_query
+            else pl.BlockSpec((1, STRIPE), lambda i, j: (0, j))
+        )
+
+    out_spec = pl.BlockSpec((QUERY_TILE, 1), lambda i, j: (i, 0))
+    out_shape = jax.ShapeDtypeStruct((n_q, 1), jnp.float32)
+    scratch = [pltpu.VMEM((QUERY_TILE, K_MAX), jnp.float32)] * 7
+    idx, c, n, s = pl.pallas_call(
+        functools.partial(
+            _score_kernel, k=k, n_stripes=n_stripes, t_total=T_pad,
+            top_s=top_s, alpha=alpha, beta=beta, gamma=gamma, delta=delta,
+            temp=temp, rerank=rerank,
+        ),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((QUERY_TILE, V_pad), lambda i, j: (i, 0)),
+            pl.BlockSpec((QUERY_TILE, V_pad), lambda i, j: (i, 0)),
+            pl.BlockSpec((STRIPE, V_pad), lambda i, j: (j, 0)),
+            pl.BlockSpec((1, STRIPE), lambda i, j: (0, j)),
+            pl.BlockSpec((QUERY_TILE, cand.shape[1]), lambda i, j: (i, 0)),
+            _row_spec(per_query_qos),
+            _row_spec(per_query_load),
+            _row_spec(per_query_rtt),
+            _row_spec(per_query_dead),
+            pl.BlockSpec((1, 1), lambda i, j: (i, j)),
+        ],
+        out_specs=[out_spec, out_spec, out_spec, out_spec],
+        out_shape=[
+            jax.ShapeDtypeStruct((n_q, 1), jnp.int32),
+            out_shape, out_shape, out_shape,
+        ],
+        scratch_shapes=scratch,
+        interpret=interpret,
+    )(q, qr, w, host, cand, qos, load, rtt, dead, flags)
+    return idx[:, 0], c[:, 0], n[:, 0], s[:, 0]

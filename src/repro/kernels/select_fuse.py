@@ -40,6 +40,16 @@ top-selection candidate is returned (np.argmax over all -inf picks 0).
 Gather-free trick: per-candidate values come from one-hot reductions over
 the stripe (sum(onehot * row)) instead of dynamic gathers, which keeps the
 kernel pure VPU work with lane-aligned reductions.
+
+Quantized operands: inputs may arrive physically stored as bf16 (the
+wrapper upcasts with `.astype(jnp.float32)` at entry, which is exact for
+every bf16 value) and all in-kernel arithmetic is f32, so this kernel
+sits inside the quantized-scoring parity contract — operands rounded once
+at build, decisions argmax-identical across paths (docs/benchmarks.md
+"Quantized scoring carve-out").  The single-pass variant that also fuses
+the stage-2 BM25 matmul and streams the corpus in stripes lives in
+`kernels/score_fuse.py`; this kernel remains the tail for callers that
+already hold a materialized [n_q, n_tools] score stripe.
 """
 from __future__ import annotations
 

@@ -225,11 +225,11 @@ def run_cell(
         "arch": arch, "shape": shape_name, "mesh": mesh_name,
         "layout": layout, "chips": chips, "ok": False,
     }
-    t0 = time.time()
+    t0 = time.monotonic()
     try:
         # 1) full scanned model: the lower+compile gate + memory analysis
         compiled = _compile(cfg, shape_name, mesh, layout, report)
-        t_compile = time.time() - t0
+        t_compile = time.monotonic() - t0
         try:
             mem_str = str(compiled.memory_analysis())
         except Exception as e:  # pragma: no cover
@@ -248,7 +248,7 @@ def run_cell(
                     f"[OK] {tag}: compute={r.t_compute*1e3:.2f}ms memory={r.t_memory*1e3:.2f}ms "
                     f"collective={r.t_collective*1e3:.2f}ms bottleneck={r.bottleneck} "
                     f"useful={r.useful_flops_ratio:.2f} roofline_frac={r.roofline_fraction:.3f} "
-                    f"(compile {t_compile:.0f}s, total {time.time()-t0:.0f}s)"
+                    f"(compile {t_compile:.0f}s, total {time.monotonic()-t0:.0f}s)"
                 )
                 print(f"     memory_analysis: {mem_str}")
         elif verbose:

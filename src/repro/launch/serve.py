@@ -261,9 +261,9 @@ def main():
         prompt = rng.integers(0, cfg.vocab_size, size=16).astype(np.int32)
         req = Request(rid=0, tokens=prompt, max_new_tokens=args.max_new_tokens)
         eng.submit(req)
-        t0 = time.time()
+        t0 = time.monotonic()
         eng.run()
-        compute_ms = (time.time() - t0) * 1000.0
+        compute_ms = (time.monotonic() - t0) * 1000.0
         net_ms = float(gateway.traces[idx, min(gateway.t, gateway.traces.shape[1] - 1)])
         return net_ms + 0.0 * compute_ms  # network latency dominates routing
 

@@ -93,7 +93,7 @@ def train_loop(
 
         batch = make_batch(data_cfg, step)
         batch = add_batch_extras(dict(batch), cfg, global_batch, rng)
-        t0 = time.time()
+        t0 = time.monotonic()
         params, opt_state, metrics = step_fn(params, opt_state, batch)
         loss = float(metrics["loss"])
         losses.append(loss)
@@ -101,7 +101,7 @@ def train_loop(
         # fleet step: healthy pods take the real step time; injected pods
         # report their simulated (straggling / hung) times
         times = injector.step_times()
-        times[healthy] = np.maximum(times[healthy], time.time() - t0)
+        times[healthy] = np.maximum(times[healthy], time.monotonic() - t0)
         monitor.record(times)
         plan = plan_elastic(monitor, global_batch, healthy)
         if plan.changed:
@@ -122,7 +122,7 @@ def train_loop(
         if step % log_every == 0 or step == steps - 1:
             print(
                 f"step {step:5d} loss {loss:.4f} gnorm {float(metrics['grad_norm']):.3f} "
-                f"({time.time() - t0:.2f}s) pods={len(healthy)}"
+                f"({time.monotonic() - t0:.2f}s) pods={len(healthy)}"
             )
     return losses
 

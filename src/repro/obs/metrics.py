@@ -11,7 +11,9 @@ definition (previously each layer kept overlapping ad-hoc ints).
 ops and an increment, and p50/p99/p999 come from the bucket counts —
 no sample retention, O(1) memory at any request volume.  Count and sum
 are tracked exactly, so `mean` is exact; quantiles carry the bucket's
-relative width (~±4% at the default 32 buckets/decade).
+relative width (`10^(1/per_decade) - 1`, ~7.5% at the default
+32 buckets/decade — see the `Histogram` class docstring for the
+derivation; `tests/test_metrics_edges.py` asserts the bound).
 
 `DeviceRouteStats` is the jit-safe hot-path accumulator: a single
 device-resident f32 buffer updated by a donated jit program from the

@@ -70,12 +70,27 @@ class RouteResult:
     network: float
 
 
+def _telemetry_np_dtype(dtype: str):
+    if dtype in ("bfloat16", "bf16"):
+        import ml_dtypes
+
+        return np.dtype(ml_dtypes.bfloat16)
+    return np.dtype(np.float32)
+
+
 class _HostTelemetry:
     """Host telemetry window [n_replicas, history]: roll + assign per tick
-    (the original gateway path — fine up to ~10^3 replicas)."""
+    (the original gateway path — fine up to ~10^3 replicas).
 
-    def __init__(self, init: np.ndarray):
-        self._win = np.array(init, np.float32)
+    ``dtype="bfloat16"`` stores the window in bf16: samples are rounded
+    once as they enter the ring and never re-rounded (the buffer stays
+    bf16), and ``host()`` upcasts exactly — every consumer, scalar or
+    batched, sees the identical rounded floats.
+    """
+
+    def __init__(self, init: np.ndarray, dtype: str = "float32"):
+        self._np_dtype = _telemetry_np_dtype(dtype)
+        self._win = np.array(init, self._np_dtype)
 
     def push(self, col: np.ndarray) -> None:
         self._win = np.roll(self._win, -1, axis=1)
@@ -85,7 +100,9 @@ class _HostTelemetry:
         return self._win
 
     def host(self) -> np.ndarray:
-        return self._win
+        if self._win.dtype == np.float32:
+            return self._win
+        return self._win.astype(np.float32)
 
 
 class DeviceTelemetry:
@@ -102,14 +119,22 @@ class DeviceTelemetry:
     _shift = staticmethod(
         jax.jit(
             lambda buf, col: jnp.concatenate(
-                [buf[:, 1:], col[:, None]], axis=1
+                [buf[:, 1:], col[:, None].astype(buf.dtype)], axis=1
             ),
             donate_argnums=0,
         )
     )
 
-    def __init__(self, init: np.ndarray, sharding=None):
-        buf = jnp.asarray(init, jnp.float32)
+    def __init__(self, init: np.ndarray, sharding=None,
+                 dtype: str = "float32"):
+        # bf16 ring: halves the resident window and the per-route HBM
+        # read; samples are rounded once on entry (the buffer never
+        # leaves bf16, so there is no re-rounding drift) and upcast
+        # exactly wherever f32 math needs them.
+        self._dtype = (
+            jnp.bfloat16 if dtype in ("bfloat16", "bf16") else jnp.float32
+        )
+        buf = jnp.asarray(init, self._dtype)
         self._buf = jax.device_put(buf, sharding) if sharding else buf
         self._host: Optional[np.ndarray] = None
 
@@ -124,7 +149,7 @@ class DeviceTelemetry:
 
     def host(self) -> np.ndarray:
         if self._host is None:
-            self._host = np.asarray(self._buf)
+            self._host = np.asarray(self._buf.astype(jnp.float32))
         return self._host
 
 
@@ -190,6 +215,14 @@ class SonarGateway:
         *k+1* and the window is already on device when the fused kernel
         runs — no per-flush host->device transfer.  Defaults to ``True``
         when ``shards`` is set, else ``False`` (the host np.roll window).
+    telemetry_dtype : str
+        Storage dtype of the telemetry ring, ``"float32"`` (default) or
+        ``"bfloat16"``.  bf16 halves the resident window and the
+        per-route HBM read; each sample is rounded once (RNE) as it
+        enters the ring and never re-rounded, and every consumer —
+        scalar router, batched engine, Pallas kernels — upcasts the same
+        rounded floats exactly, so routing decisions stay identical
+        across paths (the quantization carve-out, docs/benchmarks.md).
     """
 
     def __init__(
@@ -210,6 +243,7 @@ class SonarGateway:
         mesh="auto",
         region_rtt_ms: Optional[np.ndarray] = None,
         device_telemetry: Optional[bool] = None,
+        telemetry_dtype: str = "float32",
         obs: Optional[Observability] = None,
     ):
         self.replicas = list(replicas)
@@ -251,8 +285,11 @@ class SonarGateway:
         init = self.traces[:, :history]
         if device_telemetry is None:
             device_telemetry = bool(shards)
+        self.telemetry_dtype = telemetry_dtype
         self._telemetry = (
-            DeviceTelemetry(init) if device_telemetry else _HostTelemetry(init)
+            DeviceTelemetry(init, dtype=telemetry_dtype)
+            if device_telemetry
+            else _HostTelemetry(init, dtype=telemetry_dtype)
         )
         self.t = history
         self.stats: list = []

@@ -68,13 +68,16 @@ def mega_fleet_index(
     n_servers: int,
     templates: Optional[Sequence[Server]] = None,
     seed: int = 0,
+    weights_dtype: str = "float32",
 ):
     """Template-tiled index over `n_servers` instances of the canonical
     15-server pool (5 websearch + 10 distractor templates, round-robin).
 
     Returns a `core.mesh_routing.TiledFleetIndex` — BM25 weights stored
     once per template with expanded-corpus statistics, so building the
-    index costs O(templates), not O(n_servers).
+    index costs O(templates), not O(n_servers).  ``weights_dtype``
+    selects the corpus-weight storage precision ("float32" / "bfloat16" /
+    "int8" — see `core.quantize.round_weights`).
     """
     from repro.core import dataset
     from repro.core.mesh_routing import TiledFleetIndex
@@ -82,7 +85,7 @@ def mega_fleet_index(
     if templates is None:
         templates = dataset.build_server_pool(seed=seed)
     tmap = np.arange(n_servers) % len(templates)
-    return TiledFleetIndex(templates, tmap)
+    return TiledFleetIndex(templates, tmap, weights_dtype=weights_dtype)
 
 
 def telemetry_palette(n_templates: int = 16, seed: int = 0) -> list:

@@ -1,0 +1,113 @@
+"""Histogram edge semantics + the clock-source convention.
+
+The log-scale `Histogram` promises: every observation is counted (below-lo
+clamps to bucket 0, at/above-hi to the last bucket), quantiles are clamped
+to the observed [vmin, vmax], and the relative quantile error is bounded
+by one bucket ratio — `10^(1/per_decade) - 1`, ~7.5% at the default 32
+buckets per decade (the figure the `obs/metrics.py` docstring cites).
+
+The clock regression: elapsed-time spans across the benchmark/launch
+stack are measured with `time.monotonic`, so a backwards wall-clock step
+(NTP correction mid-run) can never produce a negative latency span.
+"""
+import math
+import time
+
+import numpy as np
+import pytest
+
+from repro.obs.metrics import Histogram
+
+
+def test_quantile_q0_and_q1_clamp_to_observed_range():
+    h = Histogram("t")
+    vals = [0.5, 3.0, 42.0, 999.0]
+    h.observe_many(vals)
+    assert h.quantile(0.0) == min(vals)   # clamped to vmin
+    assert h.quantile(1.0) == max(vals)   # clamped to vmax
+    assert h.vmin == min(vals) and h.vmax == max(vals)
+
+
+def test_observations_below_lo_and_at_hi_are_counted():
+    h = Histogram("t", lo=1.0, hi=1000.0)
+    h.observe(0.001)          # far below lo -> bucket 0
+    h.observe(1000.0)         # exactly hi -> last bucket
+    h.observe(5e6)            # far above hi -> last bucket
+    assert h.count == 3
+    assert sum(h.counts) == 3
+    assert h.counts[0] == 1
+    assert h.counts[-1] == 2
+    # quantiles stay inside the *observed* range, not the bucket range
+    assert h.vmin <= h.p50 <= h.vmax
+    # bucket knowledge saturates at hi: the top quantile reports the hi
+    # edge, while the exact max survives in vmax (and the snapshot)
+    assert h.quantile(1.0) == 1000.0
+    assert h.snapshot()["max"] == 5e6
+
+
+def test_single_observation_all_quantiles_exact():
+    h = Histogram("t")
+    h.observe(7.25)
+    for q in (0.0, 0.5, 0.99, 1.0):
+        assert h.quantile(q) == 7.25    # vmin/vmax clamp beats bucket edges
+    assert h.mean == 7.25
+
+
+def test_empty_histogram_is_neutral():
+    h = Histogram("t")
+    assert h.count == 0 and h.mean == 0.0 and h.quantile(0.5) == 0.0
+    snap = h.snapshot()
+    assert snap["min"] == 0.0 and snap["max"] == 0.0
+
+
+def test_quantile_relative_error_within_one_bucket_ratio():
+    """The documented bound: bucket-interpolated quantiles are within
+    `10^(1/per_decade) - 1` (~7.5% at 32/decade) of the exact sample
+    quantile for any distribution inside [lo, hi)."""
+    rng = np.random.default_rng(0)
+    samples = np.exp(rng.normal(3.0, 1.2, size=5000))   # log-normal ms
+    h = Histogram("t", lo=1e-3, hi=1e6)                 # defaults
+    h.observe_many(samples)
+    bound = 10.0 ** (1.0 / h.per_decade) - 1.0
+    assert bound == pytest.approx(0.0746, abs=5e-4)     # the "~7.5%" figure
+    for q in (0.05, 0.25, 0.50, 0.90, 0.99, 0.999):
+        exact = float(np.quantile(samples, q))
+        est = h.quantile(q)
+        rel = abs(est - exact) / exact
+        assert rel <= bound + 1e-9, (
+            f"q={q}: est={est:.4f} exact={exact:.4f} rel={rel:.4%} "
+            f"> bound {bound:.4%}"
+        )
+
+
+def test_mean_is_exact_not_bucketed():
+    h = Histogram("t")
+    vals = [0.123, 4.56, 789.0, 0.0001, 1e5]
+    h.observe_many(vals)
+    assert h.mean == pytest.approx(sum(vals) / len(vals), rel=1e-12)
+
+
+def test_bucket_edges_are_geometric():
+    h = Histogram("t", lo=1.0, hi=100.0, per_decade=4)
+    ratio = 10.0 ** (1.0 / 4.0)
+    for i in range(1, h.n_buckets):
+        assert h._edge(i) / h._edge(i - 1) == pytest.approx(ratio)
+    assert h.n_buckets == math.ceil(2 * 4)
+
+
+def test_latency_spans_survive_backwards_wall_clock(monkeypatch):
+    """Regression for the time.time() -> time.monotonic() sweep: step the
+    wall clock BACKWARDS during a timed benchmark run (an NTP correction
+    mid-measurement) and assert every reported span is still
+    non-negative.  With wall-clock arithmetic the per-request costs here
+    would come out negative."""
+    import benchmarks.fleet_sim as fleet_sim
+
+    wall = iter(np.linspace(1e9, 1e9 - 3600.0, 10_000))  # ticks backwards
+    monkeypatch.setattr(time, "time", lambda: float(next(wall)))
+    res = fleet_sim.main(
+        print_fn=lambda *_: None, n_per_template=1, n_queries=2, n_iter=1
+    )
+    assert res["us_per_request_batched"] >= 0.0
+    assert res["us_per_request_scalar"] >= 0.0
+    assert res["speedup"] >= 0.0

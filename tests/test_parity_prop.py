@@ -23,9 +23,10 @@ import pytest
 from hypothesis import given, settings
 from hypothesis import strategies as st
 
-from repro.core import dataset, routing
+from repro.core import bm25, dataset, quantize, routing
 from repro.core.batch_routing import BatchRoutingEngine
 from repro.core.latency import OFFLINE_MS
+from repro.core.mesh_routing import ShardedRoutingEngine
 from repro.core.routing import RoutingConfig
 from repro.traffic import replica_fleet
 
@@ -189,6 +190,81 @@ def test_failover_loop_parity_scalar_vs_batched(seed, n_servers, budget):
         assert (d.server_idx, d.tool_idx, f) == (
             int(dec.server_idx[i]), int(dec.tool_idx[i]), int(nf[i])
         )
+
+
+def _quantize_index_inplace(index):
+    """Round both corpora's weights to bf16 ONCE, per the quantization
+    contract (core/quantize.py): every routing path then consumes the
+    identical rounded f32 values, so parity must hold by construction."""
+    for attr in ("server_corpus", "tool_corpus"):
+        c = getattr(index, attr)
+        setattr(index, attr, bm25.Bm25Corpus(
+            vocab=c.vocab,
+            weights=quantize.round_weights(np.asarray(c.weights), "bfloat16"),
+            n_docs=c.n_docs,
+        ))
+    return index
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    algo=st.sampled_from(ALGOS),
+    n_servers=st.integers(2, 6),
+    identical=st.booleans(),
+    mask_kind=st.sampled_from(["none", "some", "all"]),
+)
+def test_quantized_operand_parity_four_paths(
+    seed, algo, n_servers, identical, mask_kind
+):
+    """Quantized-scoring acceptance gate: round the bandwidth-bound
+    operands ONCE (bf16 corpus weights, bf16 telemetry window) and feed
+    the identical rounded values to all four routing paths — scalar
+    `Router.select`, the batched jnp engine, the fused Pallas kernel path
+    and the mesh-sharded engine.  Decisions must stay argmax-identical
+    for every algorithm; fused scores agree bit-for-bit on the jnp paths
+    and within the documented ~1-ulp kernel bound (docs/benchmarks.md,
+    "Quantized scoring carve-out")."""
+    servers, hist, load, age, mask, rtt = _materialize(
+        seed, n_servers, identical, False, mask_kind
+    )
+    hist_q = quantize.quantize_bf16(hist)
+    cfg = RoutingConfig(top_s=min(4, n_servers), top_k=5)
+    router = routing.make_router(algo, servers, cfg)
+    _quantize_index_inplace(router.index)
+    e_jnp = BatchRoutingEngine(
+        servers, cfg, algo=algo, use_kernels=False, index=router.index
+    )
+    e_krn = BatchRoutingEngine(
+        servers, cfg, algo=algo, use_kernels=True, interpret=True,
+        index=router.index,
+    )
+    sh = ShardedRoutingEngine(
+        servers, cfg, algo=algo, n_shards=min(3, n_servers),
+        use_kernels=False, index=router.index,
+    )
+    d_jnp = e_jnp.route_texts(QUERY_TEXTS, hist_q, load, age, mask, rtt)
+    d_krn = e_krn.route_texts(QUERY_TEXTS, hist_q, load, age, mask, rtt)
+    d_sh = sh.route_texts(QUERY_TEXTS, hist_q, load, age, mask, rtt)
+    for i, q in enumerate(QUERY_TEXTS):
+        d = router.select(
+            q, hist_q, load, telemetry_age_s=age, failed_mask=mask,
+            client_rtt_ms=rtt,
+        )
+        got = (
+            (d.server_idx, d.tool_idx),
+            (int(d_jnp.server_idx[i]), int(d_jnp.tool_idx[i])),
+            (int(d_krn.server_idx[i]), int(d_krn.tool_idx[i])),
+            (int(d_sh.server_idx[i]), int(d_sh.tool_idx[i])),
+        )
+        assert got[0] == got[1] == got[2] == got[3], (
+            f"{algo} seed={seed} identical={identical} mask={mask_kind} "
+            f"query={i}: scalar/jnp/kernel/sharded = {got}"
+        )
+    np.testing.assert_array_equal(d_jnp.fused, d_sh.fused)
+    np.testing.assert_allclose(
+        d_krn.fused, d_jnp.fused, rtol=2e-6, atol=2e-7
+    )
 
 
 @pytest.mark.slow

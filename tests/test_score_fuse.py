@@ -1,0 +1,190 @@
+"""Single-pass fused scoring kernel (kernels/score_fuse) vs its oracle.
+
+The kernel streams the stage-2 BM25 matmul + candidate mask + top-k +
+softmax + fusion + argmax over tool stripes; the oracle materializes the
+full score matrix and reuses `fused_select_ref`.  Decisions must match
+exactly; scores within the documented ~1-ulp sequential-softmax bound.
+"""
+import numpy as np
+import pytest
+
+from repro.core import quantize
+from repro.kernels import ops
+from repro.kernels import ref as kref
+from repro.kernels.score_fuse import QUERY_TILE, STRIPE
+
+RTOL, ATOL = 2e-6, 2e-7  # sequential vs tree softmax-denominator adds
+
+
+def _fleet(rng, n_q, V, n_srv, n_t, top_s, sparsity=0.2):
+    q = rng.poisson(0.4, (n_q, V)).astype(np.float32)
+    qr = rng.poisson(0.4, (n_q, V)).astype(np.float32)
+    w = (rng.random((n_t, V)) * (rng.random((n_t, V)) < sparsity)).astype(
+        np.float32
+    )
+    ts = np.sort(rng.integers(0, n_srv, n_t)).astype(np.int32)
+    cand = np.stack(
+        [rng.choice(n_srv, top_s, replace=False) for _ in range(n_q)]
+    ).astype(np.int32)
+    return q, qr, w, ts, cand
+
+
+def _check(kernel_out, ref_out, ctx=""):
+    i1, c1, n1, s1 = (np.asarray(x) for x in kernel_out)
+    i2, c2, n2, s2 = (np.asarray(x) for x in ref_out)
+    np.testing.assert_array_equal(i1, i2, err_msg=f"{ctx}: tool_idx")
+    for a, b, nm in ((c1, c2, "C"), (n1, n2, "N"), (s1, s2, "S")):
+        np.testing.assert_allclose(
+            a, b, rtol=RTOL, atol=ATOL, err_msg=f"{ctx}: {nm}"
+        )
+
+
+@pytest.mark.parametrize("rerank", [False, True])
+@pytest.mark.parametrize(
+    "extras",
+    [
+        {},
+        {"gamma": 0.4, "with_load": True},
+        {
+            "gamma": 0.4, "delta": 0.3, "with_load": True, "with_rtt": True,
+            "with_dead": True,
+        },
+    ],
+)
+def test_parity_single_stripe(rerank, extras):
+    rng = np.random.default_rng(0)
+    n_q, n_t = 13, 45
+    q, qr, w, ts, cand = _fleet(rng, n_q, 96, 17, n_t, 5)
+    qos = rng.uniform(-1, 1, n_t).astype(np.float32)
+    kw = dict(k=8, alpha=0.6, beta=0.3, temp=0.7,
+              gamma=extras.get("gamma", 0.0), delta=extras.get("delta", 0.0))
+    if extras.get("with_load"):
+        kw["tool_load"] = rng.uniform(0, 2, (n_q, n_t)).astype(np.float32)
+    if extras.get("with_rtt"):
+        kw["tool_rtt"] = rng.uniform(0, 1, n_t).astype(np.float32)
+    if extras.get("with_dead"):
+        kw["tool_dead"] = (rng.random(n_t) < 0.15).astype(np.float32)
+    qq = qr if rerank else None
+    _check(
+        ops.fused_score_select(q, w, ts, cand, qos, q_rerank=qq,
+                               interpret=True, **kw),
+        kref.fused_score_select_ref(q, w, ts, cand, qos, q_rerank=qq, **kw),
+        ctx=f"rerank={rerank} extras={extras}",
+    )
+
+
+def test_parity_multi_stripe_with_skipping():
+    """n_tools spanning several stripes with sparse candidates: most
+    stripes host no candidate tools and are skipped by the flag array —
+    the streaming top-k carried across live stripes must still reproduce
+    the full-axis oracle."""
+    rng = np.random.default_rng(1)
+    n_q, n_t = 16, 3 * STRIPE - 137
+    q, _qr, w, ts, cand = _fleet(rng, n_q, 128, 400, n_t, 4, sparsity=0.1)
+    qos = rng.uniform(-1, 1, n_t).astype(np.float32)
+    kw = dict(
+        k=16, alpha=0.6, beta=0.3, gamma=0.2, temp=1.0,
+        tool_load=rng.uniform(0, 2, n_t).astype(np.float32),
+        tool_dead=(rng.random(n_t) < 0.3).astype(np.float32),
+    )
+    _check(
+        ops.fused_score_select(q, w, ts, cand, qos, interpret=True, **kw),
+        kref.fused_score_select_ref(q, w, ts, cand, qos, **kw),
+        ctx="multi-stripe",
+    )
+
+
+def test_tie_heavy_integer_scores():
+    """Integer-valued weights make massive exact score ties: the kernel's
+    min-gid tie-break across stripe merges must equal lax.top_k's
+    lower-index rule over the full tool axis."""
+    rng = np.random.default_rng(2)
+    n_q, n_t, n_srv = 16, STRIPE + 200, 50
+    w = rng.integers(0, 2, (n_t, 64)).astype(np.float32)
+    q = rng.integers(0, 2, (n_q, 64)).astype(np.float32)
+    ts = np.sort(rng.integers(0, n_srv, n_t)).astype(np.int32)
+    cand = np.stack(
+        [rng.choice(n_srv, 6, replace=False) for _ in range(n_q)]
+    ).astype(np.int32)
+    qos = np.zeros(n_t, np.float32)
+    kw = dict(k=16, alpha=1.0, beta=0.0)
+    _check(
+        ops.fused_score_select(q, w, ts, cand, qos, interpret=True, **kw),
+        kref.fused_score_select_ref(q, w, ts, cand, qos, **kw),
+        ctx="tie-heavy",
+    )
+
+
+def test_k_exceeds_candidate_tools():
+    """top_k far above the number of candidate-hosted tools: invalid
+    filler slots must not perturb the softmax mass or the argmax."""
+    rng = np.random.default_rng(3)
+    n_q, n_t = 8, 30
+    q, _qr, w, ts, cand = _fleet(rng, n_q, 64, 20, n_t, 2)
+    qos = rng.uniform(-1, 1, n_t).astype(np.float32)
+    kw = dict(k=25, alpha=0.6, beta=0.3)
+    _check(
+        ops.fused_score_select(q, w, ts, cand, qos, interpret=True, **kw),
+        kref.fused_score_select_ref(q, w, ts, cand, qos, **kw),
+        ctx="k>tools",
+    )
+
+
+def test_all_candidates_dead():
+    """Every candidate dead-masked: both paths fall back to the
+    top-selection candidate (argmax over an all-NEG fused vector)."""
+    rng = np.random.default_rng(4)
+    n_q, n_t = 8, 40
+    q, _qr, w, ts, cand = _fleet(rng, n_q, 64, 12, n_t, 3)
+    qos = rng.uniform(-1, 1, n_t).astype(np.float32)
+    kw = dict(k=8, alpha=0.6, beta=0.3,
+              tool_dead=np.ones(n_t, np.float32))
+    _check(
+        ops.fused_score_select(q, w, ts, cand, qos, interpret=True, **kw),
+        kref.fused_score_select_ref(q, w, ts, cand, qos, **kw),
+        ctx="all-dead",
+    )
+
+
+def test_quantized_bf16_operands():
+    """bf16-rounded query/weight operands (the quantization contract):
+    the kernel upcasts exactly at block load, so kernel and oracle see
+    identical floats and decisions stay argmax-identical."""
+    rng = np.random.default_rng(5)
+    n_q, n_t = 16, STRIPE + 64
+    q, _qr, w, ts, cand = _fleet(rng, n_q, 128, 100, n_t, 4)
+    qb = quantize.round_weights(q, "bfloat16")
+    wb = quantize.round_weights(w, "bfloat16")
+    qos = quantize.quantize_bf16(rng.uniform(-1, 1, n_t)).astype(np.float32)
+    kw = dict(k=12, alpha=0.6, beta=0.3)
+    _check(
+        ops.fused_score_select(qb, wb, ts, cand, qos, interpret=True, **kw),
+        kref.fused_score_select_ref(qb, wb, ts, cand, qos, **kw),
+        ctx="bf16 operands",
+    )
+    # physically-bf16 device arrays decode to the same decisions
+    import jax.numpy as jnp
+
+    i_b, _, _, _ = ops.fused_score_select(
+        jnp.asarray(qb, jnp.bfloat16), jnp.asarray(wb, jnp.bfloat16),
+        ts, cand, qos, interpret=True, **kw,
+    )
+    i_f, _, _, _ = ops.fused_score_select(
+        qb, wb, ts, cand, qos, interpret=True, **kw
+    )
+    np.testing.assert_array_equal(np.asarray(i_b), np.asarray(i_f))
+
+
+def test_ragged_query_rows():
+    """Query counts not a multiple of QUERY_TILE: pad rows are routed on
+    all--1 candidate sets and sliced off without disturbing real rows."""
+    rng = np.random.default_rng(6)
+    for n_q in (1, QUERY_TILE - 1, QUERY_TILE + 3):
+        q, _qr, w, ts, cand = _fleet(rng, n_q, 64, 15, 33, 3)
+        qos = rng.uniform(-1, 1, 33).astype(np.float32)
+        kw = dict(k=6, alpha=0.6, beta=0.3)
+        _check(
+            ops.fused_score_select(q, w, ts, cand, qos, interpret=True, **kw),
+            kref.fused_score_select_ref(q, w, ts, cand, qos, **kw),
+            ctx=f"n_q={n_q}",
+        )

@@ -1,0 +1,114 @@
+#!/usr/bin/env python
+"""Perf-trend gate: fresh benchmark artifacts vs committed baselines.
+
+Compares the throughput metrics of a freshly produced benchmark artifact
+against the committed ``BENCH_*.json`` perf-trajectory baseline and fails
+(exit 1) when any matched metric regresses by more than the threshold
+(default 10%).  Improvements never fail; they are reported so the
+baseline can be refreshed.
+
+Supported artifact kinds (inferred from the payload shape):
+
+* ``mega-fleet`` — points matched on ``(algo, n_servers, n_shards)``,
+  metric ``routes_per_s`` (higher is better).  Points present in only
+  one file are reported and skipped; zero matched points is an error
+  (the gate must never pass vacuously).
+* ``serving-qps`` — scalar metrics ``knee.sustained_qps`` and
+  ``oracle.oracle_qps`` (higher is better).
+
+Usage (CI wires this into the bench-smoke job)::
+
+  python tools/check_bench_trend.py mega-fleet.json BENCH_mega_fleet.json
+  python tools/check_bench_trend.py serving-qps.json BENCH_serving_qps.json \
+      --max-regression 0.10
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def _load(path: str) -> dict:
+    with open(path) as f:
+        return json.load(f)
+
+
+def _kind(payload: dict) -> str:
+    if "knee" in payload and "oracle" in payload:
+        return "serving-qps"
+    if "points" in payload and "parity" in payload:
+        return "mega-fleet"
+    raise SystemExit(f"unrecognized artifact shape (keys: {sorted(payload)})")
+
+
+def _mega_fleet_metrics(payload: dict) -> dict:
+    return {
+        (p["algo"], p["n_servers"], p["n_shards"]): float(p["routes_per_s"])
+        for p in payload["points"]
+    }
+
+
+def _serving_qps_metrics(payload: dict) -> dict:
+    return {
+        ("knee", "sustained_qps"): float(payload["knee"]["sustained_qps"]),
+        ("oracle", "oracle_qps"): float(payload["oracle"]["oracle_qps"]),
+    }
+
+
+def compare(fresh: dict, baseline: dict, max_regression: float) -> list:
+    """Return a list of failure strings (empty = gate green); prints the
+    per-metric trend table as a side effect."""
+    kind = _kind(fresh)
+    if _kind(baseline) != kind:
+        return [f"artifact kinds differ: fresh={kind}"]
+    extract = (
+        _mega_fleet_metrics if kind == "mega-fleet" else _serving_qps_metrics
+    )
+    f_m, b_m = extract(fresh), extract(baseline)
+    matched = sorted(set(f_m) & set(b_m))
+    failures = []
+    if not matched:
+        return [f"{kind}: no matched points between fresh and baseline "
+                f"(fresh={sorted(f_m)}, baseline={sorted(b_m)})"]
+    for key in matched:
+        base, new = b_m[key], f_m[key]
+        delta = (new - base) / base if base else float("inf")
+        verdict = "ok" if delta >= -max_regression else "REGRESSION"
+        print(f"  {kind} {key}: baseline={base:.1f} fresh={new:.1f} "
+              f"({delta:+.1%}) {verdict}")
+        if delta < -max_regression:
+            failures.append(
+                f"{kind} {key}: {base:.1f} -> {new:.1f} "
+                f"({delta:+.1%} < -{max_regression:.0%})"
+            )
+    for key in sorted(set(f_m) - set(b_m)):
+        print(f"  {kind} {key}: new point (no baseline), skipped")
+    for key in sorted(set(b_m) - set(f_m)):
+        print(f"  {kind} {key}: baseline point missing from fresh run, "
+              f"skipped")
+    return failures
+
+
+def main(argv=None) -> int:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("fresh", help="freshly produced artifact JSON")
+    parser.add_argument("baseline", help="committed BENCH_*.json baseline")
+    parser.add_argument(
+        "--max-regression", type=float, default=0.10,
+        help="maximum tolerated fractional throughput drop (default 0.10)",
+    )
+    args = parser.parse_args(argv)
+    failures = compare(
+        _load(args.fresh), _load(args.baseline), args.max_regression
+    )
+    if failures:
+        for f in failures:
+            print(f"TREND GATE FAIL: {f}", file=sys.stderr)
+        return 1
+    print("trend gate: green")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
