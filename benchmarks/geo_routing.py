@@ -101,6 +101,15 @@ def run_point(
         if r.region >= 0
         and placement.server_region[r.server_idx] == r.region
     )
+    # steady-state completion tail: p99 over requests arriving in the
+    # second half of the horizon.  For the hand-tuned routers this tracks
+    # the whole-run p99; for online-adaptive routers it excludes the
+    # one-time learning transient, so converged policies compare clean.
+    tail = np.asarray([
+        r.t_finish_ms - r.t_arrival_ms
+        for r in done if r.t_arrival_ms >= 500.0 * horizon_s
+    ])
+    p99_tail = float(np.percentile(tail, 99)) if tail.size else rep.p99_ms
     rtt = topo.rtt_matrix(None)
     off_diag = rtt[~np.eye(n_regions, dtype=bool)]
     mean_cross = float(off_diag.mean()) if off_diag.size else 0.0
@@ -114,6 +123,7 @@ def run_point(
         "goodput_rps": rep.goodput_rps,
         "p50_ms": rep.p50_ms,
         "p99_ms": rep.p99_ms,
+        "p99_tail_ms": p99_tail,
         "failed": rep.n_failed,
         "drop_events": rep.n_drop_events,
         "max_share": rep.max_share,

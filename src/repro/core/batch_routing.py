@@ -67,6 +67,7 @@ from repro.core.routing import (
     ToolIndex,
     predict_tool_type,
 )
+from repro.core import adaptive as _adaptive
 from repro.kernels import ops
 from repro.kernels import ref as kref
 from repro.obs import trace as obs_trace
@@ -212,6 +213,9 @@ def _route_pipeline(
     client_rtt: Optional[jax.Array],     # [n_servers] or [n_q, n_servers] ms
     region_idx: Optional[jax.Array],     # [n_q] i32 client region per request
     region_rtt: Optional[jax.Array],     # [n_regions, n_servers] ms
+    adapt_w: Optional[jax.Array] = None,  # [4] f32 live [alpha, beta, gamma,
+                                          # delta] (SONAR-ADAPT); None keeps
+                                          # the static specialization
     *,
     top_s: int,
     top_k: int,
@@ -292,7 +296,13 @@ def _route_pipeline(
             tool_qos = jnp.take(n_server, tool_server, axis=1)  # [n_q, n_tools]
         else:
             tool_qos = n_server[tool_server]                # [n_tools]
-        eff_alpha, eff_beta = alpha, beta
+        # SONAR-ADAPT: the live weight vector replaces the static floats
+        # only on its *active* terms — inactive terms keep their structural
+        # literals, preserving the reduction identities below
+        if adapt_w is not None:
+            eff_alpha, eff_beta = adapt_w[0], adapt_w[1]
+        else:
+            eff_alpha, eff_beta = alpha, beta
     else:
         tool_qos = jnp.zeros((n_tools,), jnp.float32)
         eff_alpha, eff_beta = 1.0, 0.0                      # S = C (scalar path)
@@ -305,7 +315,7 @@ def _route_pipeline(
             tool_load = jnp.take(pen, tool_server, axis=1)  # [n_q, n_tools]
         else:
             tool_load = pen[tool_server]                    # [n_tools]
-        eff_gamma = gamma
+        eff_gamma = adapt_w[2] if adapt_w is not None else gamma
     else:
         tool_load = jnp.zeros((n_tools,), jnp.float32)
         eff_gamma = 0.0
@@ -334,7 +344,7 @@ def _route_pipeline(
             tool_rtt = jnp.take(pen_r, tool_server, axis=1)  # [n_q, n_tools]
         else:
             tool_rtt = pen_r[tool_server]                   # [n_tools]
-        eff_delta = delta
+        eff_delta = adapt_w[3] if adapt_w is not None else delta
     else:
         tool_rtt = jnp.zeros((n_tools,), jnp.float32)
         eff_delta = 0.0
@@ -372,6 +382,85 @@ def _route_pipeline(
     return server_idx, tool_idx, c, n, s
 
 
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "top_s", "top_k", "alpha", "beta", "gamma", "load_knee", "load_sharp",
+        "delta", "rtt_scale", "temp", "stale_half_life", "use_network",
+        "use_load", "use_staleness", "use_failover", "use_rtt", "rerank",
+        "use_kernels", "qos_params", "interpret", "acfg",
+    ),
+    donate_argnums=(0,),
+)
+def _route_adaptive(
+    adapt_state,                  # AdaptState pytree (donated, like the
+                                  # gateway's telemetry ring)
+    fb_reward: jax.Array,         # [FEEDBACK_BUCKET] f32 shaped rewards
+    fb_feats: jax.Array,          # [FEEDBACK_BUCKET, 4] f32 [C, N, -U, -R]
+    fb_valid: jax.Array,          # [FEEDBACK_BUCKET] f32 pad mask
+    q_server: jax.Array,
+    q_tool: jax.Array,
+    q_rerank: Optional[jax.Array],
+    w_server: jax.Array,
+    w_tool: jax.Array,
+    tool_server: jax.Array,
+    latency_hist: Optional[jax.Array],
+    server_load: Optional[jax.Array],
+    telemetry_age: Optional[jax.Array],
+    dead_mask: Optional[jax.Array],
+    client_rtt: Optional[jax.Array],
+    region_idx: Optional[jax.Array],
+    region_rtt: Optional[jax.Array],
+    *,
+    acfg,
+    top_s: int,
+    top_k: int,
+    alpha: float,
+    beta: float,
+    gamma: float,
+    load_knee: float,
+    load_sharp: float,
+    delta: float,
+    rtt_scale: float,
+    temp: float,
+    stale_half_life: float,
+    use_network: bool,
+    use_load: bool,
+    use_staleness: bool,
+    use_failover: bool,
+    use_rtt: bool,
+    rerank: bool,
+    use_kernels: bool,
+    qos_params: QosParams,
+    interpret: Optional[bool],
+):
+    """SONAR-ADAPT hot path: ONE jit program that applies the pending EG
+    update and routes the batch with the freshly-updated weights.  The
+    update is a handful of FLOPs over a fixed-size feedback bucket fused
+    ahead of the (dominating) scoring pipeline, so learning adds no extra
+    dispatch and no host sync — the state round-trips device-side.
+
+    `_adaptive._adapt_step` is looked up on the module at trace time so
+    the mutation harness can monkeypatch it (with `jax.clear_caches()`)
+    and prove the trajectory assertions have teeth."""
+    new_state = _adaptive._adapt_step(
+        adapt_state, fb_reward, fb_feats, fb_valid, acfg
+    )
+    server_idx, tool_idx, c, n, s = _route_pipeline(
+        q_server, q_tool, q_rerank, w_server, w_tool, tool_server,
+        latency_hist, server_load, telemetry_age, dead_mask,
+        client_rtt, region_idx, region_rtt, new_state.weights,
+        top_s=top_s, top_k=top_k, alpha=alpha, beta=beta, gamma=gamma,
+        load_knee=load_knee, load_sharp=load_sharp, delta=delta,
+        rtt_scale=rtt_scale, temp=temp, stale_half_life=stale_half_life,
+        use_network=use_network, use_load=use_load,
+        use_staleness=use_staleness, use_failover=use_failover,
+        use_rtt=use_rtt, rerank=rerank, use_kernels=use_kernels,
+        qos_params=qos_params, interpret=interpret,
+    )
+    return server_idx, tool_idx, c, n, s, new_state
+
+
 class BatchRoutingEngine:
     """Vectorized drop-in for a fleet of `Router.select` calls.
 
@@ -388,6 +477,7 @@ class BatchRoutingEngine:
         use_kernels: Optional[bool] = None,
         interpret: Optional[bool] = None,
         index: Optional[ToolIndex] = None,
+        adapt: Optional[_adaptive.AdaptConfig] = None,
     ):
         if use_kernels is None:
             # The Pallas kernels are the fast path on TPU; on CPU they run
@@ -410,6 +500,14 @@ class BatchRoutingEngine:
         self._tool_server = jnp.asarray(self.index.tool_server)
         self._w_server = jnp.asarray(self.index.server_corpus.weights)
         self._w_tool = jnp.asarray(self.index.tool_corpus.weights)
+        # SONAR-ADAPT learner state (None for the hand-tuned algorithms)
+        self.adapt_cfg: Optional[_adaptive.AdaptConfig] = None
+        self.adapt_state: Optional[_adaptive.AdaptState] = None
+        self._fb_rewards: list = []
+        self._fb_feats: list = []
+        if self.algo == "sonar_adapt" or adapt is not None:
+            self.adapt_cfg = adapt if adapt is not None else _adaptive.AdaptConfig()
+            self.adapt_state = _adaptive.init_state(cfg, self.adapt_cfg)
 
     # -- host side ----------------------------------------------------------
     def encode(self, queries: Sequence[str]) -> EncodedBatch:
@@ -424,6 +522,52 @@ class BatchRoutingEngine:
         if self.rerank:
             sl += LLM_RERANK_MS
         return sl
+
+    # -- SONAR-ADAPT feedback -----------------------------------------------
+    @property
+    def adapt_weights(self) -> Optional[np.ndarray]:
+        """Live [alpha, beta, gamma, delta] (host copy), or None."""
+        if self.adapt_state is None:
+            return None
+        return np.asarray(self.adapt_state.weights, np.float32)
+
+    def observe_feedback(
+        self,
+        latency_ms: float,
+        ok: bool = True,
+        feats: Optional[np.ndarray] = None,
+    ) -> None:
+        """Record one completed call's outcome (host side, cheap append).
+        The shaped reward + winner features are folded into the weight
+        vector by the next `route` call's fused update."""
+        if self.adapt_state is None or feats is None:
+            return
+        self._fb_rewards.append(
+            _adaptive.shape_reward(latency_ms, ok, self.adapt_cfg.slo_ms)
+        )
+        self._fb_feats.append(np.asarray(feats, np.float32))
+
+    def _drain_feedback(self):
+        """Pending outcomes -> one padded (reward, feats, valid) bucket.
+        Overflow beyond FEEDBACK_BUCKET is applied immediately through the
+        standalone jit update (same `_adapt_step`, same bucket shape) so
+        no feedback is ever dropped and no new program shape appears."""
+        B = _adaptive.FEEDBACK_BUCKET
+        while len(self._fb_rewards) > B:
+            r, f, v = _adaptive.pad_feedback(
+                self._fb_rewards[:B], self._fb_feats[:B], B
+            )
+            self.adapt_state = _adaptive.adapt_update(
+                self.adapt_state, r, f, v, self.adapt_cfg
+            )
+            del self._fb_rewards[:B]
+            del self._fb_feats[:B]
+        r, f, v = _adaptive.pad_feedback(self._fb_rewards, self._fb_feats, B)
+        self._fb_rewards.clear()
+        self._fb_feats.clear()
+        # host arrays go straight into the jit call: its batched transfer
+        # is cheaper than three eager device_puts on the flush hot path
+        return r, f, v
 
     # -- device side --------------------------------------------------------
     def route(
@@ -514,43 +658,62 @@ class BatchRoutingEngine:
             elif client_region is not None and region_rtt_ms is not None:
                 reg_idx = jnp.asarray(client_region, jnp.int32)
                 reg_rtt = jnp.asarray(region_rtt_ms, jnp.float32)
-        with obs_trace.annotate("netmcp.route_pipeline"):
-            server_idx, tool_idx, c, n, s = _route_pipeline(
-                jnp.asarray(batch.q_server),
-                jnp.asarray(batch.q_tool),
-                jnp.asarray(batch.q_rerank)
-                if batch.q_rerank is not None else None,
-                self._w_server,
-                self._w_tool,
-                self._tool_server,
-                lat,
-                load,
-                age,
-                dead,
-                rtt,
-                reg_idx,
-                reg_rtt,
-                top_s=self.cfg.top_s,
-                top_k=self.cfg.top_k,
-                alpha=self.cfg.alpha,
-                beta=self.cfg.beta,
-                gamma=self.cfg.gamma,
-                load_knee=self.cfg.load_knee,
-                load_sharp=self.cfg.load_sharp,
-                delta=self.cfg.delta,
-                rtt_scale=self.cfg.rtt_scale_ms,
-                temp=self.cfg.expertise_temp,
-                stale_half_life=self.cfg.stale_half_life_s,
-                use_network=self.uses_network and lat is not None,
-                use_load=load is not None,
-                use_staleness=age is not None,
-                use_failover=dead is not None,
-                use_rtt=rtt is not None or reg_idx is not None,
-                rerank=self.rerank,
-                use_kernels=self.use_kernels,
-                qos_params=self.cfg.qos,
-                interpret=self.interpret,
-            )
+        statics = dict(
+            top_s=self.cfg.top_s,
+            top_k=self.cfg.top_k,
+            alpha=self.cfg.alpha,
+            beta=self.cfg.beta,
+            gamma=self.cfg.gamma,
+            load_knee=self.cfg.load_knee,
+            load_sharp=self.cfg.load_sharp,
+            delta=self.cfg.delta,
+            rtt_scale=self.cfg.rtt_scale_ms,
+            temp=self.cfg.expertise_temp,
+            stale_half_life=self.cfg.stale_half_life_s,
+            use_network=self.uses_network and lat is not None,
+            use_load=load is not None,
+            use_staleness=age is not None,
+            use_failover=dead is not None,
+            use_rtt=rtt is not None or reg_idx is not None,
+            rerank=self.rerank,
+            use_kernels=self.use_kernels,
+            qos_params=self.cfg.qos,
+            interpret=self.interpret,
+        )
+        operands = (
+            jnp.asarray(batch.q_server),
+            jnp.asarray(batch.q_tool),
+            jnp.asarray(batch.q_rerank)
+            if batch.q_rerank is not None else None,
+            self._w_server,
+            self._w_tool,
+            self._tool_server,
+            lat,
+            load,
+            age,
+            dead,
+            rtt,
+            reg_idx,
+            reg_rtt,
+        )
+        if self.adapt_state is not None and self.adapt_cfg.lr != 0.0:
+            # fused update + route: one program, no extra dispatch.  At
+            # lr == 0 we fall through to the static path below, whose
+            # compiled program is byte-identical to the hand-tuned
+            # variant's (the weights can never leave their init).
+            fb_r, fb_f, fb_v = self._drain_feedback()
+            with obs_trace.annotate("netmcp.route_adaptive"):
+                server_idx, tool_idx, c, n, s, self.adapt_state = (
+                    _route_adaptive(
+                        self.adapt_state, fb_r, fb_f, fb_v, *operands,
+                        acfg=self.adapt_cfg, **statics,
+                    )
+                )
+        else:
+            with obs_trace.annotate("netmcp.route_pipeline"):
+                server_idx, tool_idx, c, n, s = _route_pipeline(
+                    *operands, **statics,
+                )
         if route_stats is not None:
             route_stats.accumulate(server_idx, c, n, s, n_real=n_real)
         return BatchDecisions(

@@ -68,6 +68,7 @@ import numpy as np
 from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh
 
+from repro.core import adaptive as _adaptive
 from repro.core import bm25, quantize
 from repro.core.batch_routing import BatchDecisions, EncodedBatch, encode_for_index
 from repro.obs import trace as obs_trace
@@ -791,16 +792,26 @@ def _route_sharded(dyn: dict, *, mesh: Optional[Mesh], sc: _StaticCfg):
     net_active = sc.use_network and (
         "lat" in dyn or "lat_t" in dyn
     )
+    # SONAR-ADAPT: the replicated live weight vector (updated once per
+    # route, identically for every shard) replaces the static floats on
+    # its active terms; inactive terms keep the structural literals so the
+    # reduction identities survive adaptation
+    aw = dyn.get("adapt_w")
     if net_active:
-        eff_alpha, eff_beta = sc.alpha, sc.beta
+        if aw is not None:
+            eff_alpha, eff_beta = aw[0], aw[1]
+        else:
+            eff_alpha, eff_beta = sc.alpha, sc.beta
     else:
         eff_alpha, eff_beta = 1.0, 0.0
-    eff_gamma = sc.gamma if (sc.use_load and "load" in dyn) else 0.0
-    eff_delta = (
-        sc.delta
-        if (sc.use_rtt and ("rtt" in dyn or "rtt_region" in dyn))
-        else 0.0
-    )
+    if sc.use_load and "load" in dyn:
+        eff_gamma = aw[2] if aw is not None else sc.gamma
+    else:
+        eff_gamma = 0.0
+    if sc.use_rtt and ("rtt" in dyn or "rtt_region" in dyn):
+        eff_delta = aw[3] if aw is not None else sc.delta
+    else:
+        eff_delta = 0.0
     dead_arg = dead if (sc.use_failover and "dead" in dyn) else None
 
     k_final = min(sc.top_k, sc.n_tools)
@@ -861,6 +872,7 @@ class ShardedRoutingEngine:
         interpret: Optional[bool] = None,
         index=None,
         compact_stage2: Optional[bool] = None,
+        adapt: Optional[_adaptive.AdaptConfig] = None,
     ):
         if use_kernels is None:
             use_kernels = jax.default_backend() == "tpu"
@@ -974,6 +986,19 @@ class ShardedRoutingEngine:
             compact2=self.compact_stage2, k_slot=k_slot,
         )
 
+        # SONAR-ADAPT learner state.  Replicated-update semantics: the EG
+        # step runs ONCE per route in the standalone jit update and the
+        # resulting weight vector enters `_route_sharded` as a replicated
+        # operand, so every shard fuses with bitwise-identical weights —
+        # the distributed equivalent of "identical updates per shard".
+        self.adapt_cfg: Optional[_adaptive.AdaptConfig] = None
+        self.adapt_state: Optional[_adaptive.AdaptState] = None
+        self._fb_rewards: list = []
+        self._fb_feats: list = []
+        if self.algo == "sonar_adapt" or adapt is not None:
+            self.adapt_cfg = adapt if adapt is not None else _adaptive.AdaptConfig()
+            self.adapt_state = _adaptive.init_state(cfg, self.adapt_cfg)
+
     def _resolve_mesh(self, mesh):
         if mesh is None:
             return None
@@ -1006,6 +1031,40 @@ class ShardedRoutingEngine:
         if self.rerank:
             sl += LLM_RERANK_MS
         return sl
+
+    # -- SONAR-ADAPT feedback (mirrors BatchRoutingEngine) -------------------
+    @property
+    def adapt_weights(self) -> Optional[np.ndarray]:
+        if self.adapt_state is None:
+            return None
+        return np.asarray(self.adapt_state.weights, np.float32)
+
+    def observe_feedback(
+        self,
+        latency_ms: float,
+        ok: bool = True,
+        feats: Optional[np.ndarray] = None,
+    ) -> None:
+        if self.adapt_state is None or feats is None:
+            return
+        self._fb_rewards.append(
+            _adaptive.shape_reward(latency_ms, ok, self.adapt_cfg.slo_ms)
+        )
+        self._fb_feats.append(np.asarray(feats, np.float32))
+
+    def _apply_feedback(self) -> None:
+        """Fold every pending outcome into the weight vector through the
+        shared jit update (fixed FEEDBACK_BUCKET shape per step)."""
+        B = _adaptive.FEEDBACK_BUCKET
+        while self._fb_rewards:
+            r, f, v = _adaptive.pad_feedback(
+                self._fb_rewards[:B], self._fb_feats[:B], B
+            )
+            self.adapt_state = _adaptive.adapt_update(
+                self.adapt_state, r, f, v, self.adapt_cfg
+            )
+            del self._fb_rewards[:B]
+            del self._fb_feats[:B]
 
     # -- sharding helpers ---------------------------------------------------
     def _shard_vec(self, x) -> jax.Array:
@@ -1116,6 +1175,12 @@ class ShardedRoutingEngine:
             dyn["dead"] = self._shard_vec(
                 np.asarray(failed_mask, np.float32)
             )
+        if self.adapt_state is not None and self.adapt_cfg.lr != 0.0:
+            # apply pending EG updates once, then replicate the weights
+            # into the sharded program (lr == 0 keeps the static program:
+            # byte-identical to the hand-tuned variant's)
+            self._apply_feedback()
+            dyn["adapt_w"] = self.adapt_state.weights
         with obs_trace.annotate("netmcp.route_sharded"):
             server_idx, tool_idx, c, n, s = _route_sharded(
                 dyn, mesh=self.mesh, sc=self._sc

@@ -519,8 +519,14 @@ ALGORITHMS = {
     "sonar_lb": SonarLBRouter,
     "sonar_ft": SonarFTRouter,
     "sonar_geo": SonarGeoRouter,
+    # "sonar_adapt" (repro.core.adaptive.SonarAdaptRouter) self-registers
+    # on import; make_router resolves it lazily to keep this module free
+    # of the adaptive -> routing import cycle.
 }
 
 
 def make_router(name: str, servers: Sequence[Server], cfg: RoutingConfig = RoutingConfig()) -> Router:
-    return ALGORITHMS[name.lower().replace("-", "_")](servers, cfg)
+    key = name.lower().replace("-", "_")
+    if key not in ALGORITHMS and key == "sonar_adapt":
+        import repro.core.adaptive  # noqa: F401  (registers sonar_adapt)
+    return ALGORITHMS[key](servers, cfg)

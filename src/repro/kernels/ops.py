@@ -90,6 +90,20 @@ def bm25_scores(
 # Fused selection (stage-2 top-k + Eq. 5 softmax + Eq. 8 fusion + argmax)
 # ---------------------------------------------------------------------------
 
+def _weights_operand(alpha, beta, gamma, delta):
+    """(wrow, dyn) — when any fusion weight arrives as a jax.Array (e.g. the
+    live SONAR-ADAPT weight vector threaded through a jit trace), pack all
+    four into one (1, 128) f32 row that rides into VMEM as a regular
+    operand.  The kernel then reads weights as data — one compilation
+    serves every adaptation step instead of a recompile per weight change.
+    Static Python floats keep the constant-folded specialization."""
+    if not any(isinstance(x, jax.Array) for x in (alpha, beta, gamma, delta)):
+        return None, False
+    wrow = jnp.zeros((1, 128), jnp.float32)
+    for i, v in enumerate((alpha, beta, gamma, delta)):
+        wrow = wrow.at[0, i].set(jnp.asarray(v, jnp.float32))
+    return wrow, True
+
 def fused_select(
     sel_scores: jax.Array,   # [n_q, n_tools] stage-2 scores, invalid = -inf/NEG
     val_scores: jax.Array,   # [n_q, n_tools] softmax-value scores (== sel
@@ -151,14 +165,25 @@ def fused_select(
     dead = _pad_to(dead, 1, 128)
     if per_query_dead:
         dead = _pad_to(dead, 0, _sel.QUERY_TILE)
-    idx, c, n, s = _sel.fused_select_pallas(
-        sel, val, qos, load, rtt, dead,
-        k=k, alpha=float(alpha), beta=float(beta), gamma=float(gamma),
-        delta=float(delta), temp=float(temp),
-        per_query_qos=per_query_qos, per_query_load=per_query_load,
-        per_query_rtt=per_query_rtt, per_query_dead=per_query_dead,
-        interpret=_auto_interpret(interpret),
-    )
+    wrow, dyn_w = _weights_operand(alpha, beta, gamma, delta)
+    if dyn_w:
+        idx, c, n, s = _sel.fused_select_pallas(
+            sel, val, qos, load, rtt, dead, wrow,
+            k=k, alpha=0.0, beta=0.0, gamma=0.0, delta=0.0,
+            temp=float(temp), dyn_weights=True,
+            per_query_qos=per_query_qos, per_query_load=per_query_load,
+            per_query_rtt=per_query_rtt, per_query_dead=per_query_dead,
+            interpret=_auto_interpret(interpret),
+        )
+    else:
+        idx, c, n, s = _sel.fused_select_pallas(
+            sel, val, qos, load, rtt, dead,
+            k=k, alpha=float(alpha), beta=float(beta), gamma=float(gamma),
+            delta=float(delta), temp=float(temp),
+            per_query_qos=per_query_qos, per_query_load=per_query_load,
+            per_query_rtt=per_query_rtt, per_query_dead=per_query_dead,
+            interpret=_auto_interpret(interpret),
+        )
     return idx[:n_q], c[:n_q], n[:n_q], s[:n_q]
 
 
@@ -244,15 +269,26 @@ def fused_score_select(
         live.reshape(-1, _scf.QUERY_TILE, n_st), axis=1
     ).astype(jnp.int32)
 
-    idx, c, n, s = _scf.fused_score_select_pallas(
-        q, qr, w, host, cand, qos, load, rtt, dead, flags,
-        k=k, top_s=top_s, alpha=float(alpha), beta=float(beta),
-        gamma=float(gamma), delta=float(delta), temp=float(temp),
-        rerank=q_rerank is not None,
-        per_query_qos=per_query_qos, per_query_load=per_query_load,
-        per_query_rtt=per_query_rtt, per_query_dead=per_query_dead,
-        interpret=_auto_interpret(interpret),
-    )
+    wrow, dyn_w = _weights_operand(alpha, beta, gamma, delta)
+    if dyn_w:
+        idx, c, n, s = _scf.fused_score_select_pallas(
+            q, qr, w, host, cand, qos, load, rtt, dead, flags, wrow,
+            k=k, top_s=top_s, alpha=0.0, beta=0.0, gamma=0.0, delta=0.0,
+            temp=float(temp), rerank=q_rerank is not None, dyn_weights=True,
+            per_query_qos=per_query_qos, per_query_load=per_query_load,
+            per_query_rtt=per_query_rtt, per_query_dead=per_query_dead,
+            interpret=_auto_interpret(interpret),
+        )
+    else:
+        idx, c, n, s = _scf.fused_score_select_pallas(
+            q, qr, w, host, cand, qos, load, rtt, dead, flags,
+            k=k, top_s=top_s, alpha=float(alpha), beta=float(beta),
+            gamma=float(gamma), delta=float(delta), temp=float(temp),
+            rerank=q_rerank is not None,
+            per_query_qos=per_query_qos, per_query_load=per_query_load,
+            per_query_rtt=per_query_rtt, per_query_dead=per_query_dead,
+            interpret=_auto_interpret(interpret),
+        )
     return idx[:n_q], c[:n_q], n[:n_q], s[:n_q]
 
 

@@ -51,14 +51,22 @@ NEG = -1e30         # finite -inf stand-in
 
 
 def _score_kernel(
-    q_ref, qr_ref, w_ref, host_ref, cand_ref,
-    qos_ref, load_ref, rtt_ref, dead_ref, flag_ref,
-    idx_ref, c_ref, n_ref, s_ref,
-    sel_s, val_s, qos_s, load_s, rtt_s, dead_s, gid_s,
-    *, k: int, n_stripes: int, t_total: int, top_s: int,
+    *refs,
+    k: int, n_stripes: int, t_total: int, top_s: int,
     alpha: float, beta: float, gamma: float, delta: float, temp: float,
-    rerank: bool,
+    rerank: bool, dyn_weights: bool = False,
 ):
+    if dyn_weights:
+        (q_ref, qr_ref, w_ref, host_ref, cand_ref,
+         qos_ref, load_ref, rtt_ref, dead_ref, flag_ref, wvec_ref,
+         idx_ref, c_ref, n_ref, s_ref,
+         sel_s, val_s, qos_s, load_s, rtt_s, dead_s, gid_s) = refs
+    else:
+        (q_ref, qr_ref, w_ref, host_ref, cand_ref,
+         qos_ref, load_ref, rtt_ref, dead_ref, flag_ref,
+         idx_ref, c_ref, n_ref, s_ref,
+         sel_s, val_s, qos_s, load_s, rtt_s, dead_s, gid_s) = refs
+        wvec_ref = None
     j = pl.program_id(1)
     QT = QUERY_TILE
     lane = jax.lax.broadcasted_iota(jnp.float32, (QT, K_MAX), 1)
@@ -201,6 +209,19 @@ def _score_kernel(
             denom = denom + e
         denom = jnp.maximum(denom, 1e-30)
 
+        if dyn_weights:
+            # live fusion weights in lanes 0..3 of a (1, 128) f32 row;
+            # one-hot lane reductions keep this pure VPU work
+            wrow = wvec_ref[...].astype(jnp.float32)
+            wl = jax.lax.broadcasted_iota(jnp.float32, wrow.shape, 1)
+
+            def _w(i: int):
+                return jnp.sum(jnp.where(wl == float(i), wrow, 0.0))
+
+            alpha_v, beta_v, gamma_v, delta_v = _w(0), _w(1), _w(2), _w(3)
+        else:
+            alpha_v, beta_v, gamma_v, delta_v = alpha, beta, gamma, delta
+
         best_s = jnp.full((QT, 1), NEG, jnp.float32)
         best_c = exps[0] / denom
         best_n = cand_qos[0]
@@ -210,7 +231,7 @@ def _score_kernel(
             cand_idx,
         ):
             c = e / denom
-            s = alpha * c + beta * n - gamma * u - delta * r
+            s = alpha_v * c + beta_v * n - gamma_v * u - delta_v * r
             s = jnp.where(v > NEG / 2.0, s, NEG)
             s = jnp.where(d > 0.0, NEG, s)
             take = s > best_s
@@ -232,8 +253,8 @@ def _score_kernel(
     jax.jit,
     static_argnames=(
         "k", "top_s", "alpha", "beta", "gamma", "delta", "temp",
-        "rerank", "per_query_qos", "per_query_load", "per_query_rtt",
-        "per_query_dead", "interpret",
+        "rerank", "dyn_weights", "per_query_qos", "per_query_load",
+        "per_query_rtt", "per_query_dead", "interpret",
     ),
 )
 def fused_score_select_pallas(
@@ -247,6 +268,8 @@ def fused_score_select_pallas(
     rtt: jax.Array,    # [n_q_pad or 1, T_pad] f32 per-tool R
     dead: jax.Array,   # [n_q_pad or 1, T_pad] f32 failover mask
     flags: jax.Array,  # [n_q_pad // QUERY_TILE, n_stripes] i32 stripe-live
+    wvec: jax.Array | None = None,  # (1, 128) f32 — live [alpha, beta,
+                                    # gamma, delta] in lanes 0..3
     *,
     k: int,
     top_s: int,
@@ -260,6 +283,7 @@ def fused_score_select_pallas(
     per_query_load: bool,
     per_query_rtt: bool,
     per_query_dead: bool,
+    dyn_weights: bool = False,
     interpret: bool = False,
 ):
     n_q, V_pad = q.shape
@@ -279,25 +303,31 @@ def fused_score_select_pallas(
     out_spec = pl.BlockSpec((QUERY_TILE, 1), lambda i, j: (i, 0))
     out_shape = jax.ShapeDtypeStruct((n_q, 1), jnp.float32)
     scratch = [pltpu.VMEM((QUERY_TILE, K_MAX), jnp.float32)] * 7
+    assert (wvec is not None) == dyn_weights
+    in_specs = [
+        pl.BlockSpec((QUERY_TILE, V_pad), lambda i, j: (i, 0)),
+        pl.BlockSpec((QUERY_TILE, V_pad), lambda i, j: (i, 0)),
+        pl.BlockSpec((STRIPE, V_pad), lambda i, j: (j, 0)),
+        pl.BlockSpec((1, STRIPE), lambda i, j: (0, j)),
+        pl.BlockSpec((QUERY_TILE, cand.shape[1]), lambda i, j: (i, 0)),
+        _row_spec(per_query_qos),
+        _row_spec(per_query_load),
+        _row_spec(per_query_rtt),
+        _row_spec(per_query_dead),
+        pl.BlockSpec((1, 1), lambda i, j: (i, j)),
+    ]
+    operands = [q, qr, w, host, cand, qos, load, rtt, dead, flags]
+    if dyn_weights:
+        in_specs.append(pl.BlockSpec((1, 128), lambda i, j: (0, 0)))
+        operands.append(wvec)
     idx, c, n, s = pl.pallas_call(
         functools.partial(
             _score_kernel, k=k, n_stripes=n_stripes, t_total=T_pad,
             top_s=top_s, alpha=alpha, beta=beta, gamma=gamma, delta=delta,
-            temp=temp, rerank=rerank,
+            temp=temp, rerank=rerank, dyn_weights=dyn_weights,
         ),
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((QUERY_TILE, V_pad), lambda i, j: (i, 0)),
-            pl.BlockSpec((QUERY_TILE, V_pad), lambda i, j: (i, 0)),
-            pl.BlockSpec((STRIPE, V_pad), lambda i, j: (j, 0)),
-            pl.BlockSpec((1, STRIPE), lambda i, j: (0, j)),
-            pl.BlockSpec((QUERY_TILE, cand.shape[1]), lambda i, j: (i, 0)),
-            _row_spec(per_query_qos),
-            _row_spec(per_query_load),
-            _row_spec(per_query_rtt),
-            _row_spec(per_query_dead),
-            pl.BlockSpec((1, 1), lambda i, j: (i, j)),
-        ],
+        in_specs=in_specs,
         out_specs=[out_spec, out_spec, out_spec, out_spec],
         out_shape=[
             jax.ShapeDtypeStruct((n_q, 1), jnp.int32),
@@ -305,5 +335,5 @@ def fused_score_select_pallas(
         ],
         scratch_shapes=scratch,
         interpret=interpret,
-    )(q, qr, w, host, cand, qos, load, rtt, dead, flags)
+    )(*operands)
     return idx[:, 0], c[:, 0], n[:, 0], s[:, 0]

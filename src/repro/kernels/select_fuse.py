@@ -64,11 +64,17 @@ NEG = -1e30         # finite -inf stand-in (avoids inf-inf NaNs in VMEM math)
 
 
 def _select_kernel(
-    sel_ref, val_ref, qos_ref, load_ref, rtt_ref, dead_ref,
-    idx_ref, c_ref, n_ref, s_ref,
-    *, k: int, alpha: float, beta: float, gamma: float, delta: float,
-    temp: float,
+    *refs,
+    k: int, alpha: float, beta: float, gamma: float, delta: float,
+    temp: float, dyn_weights: bool = False,
 ):
+    if dyn_weights:
+        (sel_ref, val_ref, qos_ref, load_ref, rtt_ref, dead_ref, w_ref,
+         idx_ref, c_ref, n_ref, s_ref) = refs
+    else:
+        (sel_ref, val_ref, qos_ref, load_ref, rtt_ref, dead_ref,
+         idx_ref, c_ref, n_ref, s_ref) = refs
+        w_ref = None
     sel = sel_ref[...].astype(jnp.float32)   # [QT, T_pad]
     val = val_ref[...].astype(jnp.float32)   # [QT, T_pad]
     qos = qos_ref[...].astype(jnp.float32)   # [QT or 1, T_pad]
@@ -76,6 +82,19 @@ def _select_kernel(
     rtt = rtt_ref[...].astype(jnp.float32)   # [QT or 1, T_pad] — R penalty
     dead = dead_ref[...].astype(jnp.float32)  # [QT or 1, T_pad] — failover mask
     QT, T_pad = sel.shape
+
+    if dyn_weights:
+        # live weights ride in lanes 0..3 of a (1, 128) f32 row; extract
+        # with one-hot lane reductions (no scalar-memory gathers on TPU)
+        wrow = w_ref[...].astype(jnp.float32)
+        wlane = jax.lax.broadcasted_iota(jnp.float32, wrow.shape, 1)
+
+        def _w(i: int):
+            return jnp.sum(jnp.where(wlane == float(i), wrow, 0.0))
+
+        alpha_v, beta_v, gamma_v, delta_v = _w(0), _w(1), _w(2), _w(3)
+    else:
+        alpha_v, beta_v, gamma_v, delta_v = alpha, beta, gamma, delta
 
     lane = jax.lax.broadcasted_iota(jnp.float32, (QT, T_pad), 1)
 
@@ -128,7 +147,7 @@ def _select_kernel(
         cand_val, exps, cand_qos, cand_load, cand_rtt, cand_dead, cand_idx
     ):
         c = e / denom
-        s = alpha * c + beta * n - gamma * u - delta * r
+        s = alpha_v * c + beta_v * n - gamma_v * u - delta_v * r
         s = jnp.where(v > NEG / 2.0, s, NEG)
         s = jnp.where(d > 0.0, NEG, s)
         take = s > best_s
@@ -146,7 +165,7 @@ def _select_kernel(
 @functools.partial(
     jax.jit,
     static_argnames=(
-        "k", "alpha", "beta", "gamma", "delta", "temp",
+        "k", "alpha", "beta", "gamma", "delta", "temp", "dyn_weights",
         "per_query_qos", "per_query_load", "per_query_rtt", "per_query_dead",
         "interpret",
     ),
@@ -158,6 +177,8 @@ def fused_select_pallas(
     load: jax.Array,  # [n_q_pad or 1, T_pad] f32 — per-tool U penalty
     rtt: jax.Array,   # [n_q_pad or 1, T_pad] f32 — per-tool R penalty
     dead: jax.Array,  # [n_q_pad or 1, T_pad] f32 — >0 excludes from argmax
+    w: jax.Array | None = None,  # (1, 128) f32 — live [alpha, beta, gamma,
+                                 # delta] in lanes 0..3 when dyn_weights
     *,
     k: int,
     alpha: float,
@@ -169,10 +190,12 @@ def fused_select_pallas(
     per_query_load: bool,
     per_query_rtt: bool,
     per_query_dead: bool,
+    dyn_weights: bool = False,
     interpret: bool = False,
 ):
     n_q, T_pad = sel.shape
     assert n_q % QUERY_TILE == 0 and T_pad % 128 == 0
+    assert (w is not None) == dyn_weights
     grid = (n_q // QUERY_TILE,)
 
     def _row_spec(per_query: bool) -> pl.BlockSpec:
@@ -182,27 +205,33 @@ def fused_select_pallas(
             else pl.BlockSpec((1, T_pad), lambda i: (0, 0))
         )
 
+    in_specs = [
+        pl.BlockSpec((QUERY_TILE, T_pad), lambda i: (i, 0)),
+        pl.BlockSpec((QUERY_TILE, T_pad), lambda i: (i, 0)),
+        _row_spec(per_query_qos),
+        _row_spec(per_query_load),
+        _row_spec(per_query_rtt),
+        _row_spec(per_query_dead),
+    ]
+    operands = [sel, val, qos, load, rtt, dead]
+    if dyn_weights:
+        in_specs.append(pl.BlockSpec((1, 128), lambda i: (0, 0)))
+        operands.append(w)
+
     out_spec = pl.BlockSpec((QUERY_TILE, 1), lambda i: (i, 0))
     out_shape = jax.ShapeDtypeStruct((n_q, 1), jnp.float32)
     idx, c, n, s = pl.pallas_call(
         functools.partial(
             _select_kernel, k=k, alpha=alpha, beta=beta, gamma=gamma,
-            delta=delta, temp=temp,
+            delta=delta, temp=temp, dyn_weights=dyn_weights,
         ),
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((QUERY_TILE, T_pad), lambda i: (i, 0)),
-            pl.BlockSpec((QUERY_TILE, T_pad), lambda i: (i, 0)),
-            _row_spec(per_query_qos),
-            _row_spec(per_query_load),
-            _row_spec(per_query_rtt),
-            _row_spec(per_query_dead),
-        ],
+        in_specs=in_specs,
         out_specs=[out_spec, out_spec, out_spec, out_spec],
         out_shape=[
             jax.ShapeDtypeStruct((n_q, 1), jnp.int32),
             out_shape, out_shape, out_shape,
         ],
         interpret=interpret,
-    )(sel, val, qos, load, rtt, dead)
+    )(*operands)
     return idx[:, 0], c[:, 0], n[:, 0], s[:, 0]

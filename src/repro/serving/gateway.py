@@ -27,10 +27,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import adaptive as _adaptive
 from repro.core import latency as latlib
 from repro.core.batch_routing import BatchRoutingEngine
 from repro.core.dataset import Server, Tool
 from repro.core.mesh_routing import ShardedRoutingEngine
+from repro.core.qos import load_penalty, rtt_penalty
 from repro.core.routing import ALGORITHMS, RoutingConfig, SonarRouter  # noqa: F401
 from repro.obs import Observability
 
@@ -317,6 +319,24 @@ class SonarGateway:
         # per-flush phase durations (wall ms), for span emission by the
         # serving drivers: [("encode", ms), ("dispatch", ms), ("merge", ms)]
         self.last_flush_phases: list = []
+        # SONAR-ADAPT: live weight-trajectory surface.  The scalar router
+        # (route/begin+finish) and the batched engine (route_batch) each
+        # hold learner state; the gauges publish whichever one last moved.
+        self.adaptive = hasattr(self.router, "observe_outcome")
+        self._m_adapt_w = None
+        self._m_adapt_baseline = None
+        self._m_adapt_steps = None
+        if self.adaptive:
+            self._m_adapt_w = {
+                name: reg.gauge(f"adapt_weight_{name}", "w")
+                for name in ("alpha", "beta", "gamma", "delta")
+            }
+            self._m_adapt_baseline = reg.gauge("adapt_baseline", "reward")
+            self._m_adapt_steps = reg.gauge("adapt_steps", "updates")
+            self._publish_adapt(self.router.state)
+        # begin()/finish() credit assignment: winner features stashed at
+        # begin, popped (FIFO per replica) at finish
+        self._pending_feats: dict = {}
 
     @property
     def telemetry(self) -> np.ndarray:
@@ -348,6 +368,45 @@ class SonarGateway:
         ):
             return None
         return self.region_rtt_ms[int(client_region)]
+
+    # -- SONAR-ADAPT: weight-trajectory observability -----------------------
+    def _publish_adapt(self, state) -> None:
+        """Mirror the live AdaptState into gauges + a trace instant so the
+        dashboard renders the weight trajectory as it learns."""
+        if self._m_adapt_w is None or state is None:
+            return
+        w = np.asarray(state.weights, np.float32)
+        for i, name in enumerate(("alpha", "beta", "gamma", "delta")):
+            self._m_adapt_w[name].set(float(w[i]))
+        self._m_adapt_baseline.set(float(state.baseline))
+        self._m_adapt_steps.set(float(state.step))
+        self.obs.tracer.instant(
+            "adapt_weights", cat="adapt",
+            args={
+                "alpha": float(w[0]), "beta": float(w[1]),
+                "gamma": float(w[2]), "delta": float(w[3]),
+                "baseline": float(state.baseline),
+                "step": int(state.step),
+            },
+        )
+
+    def _batch_feats(
+        self, idx: int, expertise: float, network: float,
+        client_region: Optional[int],
+    ) -> np.ndarray:
+        """[C, N, -U, -R] at a batched pick, rebuilt gateway-side from the
+        decision metadata plus the load/RTT terms at dispatch time."""
+        cfg = self.router.cfg
+        u = 0.0
+        if getattr(self.router, "uses_load", False) and cfg.gamma != 0.0:
+            u = float(load_penalty(
+                self._utilization()[idx], cfg.load_knee, cfg.load_sharp
+            ))
+        r = 0.0
+        rtt_row = self._rtt_row(client_region)
+        if rtt_row is not None and cfg.delta != 0.0:
+            r = float(rtt_penalty(rtt_row[idx], cfg.rtt_scale_ms))
+        return _adaptive.decision_feats(expertise, network, u, r)
 
     # -- health tracking (SONAR-FT ejection + probe re-admission) -----------
     def _health_mask(self, n_requests: Optional[int] = None) -> Optional[np.ndarray]:
@@ -419,6 +478,12 @@ class SonarGateway:
         idx = decision.server_idx
         self.in_flight[idx] += 1.0
         self._m_in_flight.inc()
+        if self.adaptive:
+            # FIFO per replica: `finish` is keyed by replica index only, so
+            # concurrent dispatches to one replica complete oldest-first.
+            self._pending_feats.setdefault(idx, []).append(
+                getattr(self.router, "last_feats", None)
+            )
         return RouteResult(
             replica_idx=idx, latency_ms=0.0, ok=True,
             expertise=decision.expertise, network=decision.network,
@@ -431,6 +496,11 @@ class SonarGateway:
         ok = latency_ms < latlib.OFFLINE_MS
         self._record_outcome(replica_idx, ok)
         self._observe(replica_idx, latency_ms)
+        if self.adaptive:
+            fifo = self._pending_feats.get(replica_idx)
+            feats = fifo.pop(0) if fifo else None
+            self.router.observe_outcome(latency_ms, ok=ok, feats=feats)
+            self._publish_adapt(self.router.state)
         return self._account(RouteResult(
             replica_idx=replica_idx, latency_ms=latency_ms, ok=ok,
             expertise=0.0, network=0.0,
@@ -454,6 +524,11 @@ class SonarGateway:
         ok = latency < latlib.OFFLINE_MS
         self._record_outcome(idx, ok)
         self._observe(idx, latency)
+        if self.adaptive:
+            # Synchronous path: the router's `last_feats` stash is still the
+            # decision we just executed.
+            self.router.observe_outcome(latency, ok=ok)
+            self._publish_adapt(self.router.state)
         return self._account(RouteResult(
             replica_idx=idx, latency_ms=latency, ok=ok,
             expertise=decision.expertise, network=decision.network,
@@ -572,26 +647,37 @@ class SonarGateway:
                 **geo_kw,
             )
             dispatch_ms += 1000.0 * (time.perf_counter() - t_phase)
+            adapting = getattr(eng, "adapt_state", None) is not None
             for qi in range(n_chunk):
                 idx = int(dec.server_idx[qi])
+                expertise = float(dec.expertise[qi])
+                network = float(dec.network[qi])
+                feats = None
+                if adapting:
+                    feats = self._batch_feats(
+                        idx, expertise, network,
+                        None if reg is None else int(reg[qi]),
+                    )
                 self.in_flight[idx] += 1.0
                 self._m_in_flight.inc()
-                picks.append(
-                    (idx, float(dec.expertise[qi]), float(dec.network[qi]))
-                )
+                picks.append((idx, expertise, network, feats))
         t_phase = time.perf_counter()
         out = []
-        for idx, expertise, network in picks:
+        for idx, expertise, network, feats in picks:
             latency = float(self.traces[idx, min(self.t, self.traces.shape[1] - 1)])
             ok = latency < latlib.OFFLINE_MS
             self._record_outcome(idx, ok)
             self._observe(idx, latency)
+            if feats is not None:
+                eng.observe_feedback(latency, ok=ok, feats=feats)
             self.in_flight[idx] = max(self.in_flight[idx] - 1.0, 0.0)
             self._m_in_flight.dec()
             out.append(self._account(RouteResult(
                 replica_idx=idx, latency_ms=latency, ok=ok,
                 expertise=expertise, network=network,
             )))
+        if getattr(eng, "adapt_state", None) is not None:
+            self._publish_adapt(eng.adapt_state)
         merge_ms = 1000.0 * (time.perf_counter() - t_phase)
         self.last_flush_phases = [
             ("encode", encode_ms), ("dispatch", dispatch_ms),

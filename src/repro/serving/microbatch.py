@@ -351,6 +351,8 @@ class MicroBatchPump:
         self.flush_log: list = []     # list[list[LiveRequest]] actually routed
         self.flush_times: list = []   # [(t_flush_ms, busy_ms)] per flush
         self.flush_phases: list = []  # per-flush gateway phase durations
+        self.weight_log: list = []    # [(flush_idx, [a, b, g, d])] when the
+                                      # gateway routes with SONAR-ADAPT
         self.results: dict = {}       # rid -> ServeResult
         self._now_ms = 0.0            # virtual clock, for the tracer
         self._m_flushes = self.obs.registry.counter(
@@ -398,6 +400,22 @@ class MicroBatchPump:
         self.flush_times.append((now_ms, busy_ms))
         self.flush_phases.append(list(self.gw.last_flush_phases))
         self._m_flushes.inc()
+        eng = getattr(self.gw, "_engine", None)
+        state = getattr(eng, "adapt_state", None) if eng is not None else None
+        if state is not None:
+            # weight trajectory sampled at flush granularity: the engine
+            # state is post-drain for this flush (feedback applies on the
+            # next routed program), so flush f logs the weights it routed
+            # with
+            w = [float(x) for x in np.asarray(state.weights)]
+            self.weight_log.append((fidx, w))
+            if tracer.enabled:
+                tracer.instant(
+                    "adapt_flush_weights", now_ms,
+                    args={"flush": fidx, "step": int(state.step),
+                          "alpha": w[0], "beta": w[1],
+                          "gamma": w[2], "delta": w[3]},
+                )
         for req, res in zip(batch, routed):
             self.results[req.rid] = ServeResult(
                 rid=req.rid, replica_idx=res.replica_idx, ok=res.ok,

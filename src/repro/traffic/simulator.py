@@ -88,6 +88,9 @@ class Request:
     service_ms: float = math.nan    # inflated service time of the winner
     net_ms: float = math.nan        # network latency of the winner
     server_idx: int = -1            # winning server
+    # winner features [C, N, -U, -R] from the last routing decision —
+    # SONAR-ADAPT's credit-assignment payload (None for other routers)
+    feats: Optional[np.ndarray] = None
 
 
 class _Dispatch:
@@ -262,12 +265,20 @@ class FleetTrafficSim:
             self.obs.tracer.instant(
                 "fail", now_ms, cat="fault", args={"rid": req.rid}
             )
+            # adaptation feedback: a terminally-failed request is reward 0
+            observe = getattr(self.router, "observe_outcome", None)
+            if observe is not None:
+                observe(0.0, ok=False, feats=req.feats)
 
     # -- event handlers ------------------------------------------------------
     def _dispatch(self, req: Request, now_ms: float, exclude: frozenset = frozenset()):
         server = self._route(req.text, now_ms, req.failed_servers, req.region)
         req.n_routes += 1
         self._m_routes.inc()
+        # SONAR-ADAPT credit assignment: stash the winner features of the
+        # routing decision that placed this copy; the outcome hooks in
+        # `_finish` / `_fail_copy` feed them back with the shaped reward
+        req.feats = getattr(self.router, "last_feats", None)
         if not self.platform.is_alive(server, self._tick(now_ms)):
             # connection refused: the station is crashed or partitioned
             self._fail_copy(req, server, now_ms, exclude, server_dead=True)
@@ -346,6 +357,12 @@ class FleetTrafficSim:
             disp.server, self._tick(req.t_finish_ms),
             req.t_finish_ms - req.t_arrival_ms,
         )
+        # adaptation feedback: completion latency vs. SLO, shaped by the
+        # learner itself (duck-typed so non-adaptive routers pay nothing)
+        observe = getattr(self.router, "observe_outcome", None)
+        if observe is not None:
+            observe(req.t_finish_ms - req.t_arrival_ms, ok=True,
+                    feats=req.feats)
         # cancel queued siblings (in-service ones run to completion as
         # wasted work, as real hedged requests do)
         for oq in self.queues:

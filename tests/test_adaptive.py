@@ -29,6 +29,75 @@ def test_beta_recovers_when_healthy():
     assert abs(r.beta - (1 - r.adapt.target_alpha)) < 0.1
 
 
+def test_beta_clamped_at_both_bounds():
+    """beta can never escape [beta_min, beta_max]: failures saturate at
+    the ceiling, and recovery toward a target below the floor (alpha=1.0
+    clamps target_beta to beta_min) parks exactly at the floor."""
+    cfg = AdaptiveConfig(beta_min=0.2, beta_max=0.9, target_alpha=1.0)
+    r = AdaptiveSonarRouter(SERVERS, adapt=cfg)
+    for _ in range(50):
+        r.observe(1000.0, online=False)
+        assert r.beta <= cfg.beta_max
+    assert r.beta == cfg.beta_max
+    for _ in range(200):
+        r.observe(25.0, online=True)
+        assert r.beta >= cfg.beta_min
+    assert r.beta == cfg.beta_min == cfg.target_beta
+
+
+def test_slo_soft_miss_applies_half_pressure():
+    """A completed call that misses the latency SLO bumps beta by half
+    the failure pressure: gain 1 + (failure_gain - 1) / 2 by default, or
+    the explicit soft_gain when configured."""
+    cfg = AdaptiveConfig(failure_gain=1.5)
+    assert cfg.effective_soft_gain == 1.25
+    r = AdaptiveSonarRouter(SERVERS, adapt=cfg)
+    b0 = r.beta
+    r.observe(cfg.latency_slo_ms + 1.0, online=True)
+    assert np.isclose(r.beta, min(b0 * 1.25, cfg.beta_max))
+    # explicit soft_gain wins over the half-pressure default
+    cfg2 = AdaptiveConfig(failure_gain=1.5, soft_gain=1.05)
+    r2 = AdaptiveSonarRouter(SERVERS, adapt=cfg2)
+    b0 = r2.beta
+    r2.observe(cfg2.latency_slo_ms + 1.0, online=True)
+    assert np.isclose(r2.beta, min(b0 * 1.05, cfg2.beta_max))
+    # at-SLO is NOT a miss: the boundary recovers instead of escalating
+    r3 = AdaptiveSonarRouter(SERVERS)
+    r3.observe(1000.0, online=False)
+    high = r3.beta
+    r3.observe(r3.adapt.latency_slo_ms, online=True)
+    assert r3.beta <= high
+
+
+def test_recovery_is_monotone_and_never_overshoots():
+    """Healthy picks walk beta toward the clamped target one bounded step
+    at a time from EITHER side: the trajectory is monotone and parks on
+    the target without crossing it."""
+    cfg = AdaptiveConfig()
+    target = cfg.target_beta
+    # from above (post-failure spike)
+    r = AdaptiveSonarRouter(SERVERS, adapt=cfg)
+    for _ in range(6):
+        r.observe(1000.0, online=False)
+    prev = r.beta
+    assert prev > target
+    while r.beta > target:
+        r.observe(25.0, online=True)
+        assert r.beta <= prev and r.beta >= target
+        prev = r.beta
+    assert r.beta == target
+    # from below (floor start, target above the floor)
+    low = AdaptiveConfig(target_alpha=0.5, beta_min=0.1)
+    r2 = AdaptiveSonarRouter(SERVERS, adapt=low)
+    r2.beta = low.beta_min
+    prev = r2.beta
+    while r2.beta < low.target_beta:
+        r2.observe(25.0, online=True)
+        assert r2.beta >= prev and r2.beta <= low.target_beta
+        prev = r2.beta
+    assert r2.beta == low.target_beta
+
+
 def test_adaptive_router_in_agent_loop():
     """End-to-end: starts semantic-heavy (alpha=0.8) yet still achieves 0%
     failures in the hybrid scenario — the controller shifts weight to the

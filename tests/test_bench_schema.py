@@ -27,14 +27,14 @@ GOOD_GEO = {
         {
             "algo": "sonar_geo", "n_regions": 3, "rtt_scale": 3.0,
             "mean_cross_rtt_ms": 347.0, "rtt_dominant": True,
-            "p50_ms": 157.0, "p99_ms": 866.0, "goodput_rps": 4.5,
-            "failed": 0, "local_share": 0.99,
+            "p50_ms": 157.0, "p99_ms": 866.0, "p99_tail_ms": 860.0,
+            "goodput_rps": 4.5, "failed": 0, "local_share": 0.99,
         },
         {
             "algo": "sonar_lb", "n_regions": 3, "rtt_scale": 3.0,
             "mean_cross_rtt_ms": 347.0, "rtt_dominant": True,
-            "p50_ms": 446.0, "p99_ms": 1238.0, "goodput_rps": 4.47,
-            "failed": 0, "local_share": 0.35,
+            "p50_ms": 446.0, "p99_ms": 1238.0, "p99_tail_ms": 1230.0,
+            "goodput_rps": 4.47, "failed": 0, "local_share": 0.35,
         },
     ],
 }
@@ -42,11 +42,12 @@ GOOD_GEO = {
 
 def test_known_schemas_cover_all_artifacts():
     assert sorted(SCHEMAS) == [
-        "bench-results", "chaos-recovery", "geo-routing", "mega-fleet",
-        "obs-overhead", "offered-load", "serve-metrics", "serve-trace",
-        "serving-qps",
+        "adaptive-routing", "bench-results", "chaos-recovery", "geo-routing",
+        "mega-fleet", "obs-overhead", "offered-load", "serve-metrics",
+        "serve-trace", "serving-qps",
     ]
     assert schema_name_for("some/dir/geo-routing.json") == "geo-routing"
+    assert schema_name_for("ci/adaptive-routing.json") == "adaptive-routing"
     # committed perf-trajectory baselines map to the plain schema names
     assert schema_name_for("BENCH_serving_qps.json") == "serving-qps"
     assert schema_name_for("repo/BENCH_mega_fleet.json") == "mega-fleet"

@@ -1,0 +1,169 @@
+"""Golden weight trajectory for SONAR-ADAPT (PR-3 golden-trace pattern).
+
+Frozen-seed artifact committed under ``tests/golden/adaptive/``:
+
+  trajectory.npz — the scalar SONAR-ADAPT weight vector sampled every
+                   ``SAMPLE_EVERY`` updates while the fleet simulator
+                   drives it through the canonical chaos scenario
+                   (``standard_fault_mix`` at intensity 0.8), plus the
+                   final weights / baseline / step count
+
+The trajectory is a deterministic function of (seed, scenario, update
+rule): regenerating it from the same seed and comparing catches any
+unintended change to the EG step, the reward shaping, the feedback
+plumbing, or the simulator's outcome stream.  A sha256 manifest guards
+the fixture itself against stray edits.
+
+Regenerate (after an *intended* change to any of the above) with:
+
+    PYTHONPATH=src python tests/test_golden_adaptive.py --regen
+"""
+import hashlib
+import json
+import pathlib
+
+import jax
+import numpy as np
+
+from repro.core import latency as L
+from repro.core.adaptive import AdaptConfig, SonarAdaptRouter
+from repro.core.platform import NetMCPPlatform
+from repro.core.routing import RoutingConfig
+from repro.chaos import build_schedule, standard_fault_mix
+from repro.traffic import (
+    FleetTrafficSim,
+    QueueConfig,
+    poisson_arrivals,
+    replica_fleet,
+)
+
+GOLDEN_DIR = pathlib.Path(__file__).parent / "golden" / "adaptive"
+TRAJ_NPZ = GOLDEN_DIR / "trajectory.npz"
+MANIFEST = GOLDEN_DIR / "manifest.json"
+
+SEED = 2024
+N_SERVERS = 6
+HORIZON_S, DT_S = 240.0, 1.0
+RATE_RPS = 4.0
+INTENSITY = 0.8
+SAMPLE_EVERY = 8                 # weight-history sampling stride (updates)
+
+QUERY_TEXTS = [
+    "search the web for the latest news",
+    "refactor this function in the repository",
+    "what is the weather forecast tomorrow",
+]
+
+# Cross-platform slack (same rationale as tests/test_golden_traces.py):
+# ULP-level transcendental drift across XLA versions, orders of magnitude
+# below semantic drift — a dropped term or reordered feedback moves the
+# trajectory by whole percent within a few updates.
+RTOL, ATOL = 1e-4, 1e-2
+
+
+def synth_trajectory() -> dict:
+    servers = replica_fleet(N_SERVERS)
+    n_steps = L.trace_horizon_steps(HORIZON_S, DT_S)
+    faults = standard_fault_mix(INTENSITY, N_SERVERS, HORIZON_S)
+    chaos = build_schedule(faults, N_SERVERS, n_steps, DT_S, seed=SEED)
+    plat = NetMCPPlatform(
+        servers,
+        profiles=[L.ideal_profile() for _ in servers],
+        scenario="ideal", seed=SEED, horizon_s=HORIZON_S, dt_s=DT_S,
+        chaos=chaos,
+    )
+    cfg = RoutingConfig(top_s=N_SERVERS, top_k=N_SERVERS)
+    router = SonarAdaptRouter(servers, cfg, adapt=AdaptConfig())
+    arrivals = poisson_arrivals(
+        jax.random.PRNGKey(SEED), RATE_RPS, HORIZON_S
+    )
+    sim = FleetTrafficSim(
+        plat, router,
+        QueueConfig(capacity=2, queue_limit=8, base_service_ms=150.0,
+                    inflation=1.0),
+        retry_budget=2, seed=SEED,
+    )
+    sim.run(arrivals, QUERY_TEXTS)
+    hist = np.asarray(router.weight_history, np.float32)
+    return {
+        "sampled_weights": hist[::SAMPLE_EVERY].copy(),
+        "final_weights": np.asarray(router.state.weights, np.float32),
+        "final_baseline": np.float32(router.state.baseline),
+        "n_updates": np.int64(router.state.step),
+    }
+
+
+def _sha256(path: pathlib.Path) -> str:
+    return hashlib.sha256(path.read_bytes()).hexdigest()
+
+
+def regen() -> None:
+    GOLDEN_DIR.mkdir(parents=True, exist_ok=True)
+    np.savez(TRAJ_NPZ, **synth_trajectory())
+    MANIFEST.write_text(
+        json.dumps({TRAJ_NPZ.name: _sha256(TRAJ_NPZ)}, indent=2) + "\n"
+    )
+
+
+# ---------------------------------------------------------------------------
+# Drift tests
+# ---------------------------------------------------------------------------
+
+def test_trajectory_matches_golden():
+    stored = np.load(TRAJ_NPZ)
+    fresh = synth_trajectory()
+    assert sorted(stored.files) == sorted(fresh)
+    assert int(fresh["n_updates"]) == int(stored["n_updates"]), (
+        "update count drifted — the simulator emits a different outcome "
+        "stream (or feedback is dropped/duplicated somewhere)"
+    )
+    for name in ("sampled_weights", "final_weights", "final_baseline"):
+        np.testing.assert_allclose(
+            fresh[name], stored[name], rtol=RTOL, atol=ATOL,
+            err_msg=f"adaptive trajectory field '{name}' drifted from the "
+                    "golden fixture — regenerate via --regen if intentional",
+        )
+
+
+def test_golden_adaptive_fixture_integrity():
+    """Fixture matches its committed checksum (guards hand-edits)."""
+    manifest = json.loads(MANIFEST.read_text())
+    assert manifest[TRAJ_NPZ.name] == _sha256(TRAJ_NPZ), (
+        f"{TRAJ_NPZ.name} does not match its manifest checksum; "
+        "regenerate via --regen"
+    )
+
+
+def test_golden_adaptive_fixture_has_expected_signatures():
+    """Sanity on the frozen data itself: the learner genuinely learned.
+
+    Under the chaos mix the reward stream is informative, so the weight
+    trajectory must (a) contain a meaningful number of updates, (b) leave
+    the shared init, and (c) stay inside the configured clip box at every
+    sampled step.
+    """
+    t = np.load(TRAJ_NPZ)
+    acfg = AdaptConfig()
+    w = t["sampled_weights"]
+    init = np.asarray(
+        [RoutingConfig().alpha, RoutingConfig().beta,
+         RoutingConfig().gamma, RoutingConfig().delta], np.float32
+    )
+    assert int(t["n_updates"]) >= 100
+    assert w.shape[1] == 4
+    assert (w >= acfg.w_min - 1e-6).all() and (w <= acfg.w_max + 1e-6).all()
+    assert np.abs(t["final_weights"] - init).max() > 1e-3, (
+        "frozen trajectory never left the shared init — the fixture "
+        "would not exercise the learner"
+    )
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--regen", action="store_true")
+    args = ap.parse_args()
+    if args.regen:
+        regen()
+        print(f"regenerated fixtures under {GOLDEN_DIR}")

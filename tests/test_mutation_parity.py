@@ -160,6 +160,118 @@ def test_parity_suite_detects_scalar_mutation(name, monkeypatch):
     )
 
 
+# ---------------------------------------------------------------------------
+# Adaptation-trajectory mutations (SONAR-ADAPT)
+# ---------------------------------------------------------------------------
+#
+# The zero-lr identity suite pins that SONAR-ADAPT *without* learning is
+# byte-identical to the hand-tuned routers; these mutations pin the other
+# direction — that the adaptation-trajectory assertion ("with lr != 0 and
+# informative feedback, the weight vector leaves its init") genuinely
+# depends on the update math and the reward signal.  Killing either one
+# (identity `_adapt_step`, dead `shape_reward`) must freeze the
+# trajectory; a trajectory check that still "moves" would be asserting
+# nothing about the learner.
+
+def _scalar_weights_moved(n_steps: int = 24) -> bool:
+    """Drive the scalar SONAR-ADAPT feedback loop with informative
+    outcomes (alternating SLO hits and deep misses on a load-skewed
+    fleet) and report whether the weight vector left its init."""
+    from repro.core import adaptive
+
+    servers, hist, load, _, _ = _fixture("load")
+    router = adaptive.SonarAdaptRouter(
+        servers, CFG, adapt=adaptive.AdaptConfig(slo_ms=200.0)
+    )
+    init = np.asarray(router.state.weights).copy()
+    for i in range(n_steps):
+        router.select(QUERY, hist, load)
+        router.observe_outcome(60.0 if i % 2 else 1200.0, ok=bool(i % 3))
+    return bool(np.any(np.asarray(router.state.weights) != init))
+
+
+def _engine_weights_moved(n_rounds: int = 12) -> bool:
+    """Same trajectory probe through the batched engine's fused in-jit
+    update (feedback drains into the routed program on the next call)."""
+    from repro.core import adaptive
+
+    servers, hist, load, _, _ = _fixture("load")
+    eng = BatchRoutingEngine(
+        servers, CFG, algo="sonar_adapt",
+        adapt=adaptive.AdaptConfig(slo_ms=200.0),
+    )
+    init = np.asarray(eng.adapt_state.weights).copy()
+    feats = np.asarray([0.6, 0.4, -0.3, 0.0], np.float32)
+    for i in range(n_rounds):
+        eng.observe_feedback(
+            60.0 if i % 2 else 1200.0, ok=bool(i % 3), feats=feats
+        )
+        eng.route_texts([QUERY], hist, load)
+    return bool(np.any(np.asarray(eng.adapt_state.weights) != init))
+
+
+@pytest.mark.parametrize("probe", ["scalar", "engine"])
+def test_adaptation_trajectory_moves_unmutated(probe):
+    """Green baseline: with the real update and reward, the trajectory
+    assertion holds on both the scalar and the fused engine path."""
+    moved = _scalar_weights_moved() if probe == "scalar" else (
+        _engine_weights_moved()
+    )
+    assert moved, (
+        f"{probe}: SONAR-ADAPT weights never left their init under "
+        "informative feedback — the trajectory probe is vacuous"
+    )
+
+
+@pytest.mark.parametrize("probe", ["scalar", "engine"])
+def test_mutation_identity_update_freezes_trajectory(probe, monkeypatch):
+    """Killing the EG step (identity `_adapt_step`) must freeze the
+    weight trajectory on both update paths.  `_adapt_step` is looked up
+    on the module at trace time, so the patch + a compilation-cache drop
+    reaches the standalone jit update AND the engine's fused program."""
+    import jax
+
+    from repro.core import adaptive
+
+    monkeypatch.setattr(
+        adaptive, "_adapt_step",
+        lambda state, rewards, feats, valid, acfg: state,
+    )
+    jax.clear_caches()
+    try:
+        moved = _scalar_weights_moved() if probe == "scalar" else (
+            _engine_weights_moved()
+        )
+        assert not moved, (
+            f"{probe}: weights moved with the update step mutated to the "
+            "identity — the trajectory assertion does not depend on "
+            "`_adapt_step`"
+        )
+    finally:
+        jax.clear_caches()
+
+
+@pytest.mark.parametrize("probe", ["scalar", "engine"])
+def test_mutation_dead_reward_freezes_trajectory(probe, monkeypatch):
+    """Killing the reward signal (shape_reward == 0 for every outcome)
+    must also freeze the trajectory: with a zero reward stream and a zero
+    baseline the advantage vanishes, so a moving weight vector would mean
+    the learner is not actually driven by the simulator-emitted reward.
+    (Host-side patch — reward shaping happens before the jit boundary.)"""
+    from repro.core import adaptive
+
+    monkeypatch.setattr(
+        adaptive, "shape_reward", lambda latency_ms, ok, slo_ms=800.0: 0.0
+    )
+    moved = _scalar_weights_moved() if probe == "scalar" else (
+        _engine_weights_moved()
+    )
+    assert not moved, (
+        f"{probe}: weights moved with a dead reward signal — the "
+        "trajectory assertion does not depend on `shape_reward`"
+    )
+
+
 def test_parity_suite_detects_oracle_mutation(monkeypatch):
     """Symmetry: perturbing the *batched* side (the jnp oracle's fusion)
     is detected too — the probe is not blind in either direction."""

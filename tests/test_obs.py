@@ -43,8 +43,12 @@ from repro.serving.microbatch import BatchingPolicy, MicroBatcher, MicroBatchPum
 from repro.traffic import FleetTrafficSim, QueueConfig, poisson_arrivals, replica_fleet
 from repro.traffic.source import LiveRequest, request_schedule
 
+from repro.core import adaptive  # noqa: F401  registers sonar_adapt, so the
+                                 # audit sweep below covers it deterministically
+
 POOL = dataset.build_server_pool(seed=0)
 ALGOS = sorted(routing.ALGORITHMS)
+assert "sonar_adapt" in ALGOS
 TEXTS = [
     "what is the latest news about the stock market today",
     "search the web for current weather information",

@@ -23,14 +23,17 @@ import pytest
 from hypothesis import given, settings
 from hypothesis import strategies as st
 
-from repro.core import bm25, dataset, quantize, routing
+from repro.core import adaptive, bm25, dataset, quantize, routing
 from repro.core.batch_routing import BatchRoutingEngine
 from repro.core.latency import OFFLINE_MS
 from repro.core.mesh_routing import ShardedRoutingEngine
 from repro.core.routing import RoutingConfig
 from repro.traffic import replica_fleet
 
+# importing repro.core.adaptive registers "sonar_adapt", so ALGOS is the
+# same set regardless of which test module imported it first
 ALGOS = sorted(routing.ALGORITHMS)
+assert "sonar_adapt" in ALGOS
 POOL = dataset.build_server_pool(seed=0)
 QUERY_TEXTS = [
     "search the web for the latest news",
@@ -157,6 +160,107 @@ def test_sonar_ft_zero_faults_is_byte_identical_to_sonar_lb(
             np.testing.assert_array_equal(
                 getattr(da, field), getattr(db, field),
                 err_msg=f"kernels={use_kernels} field={field}",
+            )
+
+
+# operand sets that neutralize SONAR-ADAPT's extra capability terms down
+# to each hand-tuned variant: a term whose operand is absent compiles to
+# the SAME inactive branch in both programs, so with lr = 0 (weights can
+# never leave the hand-tuned init) the decisions must be byte-identical
+ADAPT_REDUCTIONS = {
+    "sonar": dict(load=False, age=False, mask=False, rtt=False),
+    "sonar_lb": dict(load=True, age=False, mask=False, rtt=False),
+    "sonar_ft": dict(load=True, age=True, mask=True, rtt=False),
+    # sonar_geo subclasses SONAR-LB, not -FT: no staleness/failover terms
+    "sonar_geo": dict(load=True, age=False, mask=False, rtt=True),
+}
+
+
+@settings(max_examples=8, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    base=st.sampled_from(sorted(ADAPT_REDUCTIONS)),
+    n_servers=st.integers(2, 6),
+    identical=st.booleans(),
+)
+def test_zero_lr_adapt_byte_identical_to_hand_tuned_four_paths(
+    seed, base, n_servers, identical
+):
+    """Acceptance gate: with lr = 0 SONAR-ADAPT is byte-identical to each
+    hand-tuned variant on every decision field (idx AND scores) across
+    all four routing paths — scalar select, batched jnp engine, fused
+    Pallas kernel path, and the mesh-sharded engine — even while
+    feedback keeps arriving (the zero-lr update is the identity)."""
+    servers, hist, load, age, mask, rtt = _materialize(
+        seed, n_servers, identical, False, "some"
+    )
+    use = ADAPT_REDUCTIONS[base]
+    load = load if use["load"] else None
+    age = age if use["age"] else None
+    mask = mask if use["mask"] else None
+    rtt = rtt if use["rtt"] else None
+    cfg = RoutingConfig(top_s=min(4, n_servers), top_k=5)
+    acfg = adaptive.AdaptConfig(lr=0.0)
+
+    r_base = routing.make_router(base, servers, cfg)
+    r_ad = adaptive.SonarAdaptRouter(servers, cfg, adapt=acfg)
+    init_w = np.asarray(r_ad.state.weights).copy()
+    for q in QUERY_TEXTS:
+        a = r_base.select(
+            q, hist, load, telemetry_age_s=age, failed_mask=mask,
+            client_rtt_ms=rtt,
+        )
+        b = r_ad.select(
+            q, hist, load, telemetry_age_s=age, failed_mask=mask,
+            client_rtt_ms=rtt,
+        )
+        assert (
+            a.server_idx, a.tool_idx, a.expertise, a.network, a.fused
+        ) == (b.server_idx, b.tool_idx, b.expertise, b.network, b.fused)
+        r_ad.observe_outcome(120.0, ok=True)       # feedback flows anyway
+    np.testing.assert_array_equal(np.asarray(r_ad.state.weights), init_w)
+
+    engines = []
+    for use_kernels in (False, True):
+        kw = {"interpret": True} if use_kernels else {}
+        engines.append((
+            f"batch(kernels={use_kernels})",
+            BatchRoutingEngine(
+                servers, cfg, algo=base, use_kernels=use_kernels,
+                index=r_base.index, **kw,
+            ),
+            BatchRoutingEngine(
+                servers, cfg, algo="sonar_adapt", use_kernels=use_kernels,
+                adapt=acfg, index=r_base.index, **kw,
+            ),
+        ))
+    engines.append((
+        "sharded",
+        ShardedRoutingEngine(
+            servers, cfg, algo=base, n_shards=min(3, n_servers),
+            use_kernels=False, index=r_base.index,
+        ),
+        ShardedRoutingEngine(
+            servers, cfg, algo="sonar_adapt", n_shards=min(3, n_servers),
+            use_kernels=False, adapt=acfg, index=r_base.index,
+        ),
+    ))
+    for label, e_base, e_ad in engines:
+        e_ad.observe_feedback(
+            120.0, ok=True, feats=np.zeros(4, np.float32)
+        )
+        da = e_base.route_texts(QUERY_TEXTS, hist, load, age, mask, rtt)
+        db = e_ad.route_texts(QUERY_TEXTS, hist, load, age, mask, rtt)
+        for field in ("server_idx", "tool_idx", "expertise", "network",
+                      "fused"):
+            np.testing.assert_array_equal(
+                getattr(da, field), getattr(db, field),
+                err_msg=f"{base} {label} field={field}",
+            )
+        if e_ad.adapt_state is not None:
+            np.testing.assert_array_equal(
+                np.asarray(e_ad.adapt_state.weights), init_w,
+                err_msg=f"{base} {label}: zero-lr weights moved",
             )
 
 

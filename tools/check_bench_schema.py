@@ -144,8 +144,8 @@ def check_geo_routing(payload: dict) -> list:
     errs.extend(_check_points(payload, {
         "algo": str, "n_regions": int, "rtt_scale": NUM,
         "mean_cross_rtt_ms": NUM, "rtt_dominant": bool, "p50_ms": NUM,
-        "p99_ms": NUM, "goodput_rps": NUM, "failed": int,
-        "local_share": NUM,
+        "p99_ms": NUM, "p99_tail_ms": NUM, "goodput_rps": NUM,
+        "failed": int, "local_share": NUM,
     }, min_points=2))
     return errs
 
@@ -216,6 +216,64 @@ def check_obs_overhead(payload: dict) -> list:
     return errs
 
 
+def check_adaptive_routing(payload: dict) -> list:
+    errs = []
+    for k, t in (("shared_weights", dict), ("adapt", dict),
+                 ("offered_load", dict), ("chaos", dict), ("geo", dict),
+                 ("trajectory", dict), ("overhead", dict)):
+        if k not in payload:
+            errs.append(f"missing key '{k}'")
+        else:
+            errs.extend(_check_type(k, payload[k], t))
+    sw = payload.get("shared_weights")
+    if isinstance(sw, dict):
+        for k in ("alpha", "beta", "gamma", "delta"):
+            if not _is_num(sw.get(k)):
+                errs.append(f"shared_weights.{k}: expected number")
+    sweeps = {
+        "offered_load": {"algo": str, "rate_rps": NUM, "goodput_rps": NUM,
+                         "p99_ms": NUM, "failed": int},
+        "chaos": {"algo": str, "intensity": NUM, "ssr": NUM,
+                  "failures": int, "recovery_s": NUM},
+        "geo": {"algo": str, "n_regions": int, "rtt_scale": NUM,
+                "p99_ms": NUM, "p99_tail_ms": NUM, "goodput_rps": NUM,
+                "local_share": NUM},
+    }
+    for name, point_keys in sweeps.items():
+        sec = payload.get(name)
+        if not isinstance(sec, dict):
+            continue
+        sub_errs = _check_points(sec, point_keys, min_points=3)
+        errs.extend(f"{name}.{e}" for e in sub_errs)
+        algos = {p.get("algo") for p in sec.get("points", [])
+                 if isinstance(p, dict)}
+        if algos and "sonar_adapt" not in algos:
+            errs.append(f"{name}.points: no sonar_adapt points")
+    traj = payload.get("trajectory")
+    if isinstance(traj, dict):
+        if not isinstance(traj.get("weights"), list):
+            errs.append("trajectory.weights: expected list")
+        if not isinstance(traj.get("n_updates"), int):
+            errs.append("trajectory.n_updates: expected int")
+        elif traj["n_updates"] <= 0:
+            errs.append("trajectory.n_updates: expected > 0 "
+                        "(adaptation never ran)")
+    ov = payload.get("overhead")
+    if isinstance(ov, dict):
+        for k in ("gate_pct", "overhead_pct", "overhead_mean_pct"):
+            if not _is_num(ov.get(k)):
+                errs.append(f"overhead.{k}: expected number")
+        for arm in ("static", "adaptive"):
+            d = ov.get(arm)
+            if not isinstance(d, dict):
+                errs.append(f"overhead.{arm}: expected dict")
+                continue
+            for k in ("mean_ms", "p50_ms", "p99_ms"):
+                if not _is_num(d.get(k)):
+                    errs.append(f"overhead.{arm}.{k}: expected number")
+    return errs
+
+
 def check_serve_trace(payload: dict) -> list:
     """Chrome Trace Event Format sanity (the --trace artifact)."""
     errs = []
@@ -278,6 +336,7 @@ SCHEMAS: dict = {
     "chaos-recovery": check_chaos_recovery,
     "mega-fleet": check_mega_fleet,
     "geo-routing": check_geo_routing,
+    "adaptive-routing": check_adaptive_routing,
     "serving-qps": check_serving_qps,
     "obs-overhead": check_obs_overhead,
     "serve-trace": check_serve_trace,
