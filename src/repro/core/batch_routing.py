@@ -27,8 +27,8 @@ routed repeatedly (e.g. every retry turn of the batched episode driver)
 without touching Python strings again.
 
 Selection parity: for identical inputs the engine is argmax-identical to
-`Router.select` for every algorithm (all seven: RAG / RerankRAG / PRAG /
-SONAR / SONAR-LB / SONAR-FT / SONAR-GEO) — top-k ties break toward lower indices in
+`Router.select` for every algorithm (RAG / RerankRAG / PRAG / SONAR /
+SONAR-LB / SONAR-FT / SONAR-GEO / SONAR-SESSION) — top-k ties break toward lower indices in
 both (stable argsort vs lax.top_k), invalid candidates (fewer than k
 tools on candidate servers) are excluded from both softmax mass and the
 final argmax, and the argmax tie-breaks toward the higher-ranked
@@ -195,8 +195,8 @@ def encode_for_index(
     static_argnames=(
         "top_s", "top_k", "alpha", "beta", "gamma", "load_knee", "load_sharp",
         "delta", "rtt_scale", "temp", "stale_half_life", "use_network",
-        "use_load", "use_staleness", "use_failover", "use_rtt", "rerank",
-        "use_kernels", "qos_params", "interpret",
+        "use_load", "use_staleness", "use_failover", "use_rtt", "use_aff",
+        "eps", "rerank", "use_kernels", "qos_params", "interpret",
     ),
 )
 def _route_pipeline(
@@ -213,6 +213,8 @@ def _route_pipeline(
     client_rtt: Optional[jax.Array],     # [n_servers] or [n_q, n_servers] ms
     region_idx: Optional[jax.Array],     # [n_q] i32 client region per request
     region_rtt: Optional[jax.Array],     # [n_regions, n_servers] ms
+    affinity: Optional[jax.Array] = None,  # [n_servers] or [n_q, n_servers]
+                                           # session warmth W in [0,1]
     adapt_w: Optional[jax.Array] = None,  # [4] f32 live [alpha, beta, gamma,
                                           # delta] (SONAR-ADAPT); None keeps
                                           # the static specialization
@@ -233,6 +235,8 @@ def _route_pipeline(
     use_staleness: bool,
     use_failover: bool,
     use_rtt: bool,
+    use_aff: bool = False,
+    eps: float = 0.0,
     rerank: bool,
     use_kernels: bool,
     qos_params: QosParams,
@@ -349,6 +353,19 @@ def _route_pipeline(
         tool_rtt = jnp.zeros((n_tools,), jnp.float32)
         eff_delta = 0.0
 
+    # -- SONAR-SESSION sticky-affinity bonus: per-(session, server) warmth
+    # W in [0,1], broadcast to the host server's tools.  The warmth array
+    # is *data* (eps alone is static), so per-request affinity changes
+    # never recompile; when absent the term vanishes from the traced graph
+    # and the compiled program is byte-identical to SONAR-GEO's. --
+    if use_aff and affinity is not None:
+        if affinity.ndim == 2:                              # [n_q, n_servers]
+            tool_aff = jnp.take(affinity, tool_server, axis=1)
+        else:
+            tool_aff = affinity[tool_server]                # [n_tools]
+    else:
+        tool_aff = None
+
     # -- SONAR-FT failed-server mask, broadcast to the host server's tools --
     if use_failover and dead_mask is not None:
         dm = dead_mask.astype(jnp.float32)
@@ -369,6 +386,7 @@ def _route_pipeline(
             q_rerank if rerank else None,
             k=top_k, alpha=eff_alpha, beta=eff_beta, gamma=eff_gamma,
             tool_rtt=tool_rtt, delta=eff_delta,
+            tool_aff=tool_aff, eps=eps,
             temp=temp, interpret=interpret,
         )
     else:
@@ -376,6 +394,7 @@ def _route_pipeline(
             sel, val, tool_qos, tool_load, tool_dead,
             k=top_k, alpha=eff_alpha, beta=eff_beta, gamma=eff_gamma,
             tool_rtt=tool_rtt, delta=eff_delta,
+            tool_aff=tool_aff, eps=eps,
             temp=temp,
         )
     server_idx = tool_server[tool_idx]
@@ -387,8 +406,8 @@ def _route_pipeline(
     static_argnames=(
         "top_s", "top_k", "alpha", "beta", "gamma", "load_knee", "load_sharp",
         "delta", "rtt_scale", "temp", "stale_half_life", "use_network",
-        "use_load", "use_staleness", "use_failover", "use_rtt", "rerank",
-        "use_kernels", "qos_params", "interpret", "acfg",
+        "use_load", "use_staleness", "use_failover", "use_rtt", "use_aff",
+        "eps", "rerank", "use_kernels", "qos_params", "interpret", "acfg",
     ),
     donate_argnums=(0,),
 )
@@ -411,6 +430,7 @@ def _route_adaptive(
     client_rtt: Optional[jax.Array],
     region_idx: Optional[jax.Array],
     region_rtt: Optional[jax.Array],
+    affinity: Optional[jax.Array] = None,
     *,
     acfg,
     top_s: int,
@@ -429,6 +449,8 @@ def _route_adaptive(
     use_staleness: bool,
     use_failover: bool,
     use_rtt: bool,
+    use_aff: bool = False,
+    eps: float = 0.0,
     rerank: bool,
     use_kernels: bool,
     qos_params: QosParams,
@@ -449,13 +471,14 @@ def _route_adaptive(
     server_idx, tool_idx, c, n, s = _route_pipeline(
         q_server, q_tool, q_rerank, w_server, w_tool, tool_server,
         latency_hist, server_load, telemetry_age, dead_mask,
-        client_rtt, region_idx, region_rtt, new_state.weights,
+        client_rtt, region_idx, region_rtt, affinity, new_state.weights,
         top_s=top_s, top_k=top_k, alpha=alpha, beta=beta, gamma=gamma,
         load_knee=load_knee, load_sharp=load_sharp, delta=delta,
         rtt_scale=rtt_scale, temp=temp, stale_half_life=stale_half_life,
         use_network=use_network, use_load=use_load,
         use_staleness=use_staleness, use_failover=use_failover,
-        use_rtt=use_rtt, rerank=rerank, use_kernels=use_kernels,
+        use_rtt=use_rtt, use_aff=use_aff, eps=eps,
+        rerank=rerank, use_kernels=use_kernels,
         qos_params=qos_params, interpret=interpret,
     )
     return server_idx, tool_idx, c, n, s, new_state
@@ -493,6 +516,7 @@ class BatchRoutingEngine:
         self.uses_staleness = router_cls.uses_staleness
         self.uses_failover = router_cls.uses_failover
         self.uses_rtt = router_cls.uses_rtt
+        self.uses_affinity = router_cls.uses_affinity
         self.rerank = router_cls.rerank
         self.use_kernels = use_kernels
         self.interpret = interpret
@@ -580,6 +604,7 @@ class BatchRoutingEngine:
         client_rtt_ms: Optional[np.ndarray] = None,
         client_region: Optional[np.ndarray] = None,
         region_rtt_ms: Optional[np.ndarray] = None,
+        affinity: Optional[np.ndarray] = None,
         route_stats=None,
         n_real=None,
     ) -> BatchDecisions:
@@ -618,6 +643,12 @@ class BatchRoutingEngine:
         region_rtt_ms : np.ndarray, optional
             f32 [n_regions, n_servers] region->server propagation RTT
             matrix (e.g. `repro.geo.GeoPlacement.region_server_rtt`).
+        affinity : np.ndarray, optional
+            f32 [n_servers] (one session per batch — the gateway
+            micro-batch case) or [n_q, n_servers] (per-request warmth
+            rows) session warmth W in [0, 1].  SONAR-SESSION only; the
+            bonus ``+eps*W`` rides as data, so warmth updates between
+            batches never trigger a recompile.
         route_stats : repro.obs.DeviceRouteStats, optional
             Jit-safe observability accumulator: the pipeline's *device*
             outputs are folded into it by a donated jit `.at[].add`
@@ -658,6 +689,9 @@ class BatchRoutingEngine:
             elif client_region is not None and region_rtt_ms is not None:
                 reg_idx = jnp.asarray(client_region, jnp.int32)
                 reg_rtt = jnp.asarray(region_rtt_ms, jnp.float32)
+        aff = None
+        if self.uses_affinity and affinity is not None and self.cfg.eps != 0.0:
+            aff = jnp.asarray(affinity, jnp.float32)
         statics = dict(
             top_s=self.cfg.top_s,
             top_k=self.cfg.top_k,
@@ -675,6 +709,8 @@ class BatchRoutingEngine:
             use_staleness=age is not None,
             use_failover=dead is not None,
             use_rtt=rtt is not None or reg_idx is not None,
+            use_aff=aff is not None,
+            eps=self.cfg.eps if aff is not None else 0.0,
             rerank=self.rerank,
             use_kernels=self.use_kernels,
             qos_params=self.cfg.qos,
@@ -695,6 +731,7 @@ class BatchRoutingEngine:
             rtt,
             reg_idx,
             reg_rtt,
+            aff,
         )
         if self.adapt_state is not None and self.adapt_cfg.lr != 0.0:
             # fused update + route: one program, no extra dispatch.  At
@@ -735,11 +772,12 @@ class BatchRoutingEngine:
         client_rtt_ms: Optional[np.ndarray] = None,
         client_region: Optional[np.ndarray] = None,
         region_rtt_ms: Optional[np.ndarray] = None,
+        affinity: Optional[np.ndarray] = None,
     ) -> BatchDecisions:
         return self.route(
             self.encode(queries), latency_hist, server_load,
             telemetry_age_s, failed_mask, client_rtt_ms,
-            client_region, region_rtt_ms,
+            client_region, region_rtt_ms, affinity,
         )
 
     def route_failover(

@@ -30,7 +30,7 @@ the same order as the single-device extraction, the Eq. 5 softmax
 reduction runs over the same floats in the same order, and the fused
 scores (Eq. 8) and argmax (Eq. 9) are reproduced bit-for-bit.
 ``tests/test_mesh_routing.py`` property-tests the argmax identity across
-all seven algorithms, and ``benchmarks/mega_fleet.py`` gates on it at 10^5+
+all registered algorithms, and ``benchmarks/mega_fleet.py`` gates on it at 10^5+
 servers.  One carve-out: SONAR-GEO's active ``-delta*R`` term extends the
 fusion to four products, which XLA may FMA-contract differently in the
 two independently-compiled programs — its fused *score* is reproduced to
@@ -307,6 +307,10 @@ class _StaticCfg(NamedTuple):
     # running shard-local top-k over the full tool axis
     compact2: bool = False
     k_slot: int = 0               # max tools hosted on any one server
+    # SONAR-SESSION sticky-affinity bonus (+eps*W); off by default so
+    # every pre-existing static config hashes identically
+    use_aff: bool = False
+    eps: float = 0.0
 
 
 # ---------------------------------------------------------------------------
@@ -357,8 +361,8 @@ def _stage2_stacked(d: dict, cand_gids: jax.Array, sc: _StaticCfg) -> tuple:
     servers, QoS/load/staleness/RTT/dead terms over the shard's telemetry
     slice, local top-k extraction with metadata.
 
-    Returns seven [J, n_q, k_keep] arrays:
-    (sel, val, qos, load, rtt, dead, gid).
+    Returns eight [J, n_q, k_keep] arrays:
+    (sel, val, qos, load, rtt, dead, aff, gid).
     """
     if "t_pre" in d:
         t = d["t_pre"]                                   # [J, n_q, t_pad]
@@ -449,6 +453,13 @@ def _stage2_stacked(d: dict, cand_gids: jax.Array, sc: _StaticCfg) -> tuple:
     else:
         tool_dead = jnp.zeros((J, 1, t_pad), jnp.float32)
 
+    # SONAR-SESSION: per-(session, server) warmth over the shard's server
+    # slice, broadcast to the host server's tools like load/dead
+    if sc.use_aff and "aff" in d:
+        tool_aff = per_tool(d["aff"])
+    else:
+        tool_aff = jnp.zeros((J, 1, t_pad), jnp.float32)
+
     v, li = jax.lax.top_k(sel, sc.k_keep)                 # [J, n_q, k_keep]
 
     def gather(x):                                        # [J, B, t_pad]
@@ -460,7 +471,7 @@ def _stage2_stacked(d: dict, cand_gids: jax.Array, sc: _StaticCfg) -> tuple:
         li, axis=-1,
     )
     return v, gather(val_full), gather(tool_qos), gather(tool_load), \
-        gather(tool_rtt), gather(tool_dead), gid
+        gather(tool_rtt), gather(tool_dead), gather(tool_aff), gid
 
 
 def _gflat(x: jax.Array) -> jax.Array:
@@ -496,9 +507,9 @@ def _stage2_compact(
     ``n_servers >= top_s`` (no pad/duplicate candidates) — the engine
     falls back to the full stage-2 otherwise.
 
-    Returns seven flattened [n_q, W] arrays (sel, val, qos, load, rtt,
-    dead, gid) with ``W = top_s_eff * k_slot`` (padded up to the final
-    top-k width so the merge semantics match the full path).
+    Returns eight flattened [n_q, W] arrays (sel, val, qos, load, rtt,
+    dead, aff, gid) with ``W = top_s_eff * k_slot`` (padded up to the
+    final top-k width so the merge semantics match the full path).
     """
     n_q = t_full.shape[0]
     m_docs = t_full.shape[1]
@@ -580,6 +591,11 @@ def _stage2_compact(
     else:
         dead = jnp.zeros((n_q, W), jnp.float32)
 
+    if sc.use_aff and "aff" in d:
+        aff = expand(gath(d["aff"]))
+    else:
+        aff = jnp.zeros((n_q, W), jnp.float32)
+
     k_final = min(sc.top_k, sc.n_tools)
     if W < k_final:                                        # keep the merge
         pad = k_final - W                                  # k identical to
@@ -589,8 +605,9 @@ def _stage2_compact(
         load = jnp.pad(load, ((0, 0), (0, pad)))
         rtt = jnp.pad(rtt, ((0, 0), (0, pad)))
         dead = jnp.pad(dead, ((0, 0), (0, pad)))
+        aff = jnp.pad(aff, ((0, 0), (0, pad)))
         gid = jnp.pad(gid, ((0, 0), (0, pad)))
-    return sel, val, qos, load, rtt, dead, gid
+    return sel, val, qos, load, rtt, dead, aff, gid
 
 
 def _packed(stage_fn, layout: tuple, sc: _StaticCfg, *extra):
@@ -725,7 +742,7 @@ def _route_sharded(dyn: dict, *, mesh: Optional[Mesh], sc: _StaticCfg):
         # top_s * k_slot candidate tools only — no full-tool-axis mask,
         # gather or top-k anywhere (see _stage2_compact for the parity
         # argument).  Runs outside shard_map, like the merges.
-        sel, val, qos, load, rtt, dead, gid = _stage2_compact(
+        sel, val, qos, load, rtt, dead, aff, gid = _stage2_compact(
             dyn, t_full, v_full, nt, cand_gids, sc
         )
     else:
@@ -760,6 +777,7 @@ def _route_sharded(dyn: dict, *, mesh: Optional[Mesh], sc: _StaticCfg):
         add2("rtt_region", _SH3)
         add2("region_idx", _REP1)
         add2("dead", _SH3)
+        add2("aff", _SH3)
         arrays2 = [pre.get(n, dyn.get(n)) for n in layout2]
 
         def f2(*arrs):
@@ -775,10 +793,10 @@ def _route_sharded(dyn: dict, *, mesh: Optional[Mesh], sc: _StaticCfg):
                 d = dict(zip(layout2_m, arrs))
                 return _stage2_stacked(d, d["cand_gids"], sc)
 
-            outs = _run_stage(f2m, mesh, arrays2 + [cand_gids], specs2_m, 7)
+            outs = _run_stage(f2m, mesh, arrays2 + [cand_gids], specs2_m, 8)
         else:
             outs = f2(*arrays2)
-        sel_c, val_c, qos_c, load_c, rtt_c, dead_c, gid_c = outs
+        sel_c, val_c, qos_c, load_c, rtt_c, dead_c, aff_c, gid_c = outs
 
         # -- merge 2: all-gather candidates before the fused tail --
         sel = _flatten_shards(sel_c)
@@ -787,6 +805,7 @@ def _route_sharded(dyn: dict, *, mesh: Optional[Mesh], sc: _StaticCfg):
         load = _flatten_shards(load_c)
         rtt = _flatten_shards(rtt_c)
         dead = _flatten_shards(dead_c)
+        aff = _flatten_shards(aff_c)
         gid = _flatten_shards(gid_c)
 
     net_active = sc.use_network and (
@@ -813,6 +832,11 @@ def _route_sharded(dyn: dict, *, mesh: Optional[Mesh], sc: _StaticCfg):
     else:
         eff_delta = 0.0
     dead_arg = dead if (sc.use_failover and "dead" in dyn) else None
+    # pass tool_aff=None when the bonus is off so no-affinity configs
+    # trace the historical 4-term graph byte-identically
+    aff_active = sc.use_aff and "aff" in dyn
+    aff_arg = aff if aff_active else None
+    eff_eps = sc.eps if aff_active else 0.0
 
     k_final = min(sc.top_k, sc.n_tools)
     if sc.use_kernels:
@@ -820,6 +844,7 @@ def _route_sharded(dyn: dict, *, mesh: Optional[Mesh], sc: _StaticCfg):
             sel, val, qos, load, dead_arg,
             k=k_final, alpha=eff_alpha, beta=eff_beta, gamma=eff_gamma,
             tool_rtt=rtt, delta=eff_delta,
+            tool_aff=aff_arg, eps=eff_eps,
             temp=sc.temp, interpret=sc.interpret,
         )
     else:
@@ -827,6 +852,7 @@ def _route_sharded(dyn: dict, *, mesh: Optional[Mesh], sc: _StaticCfg):
             sel, val, qos, load, dead_arg,
             k=k_final, alpha=eff_alpha, beta=eff_beta, gamma=eff_gamma,
             tool_rtt=rtt, delta=eff_delta,
+            tool_aff=aff_arg, eps=eff_eps,
             temp=sc.temp,
         )
     tool_idx = jnp.take_along_axis(gid, pos[:, None], axis=-1)[:, 0]
@@ -885,6 +911,7 @@ class ShardedRoutingEngine:
         self.uses_staleness = router_cls.uses_staleness
         self.uses_failover = router_cls.uses_failover
         self.uses_rtt = router_cls.uses_rtt
+        self.uses_affinity = router_cls.uses_affinity
         self.rerank = router_cls.rerank
         self.use_kernels = use_kernels
         self.interpret = interpret
@@ -984,6 +1011,7 @@ class ShardedRoutingEngine:
             rerank=self.rerank, use_kernels=use_kernels,
             interpret=interpret, qos_params=cfg.qos,
             compact2=self.compact_stage2, k_slot=k_slot,
+            use_aff=self.uses_affinity, eps=cfg.eps,
         )
 
         # SONAR-ADAPT learner state.  Replicated-update semantics: the EG
@@ -1095,6 +1123,7 @@ class ShardedRoutingEngine:
         client_rtt_ms: Optional[np.ndarray] = None,
         client_region: Optional[np.ndarray] = None,
         region_rtt_ms: Optional[np.ndarray] = None,
+        affinity: Optional[np.ndarray] = None,
         *,
         telemetry_templates: Optional[tuple] = None,
         route_stats=None,
@@ -1175,6 +1204,12 @@ class ShardedRoutingEngine:
             dyn["dead"] = self._shard_vec(
                 np.asarray(failed_mask, np.float32)
             )
+        if (
+            self.uses_affinity
+            and affinity is not None
+            and self.cfg.eps != 0.0
+        ):
+            dyn["aff"] = self._shard_vec(affinity)
         if self.adapt_state is not None and self.adapt_cfg.lr != 0.0:
             # apply pending EG updates once, then replicate the weights
             # into the sharded program (lr == 0 keeps the static program:
@@ -1207,13 +1242,14 @@ class ShardedRoutingEngine:
         client_rtt_ms: Optional[np.ndarray] = None,
         client_region: Optional[np.ndarray] = None,
         region_rtt_ms: Optional[np.ndarray] = None,
+        affinity: Optional[np.ndarray] = None,
         *,
         telemetry_templates: Optional[tuple] = None,
     ) -> BatchDecisions:
         return self.route(
             self.encode(queries), latency_hist, server_load,
             telemetry_age_s, failed_mask, client_rtt_ms,
-            client_region, region_rtt_ms,
+            client_region, region_rtt_ms, affinity,
             telemetry_templates=telemetry_templates,
         )
 

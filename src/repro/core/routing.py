@@ -162,6 +162,13 @@ class RoutingConfig:
     # rtt=None (or an all-zero RTT topology) reduces exactly to SONAR-LB.
     delta: float = 0.4             # locality weight
     rtt_scale_ms: float = 150.0    # RTT at which the penalty reaches 0.5
+    # Session-affinity extension (SONAR-SESSION): S += eps * W(server,
+    # session) with W in [0, 1] the warm-context bonus of servers that
+    # recently served this session (exponentially decayed by the warmth
+    # tracker).  Only consulted when the algorithm `uses_affinity` AND an
+    # affinity vector is supplied; eps=0, affinity=None, or an all-zero
+    # warmth vector reduces byte-identically to SONAR-GEO.
+    eps: float = 0.25              # affinity weight
     # Softmax temperature of Eq. 5 ("amplifies the relative differences
     # between expert tools and non-expert tools").
     expertise_temp: float = 1.0
@@ -214,6 +221,7 @@ class Router:
     uses_staleness = False
     uses_failover = False
     uses_rtt = False
+    uses_affinity = False
     rerank = False
 
     def __init__(self, servers: Sequence[Server], cfg: RoutingConfig = RoutingConfig()):
@@ -263,6 +271,7 @@ class Router:
         telemetry_age_s: Optional[np.ndarray] = None,
         failed_mask: Optional[np.ndarray] = None,
         client_rtt_ms: Optional[np.ndarray] = None,
+        affinity: Optional[np.ndarray] = None,
         audit=None,
     ) -> Decision:
         """Route one query (Algorithm 1): two-stage retrieval, Eq. 5
@@ -294,6 +303,11 @@ class Router:
             client's region to each server (one row of the region->server
             RTT matrix).  SONAR-GEO only; None, delta=0 or all-zero RTTs
             reduce byte-identically to SONAR-LB.
+        affinity : np.ndarray, optional
+            f32 [n_servers] warm-context bonus W in [0, 1] for the
+            requesting *session* (e.g. `repro.sessions.WarmthTracker`
+            rows).  SONAR-SESSION only; None, eps=0 or all-zero warmth
+            reduce byte-identically to SONAR-GEO.
         audit : repro.obs.audit.AuditTap, optional
             Score-decomposition tap: after the argmax the tap receives
             the exact candidate component arrays that were fused
@@ -355,6 +369,11 @@ class Router:
             R = np.asarray(rtt_penalty(rtt, self.cfg.rtt_scale_ms))
             S = S - self.cfg.delta * R
 
+        A = None
+        if self.uses_affinity and affinity is not None and self.cfg.eps != 0.0:
+            A = np.asarray(affinity, np.float32)[cand_hosts]
+            S = S + self.cfg.eps * A
+
         dead = None
         if self.uses_failover and failed_mask is not None:
             # known-failed servers are removed from the argmax but keep
@@ -382,7 +401,7 @@ class Router:
                 cand_hosts=cand_hosts, expertise=C,
                 network=N if network_used else None,
                 load_pen=U, rtt_pen=R, dead=dead, fused=S,
-                best=best, decision=decision,
+                best=best, decision=decision, aff_bonus=A,
             )
         return decision
 
@@ -396,6 +415,7 @@ class Router:
         failed_mask: Optional[np.ndarray] = None,
         budget: Optional[int] = None,
         client_rtt_ms: Optional[np.ndarray] = None,
+        affinity: Optional[np.ndarray] = None,
         audit=None,
     ) -> tuple[Decision, int]:
         """Failover loop (SONAR-FT): route, probe the pick against `alive`,
@@ -420,6 +440,7 @@ class Router:
                 telemetry_age_s=telemetry_age_s,
                 failed_mask=mask if mask.any() else None,
                 client_rtt_ms=client_rtt_ms,
+                affinity=affinity,
                 audit=audit,
             )
             if up is None or up[d.server_idx] or failovers >= budget:
@@ -511,6 +532,32 @@ class SonarGeoRouter(SonarLBRouter):
     uses_rtt = True
 
 
+class SonarSessionRouter(SonarGeoRouter):
+    """SONAR-SESSION: sticky-affinity SONAR-GEO for multi-step agent
+    sessions.
+
+    One pure extension of the fusion (Eq. 8):
+
+        S(i) = alpha*C(i) + beta*N(i) - gamma*U(rho_i) - delta*R(rtt_i)
+               + eps*W(host_i, session)
+
+    where W in [0, 1] is the warm-context bonus of servers that recently
+    served nodes of the requesting session (context caches, loaded tool
+    state — tracked by `repro.sessions.WarmthTracker` with exponential
+    decay).  A warm server wins ties against equally-scored cold ones, so
+    a session's DAG nodes stick to the replicas already holding its
+    context instead of re-paying the context-transfer cost per node.
+
+    With `affinity=None`, eps=0, or an all-zero warmth vector this is
+    byte-identical to SONAR-GEO (the bonus term is skipped / adds exact
+    zeros), so every parity guarantee carries through all four routing
+    paths — the same reduction contract as SONAR-GEO -> SONAR-LB.
+    """
+
+    name = "SONAR-SESSION"
+    uses_affinity = True
+
+
 ALGORITHMS = {
     "rag": RagRouter,
     "rerank_rag": RerankRagRouter,
@@ -519,6 +566,7 @@ ALGORITHMS = {
     "sonar_lb": SonarLBRouter,
     "sonar_ft": SonarFTRouter,
     "sonar_geo": SonarGeoRouter,
+    "sonar_session": SonarSessionRouter,
     # "sonar_adapt" (repro.core.adaptive.SonarAdaptRouter) self-registers
     # on import; make_router resolves it lazily to keep this module free
     # of the adaptive -> routing import cycle.

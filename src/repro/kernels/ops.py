@@ -122,12 +122,16 @@ def fused_select(
     tool_rtt: Optional[jax.Array] = None,   # [n_q, n_tools] or [n_tools]
                                             # per-tool RTT penalty R
     delta: float = 0.0,
+    tool_aff: Optional[jax.Array] = None,   # [n_q, n_tools] or [n_tools]
+                                            # per-tool warm-affinity bonus W
+    eps: float = 0.0,
     interpret: Optional[bool] = None,
 ):
     """Winning (tool_idx, C, N, S) per query; exact match of the scalar
     candidate->softmax->fuse->argmax tail of `Router.select` (with the
     SONAR-LB load term when tool_load/gamma are given, the SONAR-GEO
-    locality term when tool_rtt/delta are given, and the SONAR-FT
+    locality term when tool_rtt/delta are given, the SONAR-SESSION
+    warm-affinity bonus when tool_aff/eps are given, and the SONAR-FT
     failed-server argmax exclusion when tool_dead is given)."""
     n_q, n_t = sel_scores.shape
     k = min(k, n_t)
@@ -148,6 +152,14 @@ def fused_select(
     load, per_query_load = _row_arg(tool_load)
     rtt, per_query_rtt = _row_arg(tool_rtt)
     dead, per_query_dead = _row_arg(tool_dead)
+    use_aff = tool_aff is not None
+    if use_aff:
+        aff, per_query_aff = _row_arg(tool_aff)
+        aff = _pad_to(aff, 1, 128)
+        if per_query_aff:
+            aff = _pad_to(aff, 0, _sel.QUERY_TILE)
+    else:
+        aff, per_query_aff = None, False
 
     sel = _pad_to(_pad_to(sel, 1, 128, value=_sel.NEG), 0, _sel.QUERY_TILE,
                   value=_sel.NEG)
@@ -166,14 +178,18 @@ def fused_select(
     if per_query_dead:
         dead = _pad_to(dead, 0, _sel.QUERY_TILE)
     wrow, dyn_w = _weights_operand(alpha, beta, gamma, delta)
+    aff_kw = dict(
+        aff=aff, use_aff=use_aff, per_query_aff=per_query_aff,
+        eps=float(eps) if use_aff else 0.0,
+    )
     if dyn_w:
         idx, c, n, s = _sel.fused_select_pallas(
-            sel, val, qos, load, rtt, dead, wrow,
+            sel, val, qos, load, rtt, dead, w=wrow,
             k=k, alpha=0.0, beta=0.0, gamma=0.0, delta=0.0,
             temp=float(temp), dyn_weights=True,
             per_query_qos=per_query_qos, per_query_load=per_query_load,
             per_query_rtt=per_query_rtt, per_query_dead=per_query_dead,
-            interpret=_auto_interpret(interpret),
+            interpret=_auto_interpret(interpret), **aff_kw,
         )
     else:
         idx, c, n, s = _sel.fused_select_pallas(
@@ -182,7 +198,7 @@ def fused_select(
             delta=float(delta), temp=float(temp),
             per_query_qos=per_query_qos, per_query_load=per_query_load,
             per_query_rtt=per_query_rtt, per_query_dead=per_query_dead,
-            interpret=_auto_interpret(interpret),
+            interpret=_auto_interpret(interpret), **aff_kw,
         )
     return idx[:n_q], c[:n_q], n[:n_q], s[:n_q]
 
@@ -209,6 +225,8 @@ def fused_score_select(
     temp: float = 1.0,
     tool_rtt: Optional[jax.Array] = None,
     delta: float = 0.0,
+    tool_aff: Optional[jax.Array] = None,
+    eps: float = 0.0,
     interpret: Optional[bool] = None,
 ):
     """Winning (tool_idx, C, N, S) per query, never materializing the
@@ -259,6 +277,12 @@ def fused_score_select(
     load = _pad_rows(load, per_query_load)
     rtt = _pad_rows(rtt, per_query_rtt)
     dead = _pad_rows(dead, per_query_dead)
+    use_aff = tool_aff is not None
+    if use_aff:
+        aff, per_query_aff = _row_arg(tool_aff)
+        aff = _pad_rows(aff, per_query_aff)
+    else:
+        aff, per_query_aff = None, False
 
     # stripe-liveness flags [n_q_tiles, n_stripes]: does any query in the
     # tile have a candidate server hosting a tool in the stripe?
@@ -270,14 +294,18 @@ def fused_score_select(
     ).astype(jnp.int32)
 
     wrow, dyn_w = _weights_operand(alpha, beta, gamma, delta)
+    aff_kw = dict(
+        aff=aff, use_aff=use_aff, per_query_aff=per_query_aff,
+        eps=float(eps) if use_aff else 0.0,
+    )
     if dyn_w:
         idx, c, n, s = _scf.fused_score_select_pallas(
-            q, qr, w, host, cand, qos, load, rtt, dead, flags, wrow,
+            q, qr, w, host, cand, qos, load, rtt, dead, flags, wvec=wrow,
             k=k, top_s=top_s, alpha=0.0, beta=0.0, gamma=0.0, delta=0.0,
             temp=float(temp), rerank=q_rerank is not None, dyn_weights=True,
             per_query_qos=per_query_qos, per_query_load=per_query_load,
             per_query_rtt=per_query_rtt, per_query_dead=per_query_dead,
-            interpret=_auto_interpret(interpret),
+            interpret=_auto_interpret(interpret), **aff_kw,
         )
     else:
         idx, c, n, s = _scf.fused_score_select_pallas(
@@ -287,7 +315,7 @@ def fused_score_select(
             rerank=q_rerank is not None,
             per_query_qos=per_query_qos, per_query_load=per_query_load,
             per_query_rtt=per_query_rtt, per_query_dead=per_query_dead,
-            interpret=_auto_interpret(interpret),
+            interpret=_auto_interpret(interpret), **aff_kw,
         )
     return idx[:n_q], c[:n_q], n[:n_q], s[:n_q]
 

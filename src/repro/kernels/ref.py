@@ -29,11 +29,14 @@ def fused_select_ref(
     temp: float = 1.0,
     tool_rtt: jax.Array | None = None,   # [n_q, n_tools] or [n_tools] — R
     delta: float = 0.0,
+    tool_aff: jax.Array | None = None,   # [n_q, n_tools] or [n_tools] — W
+    eps: float = 0.0,
 ):
     """Pure-jnp oracle for kernels/select_fuse: stage-2 top-k (ties -> lower
     index), Eq. 5 softmax over the valid candidates, Eq. 8 fusion (plus the
-    SONAR-LB load term -gamma*U, the SONAR-GEO locality term -delta*R and
-    the SONAR-FT failed-server mask), argmax.
+    SONAR-LB load term -gamma*U, the SONAR-GEO locality term -delta*R, the
+    SONAR-SESSION warm-affinity bonus +eps*W and the SONAR-FT failed-server
+    mask), argmax.
     Dead candidates keep their softmax mass (they are excluded from the
     *argmax* only), matching the scalar router's post-fusion masking; if
     every candidate is masked/invalid the top-selection candidate wins."""
@@ -63,7 +66,12 @@ def fused_select_ref(
     # with bit-identical inputs contract identically (exact ties still
     # tie).  With delta == 0 the term folds away and the historical
     # bit-identity of all other algorithms is preserved.
-    s = jnp.where(valid, alpha * c + beta * n - gamma * u - delta * r, NEG)
+    fused = alpha * c + beta * n - gamma * u - delta * r
+    if tool_aff is not None:
+        # appended only when an affinity operand is supplied, so zero-
+        # affinity callers keep today's 4-term graph byte-identically
+        fused = fused + eps * _gather(tool_aff)
+    s = jnp.where(valid, fused, NEG)
     if tool_dead is not None:
         s = jnp.where(_gather(tool_dead) > 0.0, NEG, s)
     best = jnp.argmax(s, axis=-1)                            # first max wins
@@ -88,6 +96,8 @@ def fused_score_select_ref(
     temp: float = 1.0,
     tool_rtt: jax.Array | None = None,
     delta: float = 0.0,
+    tool_aff: jax.Array | None = None,
+    eps: float = 0.0,
 ):
     """Pure-jnp oracle for kernels/score_fuse: materialize the full
     stage-2 score matrix (BM25 matmul + candidate-server mask) and feed
@@ -105,7 +115,7 @@ def fused_score_select_ref(
     return fused_select_ref(
         sel, val, tool_qos, tool_load, tool_dead,
         k=k, alpha=alpha, beta=beta, gamma=gamma, temp=temp,
-        tool_rtt=tool_rtt, delta=delta,
+        tool_rtt=tool_rtt, delta=delta, tool_aff=tool_aff, eps=eps,
     )
 
 

@@ -54,19 +54,33 @@ def _score_kernel(
     *refs,
     k: int, n_stripes: int, t_total: int, top_s: int,
     alpha: float, beta: float, gamma: float, delta: float, temp: float,
-    rerank: bool, dyn_weights: bool = False,
+    rerank: bool, eps: float = 0.0, use_aff: bool = False,
+    dyn_weights: bool = False,
 ):
-    if dyn_weights:
-        (q_ref, qr_ref, w_ref, host_ref, cand_ref,
-         qos_ref, load_ref, rtt_ref, dead_ref, flag_ref, wvec_ref,
-         idx_ref, c_ref, n_ref, s_ref,
-         sel_s, val_s, qos_s, load_s, rtt_s, dead_s, gid_s) = refs
+    refs = list(refs)
+    (q_ref, qr_ref, w_ref, host_ref, cand_ref,
+     qos_ref, load_ref, rtt_ref, dead_ref) = refs[:9]
+    pos = 9
+    if use_aff:
+        # warm-affinity row (SONAR-SESSION): operand + an 8th scratch
+        # buffer, both absent unless use_aff so zero-affinity callers
+        # compile exactly the historical graph
+        aff_ref = refs[pos]
+        pos += 1
     else:
-        (q_ref, qr_ref, w_ref, host_ref, cand_ref,
-         qos_ref, load_ref, rtt_ref, dead_ref, flag_ref,
-         idx_ref, c_ref, n_ref, s_ref,
-         sel_s, val_s, qos_s, load_s, rtt_s, dead_s, gid_s) = refs
+        aff_ref = None
+    flag_ref = refs[pos]
+    pos += 1
+    if dyn_weights:
+        wvec_ref = refs[pos]
+        pos += 1
+    else:
         wvec_ref = None
+    idx_ref, c_ref, n_ref, s_ref = refs[pos:pos + 4]
+    pos += 4
+    sel_s, val_s, qos_s, load_s, rtt_s, dead_s, gid_s = refs[pos:pos + 7]
+    pos += 7
+    aff_s = refs[pos] if use_aff else None
     j = pl.program_id(1)
     QT = QUERY_TILE
     lane = jax.lax.broadcasted_iota(jnp.float32, (QT, K_MAX), 1)
@@ -81,6 +95,8 @@ def _score_kernel(
         load_s[...] = jnp.zeros((QT, K_MAX), jnp.float32)
         rtt_s[...] = jnp.zeros((QT, K_MAX), jnp.float32)
         dead_s[...] = jnp.zeros((QT, K_MAX), jnp.float32)
+        if use_aff:
+            aff_s[...] = jnp.zeros((QT, K_MAX), jnp.float32)
         gid_s[...] = float(t_total) + lane
 
     # --- stripe merge: only when the stripe hosts candidate tools ---
@@ -127,6 +143,11 @@ def _score_kernel(
         comb_dead = jnp.concatenate(
             [dead_s[...], jnp.broadcast_to(row(dead_ref), (QT, TS))], axis=1
         )
+        if use_aff:
+            comb_aff = jnp.concatenate(
+                [aff_s[...], jnp.broadcast_to(row(aff_ref), (QT, TS))],
+                axis=1,
+            )
         comb_gid = jnp.concatenate(
             [gid_s[...], jnp.broadcast_to(stripe_gid, (QT, TS))], axis=1
         )
@@ -143,15 +164,20 @@ def _score_kernel(
             g = jnp.min(jnp.where(is_max, comb_gid, big), axis=-1,
                         keepdims=True)
             onehot = (comb_gid == g).astype(jnp.float32)     # [QT, C]
-            news.append((
+            entry = [
                 m,
                 jnp.sum(comb_val * onehot, axis=-1, keepdims=True),
                 jnp.sum(comb_qos * onehot, axis=-1, keepdims=True),
                 jnp.sum(comb_load * onehot, axis=-1, keepdims=True),
                 jnp.sum(comb_rtt * onehot, axis=-1, keepdims=True),
                 jnp.sum(comb_dead * onehot, axis=-1, keepdims=True),
-                g,
-            ))
+            ]
+            if use_aff:
+                entry.append(
+                    jnp.sum(comb_aff * onehot, axis=-1, keepdims=True)
+                )
+            entry.append(g)
+            news.append(entry)
             # retire the peeled entry from BOTH pools: score AND gid —
             # leaving the gid live would let a later all-NEG tie re-pick
             # it, duplicating gids in scratch and double-counting the
@@ -172,7 +198,9 @@ def _score_kernel(
         load_s[...] = pack([t[3] for t in news], 0.0)
         rtt_s[...] = pack([t[4] for t in news], 0.0)
         dead_s[...] = pack([t[5] for t in news], 0.0)
-        gid_s[...] = pack([t[6] for t in news], float(t_total)) + jnp.where(
+        if use_aff:
+            aff_s[...] = pack([t[6] for t in news], 0.0)
+        gid_s[...] = pack([t[-1] for t in news], float(t_total)) + jnp.where(
             lane >= float(k), lane, 0.0
         )
 
@@ -183,6 +211,7 @@ def _score_kernel(
         cand_val, cand_qos, cand_load, cand_rtt, cand_dead, cand_idx = (
             [], [], [], [], [], []
         )
+        cand_aff = []
         for slot in range(k):
             onehot = (lane == float(slot)).astype(jnp.float32)
             m = jnp.sum(sel_s[...] * onehot, axis=-1, keepdims=True)
@@ -197,6 +226,9 @@ def _score_kernel(
                                     keepdims=True))
             cand_dead.append(jnp.sum(dead_s[...] * onehot, axis=-1,
                                      keepdims=True))
+            if use_aff:
+                cand_aff.append(jnp.sum(aff_s[...] * onehot, axis=-1,
+                                        keepdims=True))
             cand_idx.append(jnp.sum(gid_s[...] * onehot, axis=-1,
                                     keepdims=True))
 
@@ -226,12 +258,14 @@ def _score_kernel(
         best_c = exps[0] / denom
         best_n = cand_qos[0]
         best_i = cand_idx[0]
-        for v, e, n, u, r, d, i in zip(
+        for slot, (v, e, n, u, r, d, i) in enumerate(zip(
             cand_val, exps, cand_qos, cand_load, cand_rtt, cand_dead,
             cand_idx,
-        ):
+        )):
             c = e / denom
             s = alpha_v * c + beta_v * n - gamma_v * u - delta_v * r
+            if use_aff:
+                s = s + eps * cand_aff[slot]
             s = jnp.where(v > NEG / 2.0, s, NEG)
             s = jnp.where(d > 0.0, NEG, s)
             take = s > best_s
@@ -252,9 +286,10 @@ def _score_kernel(
 @functools.partial(
     jax.jit,
     static_argnames=(
-        "k", "top_s", "alpha", "beta", "gamma", "delta", "temp",
+        "k", "top_s", "alpha", "beta", "gamma", "delta", "temp", "eps",
         "rerank", "dyn_weights", "per_query_qos", "per_query_load",
-        "per_query_rtt", "per_query_dead", "interpret",
+        "per_query_rtt", "per_query_dead", "use_aff", "per_query_aff",
+        "interpret",
     ),
 )
 def fused_score_select_pallas(
@@ -268,6 +303,8 @@ def fused_score_select_pallas(
     rtt: jax.Array,    # [n_q_pad or 1, T_pad] f32 per-tool R
     dead: jax.Array,   # [n_q_pad or 1, T_pad] f32 failover mask
     flags: jax.Array,  # [n_q_pad // QUERY_TILE, n_stripes] i32 stripe-live
+    aff: jax.Array | None = None,   # [n_q_pad or 1, T_pad] f32 per-tool
+                                    # warm-affinity bonus W when use_aff
     wvec: jax.Array | None = None,  # (1, 128) f32 — live [alpha, beta,
                                     # gamma, delta] in lanes 0..3
     *,
@@ -283,6 +320,9 @@ def fused_score_select_pallas(
     per_query_load: bool,
     per_query_rtt: bool,
     per_query_dead: bool,
+    eps: float = 0.0,
+    use_aff: bool = False,
+    per_query_aff: bool = False,
     dyn_weights: bool = False,
     interpret: bool = False,
 ):
@@ -302,8 +342,10 @@ def fused_score_select_pallas(
 
     out_spec = pl.BlockSpec((QUERY_TILE, 1), lambda i, j: (i, 0))
     out_shape = jax.ShapeDtypeStruct((n_q, 1), jnp.float32)
-    scratch = [pltpu.VMEM((QUERY_TILE, K_MAX), jnp.float32)] * 7
+    n_scratch = 8 if use_aff else 7
+    scratch = [pltpu.VMEM((QUERY_TILE, K_MAX), jnp.float32)] * n_scratch
     assert (wvec is not None) == dyn_weights
+    assert (aff is not None) == use_aff
     in_specs = [
         pl.BlockSpec((QUERY_TILE, V_pad), lambda i, j: (i, 0)),
         pl.BlockSpec((QUERY_TILE, V_pad), lambda i, j: (i, 0)),
@@ -314,9 +356,13 @@ def fused_score_select_pallas(
         _row_spec(per_query_load),
         _row_spec(per_query_rtt),
         _row_spec(per_query_dead),
-        pl.BlockSpec((1, 1), lambda i, j: (i, j)),
     ]
-    operands = [q, qr, w, host, cand, qos, load, rtt, dead, flags]
+    operands = [q, qr, w, host, cand, qos, load, rtt, dead]
+    if use_aff:
+        in_specs.append(_row_spec(per_query_aff))
+        operands.append(aff)
+    in_specs.append(pl.BlockSpec((1, 1), lambda i, j: (i, j)))
+    operands.append(flags)
     if dyn_weights:
         in_specs.append(pl.BlockSpec((1, 128), lambda i, j: (0, 0)))
         operands.append(wvec)
@@ -324,7 +370,8 @@ def fused_score_select_pallas(
         functools.partial(
             _score_kernel, k=k, n_stripes=n_stripes, t_total=T_pad,
             top_s=top_s, alpha=alpha, beta=beta, gamma=gamma, delta=delta,
-            temp=temp, rerank=rerank, dyn_weights=dyn_weights,
+            temp=temp, rerank=rerank, eps=eps, use_aff=use_aff,
+            dyn_weights=dyn_weights,
         ),
         grid=grid,
         in_specs=in_specs,

@@ -66,21 +66,28 @@ NEG = -1e30         # finite -inf stand-in (avoids inf-inf NaNs in VMEM math)
 def _select_kernel(
     *refs,
     k: int, alpha: float, beta: float, gamma: float, delta: float,
-    temp: float, dyn_weights: bool = False,
+    temp: float, eps: float = 0.0, use_aff: bool = False,
+    dyn_weights: bool = False,
 ):
-    if dyn_weights:
-        (sel_ref, val_ref, qos_ref, load_ref, rtt_ref, dead_ref, w_ref,
-         idx_ref, c_ref, n_ref, s_ref) = refs
+    refs = list(refs)
+    sel_ref, val_ref, qos_ref, load_ref, rtt_ref, dead_ref = refs[:6]
+    pos = 6
+    if use_aff:
+        aff_ref = refs[pos]
+        pos += 1
     else:
-        (sel_ref, val_ref, qos_ref, load_ref, rtt_ref, dead_ref,
-         idx_ref, c_ref, n_ref, s_ref) = refs
-        w_ref = None
+        aff_ref = None
+    w_ref = refs[pos] if dyn_weights else None
+    idx_ref, c_ref, n_ref, s_ref = refs[-4:]
     sel = sel_ref[...].astype(jnp.float32)   # [QT, T_pad]
     val = val_ref[...].astype(jnp.float32)   # [QT, T_pad]
     qos = qos_ref[...].astype(jnp.float32)   # [QT or 1, T_pad]
     load = load_ref[...].astype(jnp.float32)  # [QT or 1, T_pad] — U penalty
     rtt = rtt_ref[...].astype(jnp.float32)   # [QT or 1, T_pad] — R penalty
     dead = dead_ref[...].astype(jnp.float32)  # [QT or 1, T_pad] — failover mask
+    # warm-affinity bonus W (SONAR-SESSION); absent unless use_aff, so
+    # zero-affinity callers compile exactly the historical graph
+    aff = aff_ref[...].astype(jnp.float32) if use_aff else None
     QT, T_pad = sel.shape
 
     if dyn_weights:
@@ -103,6 +110,7 @@ def _select_kernel(
     cand_val, cand_qos, cand_load, cand_rtt, cand_dead, cand_idx = (
         [], [], [], [], [], []
     )
+    cand_aff = []
     cur = sel
     for _ in range(k):
         m = jnp.max(cur, axis=-1, keepdims=True)                    # [QT, 1]
@@ -122,6 +130,8 @@ def _select_kernel(
         cand_rtt.append(r)
         cand_dead.append(d)
         cand_idx.append(idx)
+        if use_aff:
+            cand_aff.append(jnp.sum(aff * onehot, axis=-1, keepdims=True))
         cur = jnp.where(onehot > 0.0, NEG, cur)
 
     # --- Eq. 5 softmax over the valid candidates (invalid -> zero mass) ---
@@ -143,11 +153,13 @@ def _select_kernel(
     best_c = exps[0] / denom
     best_n = cand_qos[0]
     best_i = cand_idx[0]
-    for v, e, n, u, r, d, i in zip(
+    for j, (v, e, n, u, r, d, i) in enumerate(zip(
         cand_val, exps, cand_qos, cand_load, cand_rtt, cand_dead, cand_idx
-    ):
+    )):
         c = e / denom
         s = alpha_v * c + beta_v * n - gamma_v * u - delta_v * r
+        if use_aff:
+            s = s + eps * cand_aff[j]
         s = jnp.where(v > NEG / 2.0, s, NEG)
         s = jnp.where(d > 0.0, NEG, s)
         take = s > best_s
@@ -165,9 +177,9 @@ def _select_kernel(
 @functools.partial(
     jax.jit,
     static_argnames=(
-        "k", "alpha", "beta", "gamma", "delta", "temp", "dyn_weights",
+        "k", "alpha", "beta", "gamma", "delta", "temp", "eps", "dyn_weights",
         "per_query_qos", "per_query_load", "per_query_rtt", "per_query_dead",
-        "interpret",
+        "use_aff", "per_query_aff", "interpret",
     ),
 )
 def fused_select_pallas(
@@ -177,6 +189,8 @@ def fused_select_pallas(
     load: jax.Array,  # [n_q_pad or 1, T_pad] f32 — per-tool U penalty
     rtt: jax.Array,   # [n_q_pad or 1, T_pad] f32 — per-tool R penalty
     dead: jax.Array,  # [n_q_pad or 1, T_pad] f32 — >0 excludes from argmax
+    aff: jax.Array | None = None,  # [n_q_pad or 1, T_pad] f32 — per-tool
+                                   # warm-affinity bonus W when use_aff
     w: jax.Array | None = None,  # (1, 128) f32 — live [alpha, beta, gamma,
                                  # delta] in lanes 0..3 when dyn_weights
     *,
@@ -190,12 +204,16 @@ def fused_select_pallas(
     per_query_load: bool,
     per_query_rtt: bool,
     per_query_dead: bool,
+    eps: float = 0.0,
+    use_aff: bool = False,
+    per_query_aff: bool = False,
     dyn_weights: bool = False,
     interpret: bool = False,
 ):
     n_q, T_pad = sel.shape
     assert n_q % QUERY_TILE == 0 and T_pad % 128 == 0
     assert (w is not None) == dyn_weights
+    assert (aff is not None) == use_aff
     grid = (n_q // QUERY_TILE,)
 
     def _row_spec(per_query: bool) -> pl.BlockSpec:
@@ -214,6 +232,9 @@ def fused_select_pallas(
         _row_spec(per_query_dead),
     ]
     operands = [sel, val, qos, load, rtt, dead]
+    if use_aff:
+        in_specs.append(_row_spec(per_query_aff))
+        operands.append(aff)
     if dyn_weights:
         in_specs.append(pl.BlockSpec((1, 128), lambda i: (0, 0)))
         operands.append(w)
@@ -223,7 +244,8 @@ def fused_select_pallas(
     idx, c, n, s = pl.pallas_call(
         functools.partial(
             _select_kernel, k=k, alpha=alpha, beta=beta, gamma=gamma,
-            delta=delta, temp=temp, dyn_weights=dyn_weights,
+            delta=delta, temp=temp, eps=eps, use_aff=use_aff,
+            dyn_weights=dyn_weights,
         ),
         grid=grid,
         in_specs=in_specs,

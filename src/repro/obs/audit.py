@@ -56,6 +56,8 @@ class ScoreAudit:
     best: int                       # argmax position in the candidate set
     server_idx: int                 # winning server (global id)
     tool_idx: int                   # winning tool (global id)
+    eps: float = 0.0
+    aff_bonus: Optional[np.ndarray] = None  # W warm-affinity (None: unused)
 
     def recompose(self) -> np.ndarray:
         """Rebuild S from the recorded components, replicating
@@ -69,6 +71,8 @@ class ScoreAudit:
             S = S - self.gamma * self.load_pen
         if self.rtt_pen is not None:
             S = S - self.delta * self.rtt_pen
+        if self.aff_bonus is not None:
+            S = S + self.eps * self.aff_bonus
         if self.dead is not None:
             S = np.where(self.dead, -np.inf, S)
         return S
@@ -94,6 +98,10 @@ class ScoreAudit:
             -(f32(self.delta) * self.rtt_pen[b])
             if self.rtt_pen is not None else f32(0.0)
         )
+        if self.aff_bonus is not None:
+            # only affinity-scored decisions carry the term: zero-affinity
+            # audits keep the historical four-term split byte-for-byte
+            t["affinity"] = f32(self.eps) * self.aff_bonus[b]
         return {k: float(v) for k, v in t.items()}
 
     def winning_score(self) -> float:
@@ -126,7 +134,7 @@ class AuditTap:
 
     def record(self, *, algo, query, cfg, cand_servers, cand_tools,
                cand_hosts, expertise, network, load_pen, rtt_pen, dead,
-               fused, best, decision) -> None:
+               fused, best, decision, aff_bonus=None) -> None:
         """Called by `Router.select` after the argmax (copies the arrays:
         audits must stay valid after the router moves on)."""
         if len(self.records) >= self.max_records:
@@ -136,6 +144,8 @@ class AuditTap:
             algo=algo,
             query=query,
             alpha=cfg.alpha, beta=cfg.beta, gamma=cfg.gamma, delta=cfg.delta,
+            eps=getattr(cfg, "eps", 0.0),
+            aff_bonus=None if aff_bonus is None else np.array(aff_bonus),
             cand_servers=np.array(cand_servers),
             cand_tools=np.array(cand_tools),
             cand_hosts=np.array(cand_hosts),

@@ -88,7 +88,7 @@ class AsyncServingGateway:
             self._pump_task = asyncio.ensure_future(self._pump())
 
     async def submit(self, text: str, *, deadline_ms: Optional[float] = None,
-                     region: int = -1):
+                     region: int = -1, session_id: Optional[int] = None):
         """Submit one request; awaits its `ServeResult`.
 
         ``deadline_ms`` is *relative* (budget from now); a request shed
@@ -105,7 +105,7 @@ class AsyncServingGateway:
         req = LiveRequest(
             rid=rid, text=text, t_ms=now,
             deadline_ms=None if deadline_ms is None else now + deadline_ms,
-            region=region,
+            region=region, session_id=session_id,
         )
         fut = asyncio.get_running_loop().create_future()
         if self.batcher.offer(req, now):
@@ -170,10 +170,14 @@ class AsyncServingGateway:
             [r.region for r in batch]
             if any(r.region >= 0 for r in batch) else None
         )
+        sids = (
+            [r.session_id for r in batch]
+            if any(r.session_id is not None for r in batch) else None
+        )
         pad = self.policy.max_batch if self.policy.pad_batches else None
         routed = await loop.run_in_executor(
             None, lambda: self.gw.route_batch(
-                texts, client_regions=regions, pad_to=pad
+                texts, client_regions=regions, pad_to=pad, session_ids=sids
             )
         )
         done = self.now_ms()

@@ -35,6 +35,7 @@ from repro.core.mesh_routing import ShardedRoutingEngine
 from repro.core.qos import load_penalty, rtt_penalty
 from repro.core.routing import ALGORITHMS, RoutingConfig, SonarRouter  # noqa: F401
 from repro.obs import Observability
+from repro.sessions.warmth import WarmthTracker
 
 ARCH_CAPABILITIES = {
     "dense": "general purpose text generation chat completion dense transformer",
@@ -247,6 +248,7 @@ class SonarGateway:
         device_telemetry: Optional[bool] = None,
         telemetry_dtype: str = "float32",
         obs: Optional[Observability] = None,
+        session_half_life: float = 256.0,
     ):
         self.replicas = list(replicas)
         self.algo = algo.lower().replace("-", "_")
@@ -310,6 +312,9 @@ class SonarGateway:
         )
         self._m_latency = reg.histogram("gateway_latency_ms", "ms")
         self._m_in_flight = reg.gauge("gateway_in_flight", "req")
+        self._m_unmatched = reg.counter(
+            "gateway_unmatched_finish_total", "req"
+        )
         self._m_ejected = reg.gauge("gateway_ejected", "replicas")
         self._m_phase = {
             ph: reg.histogram(f"gateway_phase_{ph}_ms", "ms")
@@ -335,8 +340,17 @@ class SonarGateway:
             self._m_adapt_steps = reg.gauge("adapt_steps", "updates")
             self._publish_adapt(self.router.state)
         # begin()/finish() credit assignment: winner features stashed at
-        # begin, popped (FIFO per replica) at finish
+        # begin, popped (FIFO per replica) at finish; `abandon` expires
+        # the head entry when a dispatch is shed before finishing, so
+        # later completions never pop a stale decision's features
         self._pending_feats: dict = {}
+        # SONAR-SESSION sticky affinity: per-(session, server) warmth on
+        # the gateway's tick clock (one tick per recorded completion).
+        # Only affinity-aware routers read it; for everyone else the
+        # tracker stays empty and adds nothing to the hot path.
+        self.session_warmth = WarmthTracker(
+            n, half_life_ms=float(session_half_life)
+        )
 
     @property
     def telemetry(self) -> np.ndarray:
@@ -368,6 +382,28 @@ class SonarGateway:
         ):
             return None
         return self.region_rtt_ms[int(client_region)]
+
+    def _session_affinity(
+        self, session_id: Optional[int]
+    ) -> Optional[np.ndarray]:
+        """[n_replicas] warmth row for one session (None when the request
+        is session-less, the algorithm is affinity-blind, or the session
+        has fully cooled — None keeps the router on the exact
+        zero-affinity scoring path)."""
+        if session_id is None or not getattr(
+            self.router, "uses_affinity", False
+        ):
+            return None
+        return self.session_warmth.warmth(int(session_id), float(self.t))
+
+    def _session_touch(
+        self, session_id: Optional[int], idx: int, ok: bool
+    ) -> None:
+        """A completion for ``session_id`` landed on replica ``idx``:
+        mark the replica warm (successful completions only — a failed
+        call leaves no context worth sticking to)."""
+        if ok and session_id is not None:
+            self.session_warmth.touch(int(session_id), idx, float(self.t))
 
     # -- SONAR-ADAPT: weight-trajectory observability -----------------------
     def _publish_adapt(self, state) -> None:
@@ -464,17 +500,23 @@ class SonarGateway:
 
     # -- concurrent dispatch accounting (SONAR-LB) --------------------------
     def begin(
-        self, request_text: str, client_region: Optional[int] = None
+        self, request_text: str, client_region: Optional[int] = None,
+        session_id: Optional[int] = None,
     ) -> RouteResult:
         """Route and dispatch without completing: the pick is counted
         in-flight until `finish` is called.  This is the API a concurrent
-        front door drives; `route` is the synchronous convenience."""
-        decision = self.router.select(
-            request_text, self.telemetry, self._utilization(),
-            failed_mask=self._health_mask(),
-            client_rtt_ms=self._rtt_row(client_region),
-            audit=self.obs.audit_tap,
-        )
+        front door drives; `route` is the synchronous convenience.
+        ``session_id`` tags the dispatch with its agent session so
+        affinity-aware algorithms see the session's warmth vector."""
+        aff = self._session_affinity(session_id)
+        with self.obs.tracer.span("begin", cat="gateway"):
+            decision = self.router.select(
+                request_text, self.telemetry, self._utilization(),
+                failed_mask=self._health_mask(),
+                client_rtt_ms=self._rtt_row(client_region),
+                audit=self.obs.audit_tap,
+                **({} if aff is None else {"affinity": aff}),
+            )
         idx = decision.server_idx
         self.in_flight[idx] += 1.0
         self._m_in_flight.inc()
@@ -489,32 +531,73 @@ class SonarGateway:
             expertise=decision.expertise, network=decision.network,
         )
 
-    def finish(self, replica_idx: int, latency_ms: float) -> RouteResult:
-        """Complete a begun dispatch: record telemetry, release the slot."""
-        self.in_flight[replica_idx] = max(self.in_flight[replica_idx] - 1.0, 0.0)
+    def finish(
+        self, replica_idx: int, latency_ms: float,
+        session_id: Optional[int] = None,
+    ) -> Optional[RouteResult]:
+        """Complete a begun dispatch: record telemetry, release the slot.
+
+        A finish with no outstanding begun dispatch on the replica
+        (double-finish, or a finish after `abandon`) is **rejected**: it
+        is counted in ``gateway_unmatched_finish_total`` and returns
+        ``None`` without touching the in-flight gauge, telemetry, health,
+        or learner state — the in-flight array and gauge always move in
+        lockstep."""
+        if self.in_flight[replica_idx] <= 0.0:
+            self._m_unmatched.inc()
+            self.obs.tracer.instant(
+                "unmatched_finish", cat="gateway",
+                args={"replica": int(replica_idx)},
+            )
+            return None
+        with self.obs.tracer.span("finish", cat="gateway"):
+            self.in_flight[replica_idx] -= 1.0
+            self._m_in_flight.dec()
+            ok = latency_ms < latlib.OFFLINE_MS
+            self._record_outcome(replica_idx, ok)
+            self._observe(replica_idx, latency_ms)
+            self._session_touch(session_id, replica_idx, ok)
+            if self.adaptive:
+                fifo = self._pending_feats.get(replica_idx)
+                feats = fifo.pop(0) if fifo else None
+                self.router.observe_outcome(latency_ms, ok=ok, feats=feats)
+                self._publish_adapt(self.router.state)
+            return self._account(RouteResult(
+                replica_idx=replica_idx, latency_ms=latency_ms, ok=ok,
+                expertise=0.0, network=0.0,
+            ))
+
+    def abandon(self, replica_idx: int) -> bool:
+        """Release a begun dispatch that will never finish (the request
+        was shed or expired downstream of routing).  Decrements the
+        in-flight count and gauge in lockstep and expires the oldest
+        pending feature stash for the replica, so a later completion
+        cannot pop a stale decision's features and mis-credit the
+        adaptive update.  Returns False (and counts an unmatched finish)
+        when the replica has nothing outstanding."""
+        if self.in_flight[replica_idx] <= 0.0:
+            self._m_unmatched.inc()
+            return False
+        self.in_flight[replica_idx] -= 1.0
         self._m_in_flight.dec()
-        ok = latency_ms < latlib.OFFLINE_MS
-        self._record_outcome(replica_idx, ok)
-        self._observe(replica_idx, latency_ms)
         if self.adaptive:
             fifo = self._pending_feats.get(replica_idx)
-            feats = fifo.pop(0) if fifo else None
-            self.router.observe_outcome(latency_ms, ok=ok, feats=feats)
-            self._publish_adapt(self.router.state)
-        return self._account(RouteResult(
-            replica_idx=replica_idx, latency_ms=latency_ms, ok=ok,
-            expertise=0.0, network=0.0,
-        ))
+            if fifo:
+                fifo.pop(0)
+        return True
 
     def route(
-        self, request_text: str, client_region: Optional[int] = None
+        self, request_text: str, client_region: Optional[int] = None,
+        session_id: Optional[int] = None,
     ) -> RouteResult:
+        aff = self._session_affinity(session_id)
         with self.obs.tracer.span("route", cat="gateway"):
             decision = self.router.select(
                 request_text, self.telemetry, self._utilization(),
                 failed_mask=self._health_mask(),
                 client_rtt_ms=self._rtt_row(client_region),
                 audit=self.obs.audit_tap,
+                **({} if aff is None else {"affinity": aff}),
             )
         idx = decision.server_idx
         if self.executor is not None:
@@ -524,6 +607,7 @@ class SonarGateway:
         ok = latency < latlib.OFFLINE_MS
         self._record_outcome(idx, ok)
         self._observe(idx, latency)
+        self._session_touch(session_id, idx, ok)
         if self.adaptive:
             # Synchronous path: the router's `last_feats` stash is still the
             # decision we just executed.
@@ -558,6 +642,7 @@ class SonarGateway:
         request_texts: Sequence[str],
         client_regions: Optional[Sequence[int]] = None,
         pad_to: Optional[int] = None,
+        session_ids: Optional[Sequence] = None,
     ) -> list:
         """Fleet-scale batched routing: the request batch runs through the
         jit-compiled engine (two-stage BM25 + Pallas QoS + fused selection)
@@ -597,6 +682,7 @@ class SonarGateway:
                 self.route(
                     t,
                     None if client_regions is None else client_regions[i],
+                    None if session_ids is None else session_ids[i],
                 )
                 for i, t in enumerate(request_texts)
             ]
@@ -608,6 +694,10 @@ class SonarGateway:
         )
         regions_arr = (
             np.asarray(client_regions, np.int32) if use_geo else None
+        )
+        use_aff = (
+            session_ids is not None
+            and getattr(self.router, "uses_affinity", False)
         )
         t_phase = time.perf_counter()
         enc = eng.encode(request_texts)
@@ -638,10 +728,26 @@ class SonarGateway:
                 geo_kw = dict(
                     client_region=reg, region_rtt_ms=self.region_rtt_ms
                 )
+            aff = None
+            if use_aff:
+                # per-request warmth rows [sub.n, n_replicas]: cold /
+                # session-less / padded rows stay zero; an all-zero
+                # matrix is dropped so affinity-free chunks keep the
+                # exact historical scoring graph (byte-identity gate)
+                aff = np.zeros((sub.n, len(self.replicas)), np.float32)
+                warm_any = False
+                for qi in range(n_chunk):
+                    row = self._session_affinity(session_ids[lo + qi])
+                    if row is not None:
+                        aff[qi] = row
+                        warm_any = True
+                if not warm_any:
+                    aff = None
             t_phase = time.perf_counter()
             dec = eng.route(
                 sub, self._telemetry.raw(), self._utilization(),
                 failed_mask=mask,
+                affinity=aff,
                 route_stats=self._route_stats,
                 n_real=n_chunk if sub.n != n_chunk else None,
                 **geo_kw,
@@ -660,14 +766,16 @@ class SonarGateway:
                     )
                 self.in_flight[idx] += 1.0
                 self._m_in_flight.inc()
-                picks.append((idx, expertise, network, feats))
+                sid = None if session_ids is None else session_ids[lo + qi]
+                picks.append((idx, expertise, network, feats, sid))
         t_phase = time.perf_counter()
         out = []
-        for idx, expertise, network, feats in picks:
+        for idx, expertise, network, feats, sid in picks:
             latency = float(self.traces[idx, min(self.t, self.traces.shape[1] - 1)])
             ok = latency < latlib.OFFLINE_MS
             self._record_outcome(idx, ok)
             self._observe(idx, latency)
+            self._session_touch(sid, idx, ok)
             if feats is not None:
                 eng.observe_feedback(latency, ok=ok, feats=feats)
             self.in_flight[idx] = max(self.in_flight[idx] - 1.0, 0.0)
@@ -703,6 +811,7 @@ class SonarGateway:
             "p99_ms": self._m_latency.p99,
             "failure_rate": self._m_failures.value / n if n else 0.0,
             "in_flight": self._m_in_flight.value,
+            "unmatched_finish": self._m_unmatched.value,
             "ejected": self._m_ejected.value,
             "ejections": self._m_ejections.value,
             "readmissions": self._m_readmissions.value,

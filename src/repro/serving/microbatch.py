@@ -384,9 +384,15 @@ class MicroBatchPump:
             [r.region for r in batch]
             if any(r.region >= 0 for r in batch) else None
         )
+        sids = (
+            [r.session_id for r in batch]
+            if any(r.session_id is not None for r in batch) else None
+        )
         pad = self.policy.max_batch if self.policy.pad_batches else None
         t0 = time.perf_counter()
-        routed = self.gw.route_batch(texts, client_regions=regions, pad_to=pad)
+        routed = self.gw.route_batch(
+            texts, client_regions=regions, pad_to=pad, session_ids=sids
+        )
         wall_ms = 1000.0 * (time.perf_counter() - t0)
         # device-stat fold boundary — after the timed window, so the
         # deferred jit dispatches never land in a measured flush

@@ -1,0 +1,45 @@
+"""Session-DAG agent workloads + affinity-aware session routing.
+
+An agentic "task" is not one request: it is a small DAG of tool calls —
+plan, fan out sub-queries, join, verify — where each node becomes
+routable only when its parents complete.  This package turns the fleet
+simulator's open-loop request stream into session workloads:
+
+  - `dag`    — session-DAG templates (chain / fan-out–fan-in /
+               retry-loop / map-reduce), a jax-seeded generator that
+               composes with `traffic.arrivals`, and critical-path
+               extraction for DAG-aware hedging;
+  - `warmth` — per-(session, server) sticky-affinity state with
+               exponential decay, the W term of SONAR-SESSION;
+  - `sim`    — `SessionTrafficSim`, the discrete-event simulator
+               extension that releases DAG nodes on parent completion
+               and accounts success/latency at the *task* level.
+"""
+from repro.sessions.dag import (
+    DAG_TEMPLATES,
+    SessionDAG,
+    SessionNode,
+    chain,
+    critical_path,
+    fanout_fanin,
+    generate_sessions,
+    map_reduce,
+    retry_loop,
+)
+from repro.sessions.sim import SessionReport, SessionTrafficSim
+from repro.sessions.warmth import WarmthTracker
+
+__all__ = [
+    "DAG_TEMPLATES",
+    "SessionDAG",
+    "SessionNode",
+    "SessionReport",
+    "SessionTrafficSim",
+    "WarmthTracker",
+    "chain",
+    "critical_path",
+    "fanout_fanin",
+    "generate_sessions",
+    "map_reduce",
+    "retry_loop",
+]

@@ -73,6 +73,10 @@ class Request:
     t_arrival_ms: float
     budget: int                  # remaining retry/hedge budget
     region: int = -1             # client region (geo); -1 = untagged
+    session_id: int = -1         # owning session DAG; -1 = standalone
+    node_id: int = -1            # node within the session DAG
+    hedge_ok: bool = True        # DAG-aware hedging: only critical-path
+                                 # nodes are allowed to duplicate work
     done: bool = False
     failed: bool = False
     live_copies: int = 0
@@ -215,7 +219,8 @@ class FleetTrafficSim:
         return self._win
 
     def _route(self, text: str, now_ms: float, failed: set = frozenset(),
-               region: int = -1) -> int:
+               region: int = -1,
+               affinity: Optional[np.ndarray] = None) -> int:
         tick = self._tick(now_ms)
         hist = self._window(tick)
         loads = self._loads()
@@ -231,8 +236,17 @@ class FleetTrafficSim:
                 rtt = self.platform.client_rtt_ms(region, tick)
                 if rtt is not None:
                     kwargs["client_rtt_ms"] = rtt
+            if getattr(self.router, "uses_affinity", False) \
+                    and affinity is not None:
+                kwargs["affinity"] = affinity
             return self.router.select(text, hist, loads, **kwargs).server_idx
         return int(self.router(text, hist, loads))
+
+    def _affinity(self, req: Request, now_ms: float) -> Optional[np.ndarray]:
+        """Per-request session-warmth vector for affinity-aware routers.
+        The base sim carries no session state; `sessions.sim` overrides
+        this with the live `WarmthTracker` read."""
+        return None
 
     def _fail_copy(self, req: Request, server: int, now_ms: float,
                    exclude: frozenset, server_dead: bool = False) -> None:
@@ -272,7 +286,8 @@ class FleetTrafficSim:
 
     # -- event handlers ------------------------------------------------------
     def _dispatch(self, req: Request, now_ms: float, exclude: frozenset = frozenset()):
-        server = self._route(req.text, now_ms, req.failed_servers, req.region)
+        server = self._route(req.text, now_ms, req.failed_servers, req.region,
+                             self._affinity(req, now_ms))
         req.n_routes += 1
         self._m_routes.inc()
         # SONAR-ADAPT credit assignment: stash the winner features of the
@@ -304,7 +319,7 @@ class FleetTrafficSim:
             self._start_service(disp, now_ms)
         elif outcome == "queued":
             req.live_copies += 1
-            if self.hedge_ms is not None and not req.hedged:
+            if self.hedge_ms is not None and not req.hedged and req.hedge_ok:
                 self._push(now_ms + self.hedge_ms, _HEDGE, req)
         else:  # dropped — waiting room full: an outage event, fed forward
             # so network-aware routers see the saturated station
@@ -372,7 +387,7 @@ class FleetTrafficSim:
                         req.live_copies -= 1
 
     def _hedge(self, req: Request, now_ms: float) -> None:
-        if req.done or req.failed or req.budget <= 0:
+        if req.done or req.failed or req.budget <= 0 or not req.hedge_ok:
             return
         waiting = any(
             item.req is req for q in self.queues for item in q.waiting

@@ -47,6 +47,10 @@ class LiveRequest:
     region : int
         Client region index for locality-aware routing (``-1`` =
         untagged, the convention shared with `traffic.simulator.Request`).
+    session_id : int, optional
+        Agent-session tag for sticky-affinity routing (``None`` =
+        session-less; affinity-aware algorithms see the session's warmth
+        vector when set, everyone else ignores it).
     """
 
     rid: int
@@ -54,6 +58,7 @@ class LiveRequest:
     t_ms: float
     deadline_ms: Optional[float] = None
     region: int = -1
+    session_id: Optional[int] = None
 
 
 def request_schedule(

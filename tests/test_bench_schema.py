@@ -44,7 +44,7 @@ def test_known_schemas_cover_all_artifacts():
     assert sorted(SCHEMAS) == [
         "adaptive-routing", "bench-results", "chaos-recovery", "geo-routing",
         "mega-fleet", "obs-overhead", "offered-load", "serve-metrics",
-        "serve-trace", "serving-qps",
+        "serve-trace", "serving-qps", "session-routing",
     ]
     assert schema_name_for("some/dir/geo-routing.json") == "geo-routing"
     assert schema_name_for("ci/adaptive-routing.json") == "adaptive-routing"
@@ -52,6 +52,7 @@ def test_known_schemas_cover_all_artifacts():
     assert schema_name_for("BENCH_serving_qps.json") == "serving-qps"
     assert schema_name_for("repo/BENCH_mega_fleet.json") == "mega-fleet"
     assert schema_name_for("BENCH_obs_overhead.json") == "obs-overhead"
+    assert schema_name_for("BENCH_session_routing.json") == "session-routing"
     assert schema_name_for("ci/serve-trace.json") == "serve-trace"
     assert schema_name_for("ci/serve-metrics.json") == "serve-metrics"
 
@@ -87,6 +88,37 @@ def test_serving_qps_schema_and_conservation():
 
 def test_valid_geo_payload_passes():
     assert validate_artifact("geo-routing", GOOD_GEO) == []
+
+
+GOOD_SESSION = {
+    "n_replicas": 6,
+    "queue": {"capacity": 4, "queue_limit": 16, "base_service_ms": 200.0},
+    "horizon_s": 60.0,
+    "points": [
+        {"algo": "sonar", "session_rate": 9.0, "n_sessions": 540,
+         "task_success_rate": 0.991, "task_p50_ms": 2229.0,
+         "task_p99_ms": 5160.0, "task_mean_ms": 2400.0, "tasks_failed": 5,
+         "nodes_offered": 2300, "nodes_completed": 2290, "nodes_failed": 10,
+         "nodes_abandoned": 11, "n_hedges": 1494},
+        {"algo": "sonar_session", "session_rate": 9.0, "n_sessions": 540,
+         "task_success_rate": 1.0, "task_p50_ms": 793.0,
+         "task_p99_ms": 2372.0, "task_mean_ms": 900.0, "tasks_failed": 0,
+         "nodes_offered": 2311, "nodes_completed": 2311, "nodes_failed": 0,
+         "nodes_abandoned": 0, "n_hedges": 1},
+    ],
+}
+
+
+def test_session_routing_schema_and_node_conservation():
+    assert validate_artifact("session-routing", GOOD_SESSION) == []
+    bad = json.loads(json.dumps(GOOD_SESSION))
+    bad["points"][0]["nodes_completed"] = 2289   # breaks offered == c + f
+    errs = validate_artifact("session-routing", bad)
+    assert any("nodes_offered != completed + failed" in e for e in errs)
+    bad2 = json.loads(json.dumps(GOOD_SESSION))
+    del bad2["points"][1]["task_p99_ms"]
+    errs = validate_artifact("session-routing", bad2)
+    assert any("task_p99_ms" in e for e in errs)
 
 
 def test_missing_key_and_type_violations_are_reported():

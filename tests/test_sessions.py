@@ -1,0 +1,513 @@
+"""Session-DAG workloads and SONAR-SESSION sticky-affinity routing.
+
+Covers: DAG template shapes + topological order, deterministic critical
+paths, the jax-seeded session generator, warmth decay/pruning, task-level
+accounting (node conservation, abandon semantics), the warm-context
+service discount, DAG-aware hedging, the four-path parity of
+``sonar_session`` (including the zero-affinity byte-identity reduction to
+``sonar_geo``), and the gateway's session threading + accounting fixes
+(in-flight/gauge lockstep, begin/finish spans, pending-feats expiry).
+"""
+import jax
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import dataset, routing
+from repro.core.batch_routing import BatchRoutingEngine
+from repro.core.latency import OFFLINE_MS
+from repro.core.mesh_routing import ShardedRoutingEngine
+from repro.core.routing import RoutingConfig
+from repro.obs import Observability
+from repro.sessions import (
+    DAG_TEMPLATES,
+    SessionTrafficSim,
+    WarmthTracker,
+    chain,
+    critical_path,
+    fanout_fanin,
+    generate_sessions,
+    map_reduce,
+    retry_loop,
+)
+from repro.traffic import QueueConfig, ideal_platform, replica_fleet
+
+POOL = dataset.build_server_pool(seed=0)
+QUERY_TEXTS = [
+    "search the web for the latest news",
+    "refactor this function in the repository",
+    "what is the weather forecast tomorrow",
+    "summarize this long research document",
+]
+
+
+# ---------------------------------------------------------------------------
+# DAG templates + critical path
+# ---------------------------------------------------------------------------
+
+def test_templates_are_topological_with_single_root_and_sink():
+    dags = [
+        chain(0, QUERY_TEXTS, n_steps=4),
+        fanout_fanin(1, QUERY_TEXTS, width=3),
+        retry_loop(2, QUERY_TEXTS, n_steps=3),
+        map_reduce(3, QUERY_TEXTS, width=3, n_reduce=2),
+    ]
+    assert set(DAG_TEMPLATES) == {
+        "chain", "fanout_fanin", "retry_loop", "map_reduce"
+    }
+    for dag in dags:
+        # __post_init__ already asserts parents[j] < j; check the shape
+        assert dag.roots() == [0]
+        children = dag.children()
+        sinks = [n.node_id for n in dag.nodes if not children[n.node_id]]
+        assert sinks == [dag.n_nodes - 1]
+
+
+def test_chain_and_retry_loop_critical_path_is_everything():
+    for dag in (chain(0, QUERY_TEXTS, n_steps=5),
+                retry_loop(1, QUERY_TEXTS, n_steps=2)):
+        assert critical_path(dag) == frozenset(range(dag.n_nodes))
+
+
+def test_fanout_critical_path_takes_lowest_id_branch():
+    dag = fanout_fanin(0, QUERY_TEXTS, width=4)
+    # root -> first parallel node -> sink, deterministically
+    assert critical_path(dag) == frozenset({0, 1, 5})
+    mr = map_reduce(1, QUERY_TEXTS, width=3, n_reduce=2)
+    # split -> mapper 1 -> reducer 4 -> merge
+    assert critical_path(mr) == frozenset({0, 1, 4, 6})
+
+
+def test_generate_sessions_deterministic_and_composes_with_arrivals():
+    kw = dict(rate=1.5, horizon_s=40.0, texts=QUERY_TEXTS,
+              regions=np.array([0, 1, 2]))
+    a = generate_sessions(jax.random.PRNGKey(7), **kw)
+    b = generate_sessions(jax.random.PRNGKey(7), **kw)
+    c = generate_sessions(jax.random.PRNGKey(8), **kw)
+    assert len(a) == len(b) > 0
+    for da, db in zip(a, b):
+        assert (da.template, da.n_nodes, da.t_arrival_s, da.region) == (
+            db.template, db.n_nodes, db.t_arrival_s, db.region
+        )
+        assert [n.text for n in da.nodes] == [n.text for n in db.nodes]
+    assert any(
+        da.t_arrival_s != dc.t_arrival_s for da, dc in zip(a, c)
+    ), "different keys must give different workloads"
+    arr = [d.t_arrival_s for d in a]
+    assert arr == sorted(arr) and arr[-1] < 40.0
+    assert {d.template for d in a} == set(DAG_TEMPLATES)
+    assert all(d.region in (0, 1, 2) for d in a)
+    # any registered arrival process slots in
+    mmpp = generate_sessions(
+        jax.random.PRNGKey(7), 1.5, 40.0, QUERY_TEXTS,
+        arrival_process="mmpp", burst_factor=6.0,
+    )
+    assert len(mmpp) > 0
+
+
+# ---------------------------------------------------------------------------
+# Warmth
+# ---------------------------------------------------------------------------
+
+def test_warmth_decays_by_half_life_and_prunes():
+    w = WarmthTracker(4, half_life_ms=100.0, floor=1e-3)
+    assert w.warmth(5, 0.0) is None          # untracked: exact-zero path
+    w.touch(5, 2, 0.0)
+    np.testing.assert_array_equal(w.warmth(5, 0.0), [0, 0, 1, 0])
+    got = w.warmth(5, 100.0)
+    assert got[2] == pytest.approx(0.5) and got.max() == got[2]
+    w.touch(5, 1, 100.0)                     # second server joins warm set
+    got = w.warmth(5, 200.0)
+    assert got[1] == pytest.approx(0.5) and got[2] == pytest.approx(0.25)
+    assert w.warmth(5, 5000.0) is None       # fully cooled: pruned
+    assert len(w) == 0
+    w.touch(6, 0, 0.0)
+    w.forget(6)
+    assert len(w) == 0 and w.warmth(6, 0.0) is None
+
+
+# ---------------------------------------------------------------------------
+# Session simulator: conservation, abandonment, warm discount, hedging
+# ---------------------------------------------------------------------------
+
+def _session_sim(n_servers=4, algo="sonar_session", queue_limit=64,
+                 retry_budget=2, hedge_ms=None, horizon_s=240.0, **kw):
+    servers = replica_fleet(n_servers)
+    plat = ideal_platform(servers, seed=0, horizon_s=4.0 * horizon_s)
+    router = routing.make_router(
+        algo, servers, RoutingConfig(top_s=min(4, n_servers), top_k=4)
+    )
+    return SessionTrafficSim(
+        plat, router,
+        QueueConfig(capacity=2, queue_limit=queue_limit,
+                    base_service_ms=120.0),
+        retry_budget=retry_budget, hedge_ms=hedge_ms, seed=0, **kw,
+    )
+
+
+def _workload(rate=0.8, horizon_s=240.0, key=3, **kw):
+    return generate_sessions(
+        jax.random.PRNGKey(key), rate, horizon_s, QUERY_TEXTS, **kw
+    )
+
+
+def test_session_sim_conserves_nodes_and_settles_every_task():
+    sim = _session_sim()
+    rep = sim.run_sessions(_workload())
+    rep.check_accounting()                   # offered == completed+failed
+    assert rep.n_sessions > 20
+    total = (rep.n_nodes_completed + rep.n_nodes_failed
+             + rep.n_nodes_abandoned)
+    assert total == sum(d.n_nodes for d in _workload())
+    assert set(rep.per_template) <= set(DAG_TEMPLATES)
+    # registry mirrors the report tallies
+    reg = sim.obs.registry
+    assert reg.value("task_offered_total") == rep.n_sessions
+    assert reg.value("task_completed_total") == rep.n_tasks_succeeded
+    assert reg.value("task_failed_total") == rep.n_tasks_failed
+    assert reg.value("task_nodes_released_total") == rep.n_nodes_offered
+    assert reg.value("task_nodes_abandoned_total") == rep.n_nodes_abandoned
+
+
+def test_session_sim_deterministic_replay():
+    a = _session_sim().run_sessions(_workload())
+    b = _session_sim().run_sessions(_workload())
+    assert a.task_success_rate == b.task_success_rate
+    assert a.task_p99_ms == b.task_p99_ms
+    assert [r.server_idx for r in a.requests] == [
+        r.server_idx for r in b.requests
+    ]
+
+
+def test_failed_node_abandons_descendants_not_ancestors():
+    # tiny queues + no retries under overload: plenty of node failures
+    sim = _session_sim(n_servers=2, queue_limit=2, retry_budget=0)
+    rep = sim.run_sessions(_workload(rate=3.0, key=5))
+    assert rep.n_tasks_failed > 0 and rep.n_nodes_abandoned > 0
+    abandoned = [r for r in rep.requests if r.node_id >= 0
+                 and not r.done and not r.failed and r.n_routes == 0]
+    # every abandoned node was never offered to the fleet
+    assert len(abandoned) == rep.n_nodes_abandoned
+    # a successful task abandons nothing: its nodes all completed
+    by_sid: dict = {}
+    for r in rep.requests:
+        by_sid.setdefault(r.session_id, []).append(r)
+    for sid, reqs in by_sid.items():
+        if all(r.done for r in reqs):
+            continue
+        assert any(r.failed for r in reqs) or any(
+            not r.done and r.n_routes == 0 for r in reqs
+        )
+
+
+def test_warm_context_discount_speeds_up_sticky_sessions():
+    """With warm_speedup < 1 a chain session re-hitting the same server
+    runs faster than the identical cold-fleet run."""
+    sessions = [chain(i, QUERY_TEXTS, n_steps=5) for i in range(12)]
+    for i, s in enumerate(sessions):
+        s.t_arrival_s = 6.0 * i
+    warm = _session_sim(n_servers=2, warm_speedup=0.5,
+                        warmth_half_life_ms=60_000.0)
+    cold = _session_sim(n_servers=2, warm_speedup=1.0,
+                        warmth_half_life_ms=60_000.0)
+    rw = warm.run_sessions(sessions)
+    rc = cold.run_sessions(sessions)
+    assert rw.task_success_rate == rc.task_success_rate == 1.0
+    assert rw.task_mean_ms < rc.task_mean_ms
+
+
+def test_hedging_is_restricted_to_critical_path_nodes():
+    sim = _session_sim(n_servers=3, hedge_ms=30.0, queue_limit=8)
+    rep = sim.run_sessions(_workload(rate=2.5, key=9))
+    rep.check_accounting()
+    hedged = [r for r in rep.requests if r.n_hedges > 0]
+    assert all(r.hedge_ok for r in hedged), (
+        "only critical-path nodes may hedge"
+    )
+    off_path = [r for r in rep.requests if not r.hedge_ok]
+    assert off_path, "workload should contain off-critical-path nodes"
+    assert all(r.n_hedges == 0 for r in off_path)
+
+
+# ---------------------------------------------------------------------------
+# SONAR-SESSION four-path parity
+# ---------------------------------------------------------------------------
+
+def _materialize(seed, n_servers, identical):
+    rng = np.random.default_rng(seed)
+    if identical:
+        servers = replica_fleet(n_servers)
+    else:
+        pick = rng.choice(len(POOL), size=n_servers, replace=False)
+        servers = [POOL[i] for i in pick]
+    hist = rng.uniform(5.0, 400.0, size=(n_servers, 24)).astype(np.float32)
+    down = rng.random(n_servers) < 0.2
+    hist[down, -1] = OFFLINE_MS + 50.0
+    load = (rng.random(n_servers) * 2.0).astype(np.float32)
+    rtt = (rng.random(n_servers) * 500.0).astype(np.float32)
+    aff = rng.random((len(QUERY_TEXTS), n_servers)).astype(np.float32)
+    aff[rng.random(len(QUERY_TEXTS)) < 0.3] = 0.0    # some cold rows
+    return servers, hist, load, rtt, aff
+
+
+def _four_paths(servers, cfg, algo, index):
+    yield "batch(jnp)", BatchRoutingEngine(
+        servers, cfg, algo=algo, use_kernels=False, index=index
+    )
+    yield "batch(kernels)", BatchRoutingEngine(
+        servers, cfg, algo=algo, use_kernels=True, interpret=True,
+        index=index,
+    )
+    yield "sharded", ShardedRoutingEngine(
+        servers, cfg, algo=algo, n_shards=min(3, len(servers)),
+        use_kernels=False, index=index,
+    )
+
+
+@settings(max_examples=8, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    n_servers=st.integers(2, 6),
+    identical=st.booleans(),
+)
+def test_zero_affinity_session_byte_identical_to_sonar_geo(
+    seed, n_servers, identical
+):
+    """Acceptance gate: with no affinity operand SONAR-SESSION is
+    byte-identical to SONAR-GEO on every decision field across all four
+    routing paths — the ``+eps*W`` term compiles away entirely."""
+    servers, hist, load, rtt, _aff = _materialize(seed, n_servers, identical)
+    cfg = RoutingConfig(top_s=min(4, n_servers), top_k=5)
+    r_geo = routing.make_router("sonar_geo", servers, cfg)
+    r_ses = routing.make_router("sonar_session", servers, cfg)
+    for q in QUERY_TEXTS:
+        a = r_geo.select(q, hist, load, client_rtt_ms=rtt)
+        b = r_ses.select(q, hist, load, client_rtt_ms=rtt)
+        assert (
+            a.server_idx, a.tool_idx, a.expertise, a.network, a.fused
+        ) == (b.server_idx, b.tool_idx, b.expertise, b.network, b.fused)
+    for (label, e_geo), (_, e_ses) in zip(
+        _four_paths(servers, cfg, "sonar_geo", r_geo.index),
+        _four_paths(servers, cfg, "sonar_session", r_geo.index),
+    ):
+        da = e_geo.route_texts(QUERY_TEXTS, hist, load, None, None, rtt)
+        db = e_ses.route_texts(QUERY_TEXTS, hist, load, None, None, rtt)
+        for field in ("server_idx", "tool_idx", "expertise", "network",
+                      "fused"):
+            np.testing.assert_array_equal(
+                getattr(da, field), getattr(db, field),
+                err_msg=f"{label} field={field}",
+            )
+
+
+@settings(max_examples=8, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    n_servers=st.integers(2, 6),
+    identical=st.booleans(),
+    broadcast=st.booleans(),     # one shared warmth row vs per-query rows
+)
+def test_sonar_session_affinity_parity_four_paths(
+    seed, n_servers, identical, broadcast
+):
+    """With a live affinity operand, scalar select, the jit engine, the
+    fused Pallas path and the mesh-sharded engine agree on every decision
+    field — warmth rides as data, so no path recompiles or diverges."""
+    servers, hist, load, rtt, aff = _materialize(seed, n_servers, identical)
+    if broadcast:
+        aff = np.broadcast_to(aff[0], aff.shape).copy()
+    cfg = RoutingConfig(top_s=min(4, n_servers), top_k=5)
+    router = routing.make_router("sonar_session", servers, cfg)
+    scalar = []
+    for i, q in enumerate(QUERY_TEXTS):
+        d = router.select(
+            q, hist, load, client_rtt_ms=rtt, affinity=aff[i]
+        )
+        scalar.append(d)
+    eng_aff = aff[0] if broadcast else aff        # exercise 1D and 2D
+    decs = []
+    for label, eng in _four_paths(servers, cfg, "sonar_session",
+                                  router.index):
+        dec = eng.route_texts(
+            QUERY_TEXTS, hist, load, None, None, rtt, affinity=eng_aff
+        )
+        decs.append((label, dec))
+        for i, d in enumerate(scalar):
+            got = (int(dec.server_idx[i]), int(dec.tool_idx[i]))
+            assert got == (d.server_idx, d.tool_idx), (
+                f"{label} query={i}: {got} != "
+                f"{(d.server_idx, d.tool_idx)}"
+            )
+            # scalar numpy and the jit/fused paths may associate the
+            # +eps*W add differently (ulp-level slack, same as the other
+            # cross-path score comparisons); the argmax contract is exact
+            np.testing.assert_allclose(
+                np.float32(dec.fused[i]), np.float32(d.fused),
+                rtol=1e-4, atol=1e-6, err_msg=f"{label} query={i} fused",
+            )
+    # every batched path picks the same winners
+    ref_label, ref = decs[0]
+    for label, dec in decs[1:]:
+        for field in ("server_idx", "tool_idx"):
+            np.testing.assert_array_equal(
+                getattr(ref, field), getattr(dec, field),
+                err_msg=f"{ref_label} vs {label} field={field}",
+            )
+
+
+def test_sonar_session_sticks_to_warm_server_on_ties():
+    """Identical replicas + identical telemetry: the warmth bonus is the
+    only tiebreaker, so the warm server must win."""
+    servers = replica_fleet(5)
+    hist = np.full((5, 16), 50.0, np.float32)
+    load = np.zeros(5, np.float32)
+    # top_k covers every replica's tool: affinity re-ranks candidates,
+    # it never resurrects tools stage 2 already truncated away
+    cfg = RoutingConfig(top_s=5, top_k=8)
+    router = routing.make_router("sonar_session", servers, cfg)
+    cold = router.select(QUERY_TEXTS[0], hist, load)
+    for warm_idx in range(5):
+        aff = np.zeros(5, np.float32)
+        aff[warm_idx] = 1.0
+        d = router.select(QUERY_TEXTS[0], hist, load, affinity=aff)
+        assert d.server_idx == warm_idx, (
+            f"warm server {warm_idx} lost the tie to {d.server_idx}"
+        )
+        assert d.fused >= cold.fused
+
+
+# ---------------------------------------------------------------------------
+# Gateway: session threading + accounting fixes
+# ---------------------------------------------------------------------------
+
+def _gateway(algo="sonar_session", n=4, **kw):
+    from repro.serving.gateway import SonarGateway
+    servers = replica_fleet(n)
+    return SonarGateway(
+        servers, algo=algo, cfg=RoutingConfig(top_s=4, top_k=4), **kw
+    )
+
+
+def test_gateway_finish_gauge_moves_in_lockstep_with_array():
+    """Regression (accounting desync): an unmatched finish used to clamp
+    the in-flight array at 0 but still decrement the gauge, driving it
+    negative.  Now both stay put and the finish is counted + rejected."""
+    gw = _gateway(algo="sonar_lb")
+    r = gw.begin("generate text")
+    assert gw.finish(r.replica_idx, 25.0) is not None
+    for _ in range(3):                       # double/triple finish: rejected
+        assert gw.finish(r.replica_idx, 25.0) is None
+    rep = gw.report()
+    assert rep["in_flight"] == 0.0, "gauge must never go negative"
+    assert rep["unmatched_finish"] == 3.0
+    assert np.all(gw.in_flight == 0.0)
+    assert rep["n"] == 1                     # rejected finishes not accounted
+    # finishes on a replica that never began are rejected too
+    assert gw.finish(0, 10.0) is None and gw.report()["in_flight"] == 0.0
+
+
+def test_gateway_begin_and_finish_emit_gateway_spans():
+    """Regression: route() traced its selection but begin() didn't; the
+    begin/finish path now tiles the gateway track the same way."""
+    gw = _gateway(algo="sonar_lb", obs=Observability(trace=True))
+    r = gw.begin("generate text")
+    gw.finish(r.replica_idx, 25.0)
+    gw.finish(r.replica_idx, 25.0)           # unmatched: instant, no span
+    gw.route("generate text")
+    events = gw.obs.tracer.events
+    spans = [e for e in events if e.get("cat") == "gateway"]
+    names = [e["name"] for e in spans]
+    assert names.count("begin") == 1
+    assert names.count("finish") == 1        # the rejected finish: no span
+    assert names.count("route") == 1
+    for e in spans:
+        if e["ph"] == "X":
+            assert e["dur"] >= 0.0
+    assert any(
+        e["name"] == "unmatched_finish" for e in events
+    )
+
+
+def test_gateway_abandon_releases_slot_and_expires_feats():
+    gw = _gateway(algo="sonar_adapt")
+    assert gw.adaptive
+    a = gw.begin("generate text")
+    b = gw.begin("generate text")
+    outstanding = {a.replica_idx: 0, b.replica_idx: 0}
+    for r in (a, b):
+        outstanding[r.replica_idx] += 1
+    assert gw.abandon(a.replica_idx) is True
+    outstanding[a.replica_idx] -= 1
+    fifo = gw._pending_feats.get(a.replica_idx, [])
+    assert len(fifo) == outstanding[a.replica_idx]
+    assert float(gw.in_flight.sum()) == sum(outstanding.values())
+    assert gw.report()["in_flight"] == float(gw.in_flight.sum())
+    # abandoning an idle replica is rejected, not under-flowed
+    idle = next(i for i in range(4) if gw.in_flight[i] == 0.0)
+    assert gw.abandon(idle) is False
+    assert gw.report()["in_flight"] == float(gw.in_flight.sum())
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    ops=st.lists(st.sampled_from(["begin", "finish", "abandon"]),
+                 min_size=1, max_size=40),
+)
+def test_gateway_feats_pairing_under_interleaved_begin_shed_finish(
+    seed, ops
+):
+    """Property (adaptive credit assignment): under any interleaving of
+    begin / abandon (shed) / finish, per-replica pending-feats depth
+    always equals the replica's outstanding in-flight count, the gauge
+    equals the array sum, and neither ever goes negative."""
+    gw = _gateway(algo="sonar_adapt")
+    rng = np.random.default_rng(seed)
+    n = len(gw.replicas)
+    for op in ops:
+        if op == "begin":
+            gw.begin("generate text")
+        else:
+            idx = int(rng.integers(n))
+            if op == "finish":
+                gw.finish(idx, float(rng.uniform(5.0, 80.0)))
+            else:
+                gw.abandon(idx)
+        assert np.all(gw.in_flight >= 0.0)
+        assert gw.report()["in_flight"] == float(gw.in_flight.sum())
+        for idx in range(n):
+            fifo = gw._pending_feats.get(idx, [])
+            assert len(fifo) == int(gw.in_flight[idx]), (
+                f"replica {idx}: feats depth {len(fifo)} != "
+                f"outstanding {gw.in_flight[idx]}"
+            )
+
+
+def test_gateway_session_affinity_is_sticky_end_to_end():
+    """A session's completions warm the winning replica; identical
+    replicas then keep routing the session there across begin/finish,
+    route, and route_batch."""
+    gw = _gateway(algo="sonar_session", use_kernels=True)
+    first = gw.begin("generate text", session_id=11)
+    gw.finish(first.replica_idx, 20.0, session_id=11)
+    again = gw.route("generate text", session_id=11)
+    assert again.replica_idx == first.replica_idx
+    out = gw.route_batch(["generate text"] * 6,
+                         session_ids=[11, None, 11, 11, None, 11])
+    tagged = [r.replica_idx for r, s in
+              zip(out, [11, None, 11, 11, None, 11]) if s == 11]
+    assert all(idx == first.replica_idx for idx in tagged)
+    # session-less traffic through the same gateway is unaffected state
+    assert np.all(gw.in_flight == 0.0)
+
+
+def test_gateway_sessionless_route_batch_matches_sonar_geo_gateway():
+    """With no session tags a sonar_session gateway routes exactly like
+    a sonar_geo one (the serving-level zero-affinity reduction)."""
+    texts = ["generate text", "search the web", "generate text"] * 3
+    a = _gateway(algo="sonar_geo", use_kernels=True)
+    b = _gateway(algo="sonar_session", use_kernels=True)
+    ra = [r.replica_idx for r in a.route_batch(texts)]
+    rb = [r.replica_idx for r in b.route_batch(texts)]
+    assert ra == rb

@@ -415,3 +415,127 @@ def test_gateway_begin_finish_accounting():
     for idx in picks:
         gw.finish(idx, 25.0)
     assert np.all(gw.in_flight == 0.0)
+
+
+# ---------------------------------------------------------------------------
+# Hedge edge cases: excluded-everywhere dispatch, late-losing siblings
+# ---------------------------------------------------------------------------
+
+def _two_station_sim(draws, hedge_ms=50.0):
+    from repro.traffic.simulator import FleetTrafficSim
+
+    servers = replica_fleet(2)
+    plat = ideal_platform(servers, seed=0, horizon_s=600.0)
+    sim = FleetTrafficSim(
+        plat, lambda text, hist, load: 0,
+        QueueConfig(capacity=1, queue_limit=4, base_service_ms=1.0,
+                    inflation=0.0),
+        hedge_ms=hedge_ms, retry_budget=2, seed=0,
+    )
+    sim._draws = np.asarray(draws, np.float64)
+    sim._draw_i = 0
+    sim._heap, sim._seq = [], 0
+    return sim
+
+
+def _drain(sim):
+    import heapq
+
+    from repro.traffic.simulator import _ARRIVAL, _FINISH
+
+    while sim._heap:
+        _t, _, kind, payload = heapq.heappop(sim._heap)
+        if kind == _ARRIVAL:
+            sim._dispatch(payload, _t)
+        elif kind == _FINISH:
+            sim._finish(payload, _t)
+        else:
+            sim._hedge(payload, _t)
+
+
+def test_dispatch_with_every_station_excluded_is_a_clean_noop():
+    """`_dispatch`'s hedge-placement fallback: when every station is
+    excluded there is nowhere to put the copy — the dispatch must return
+    without offering work, scheduling events, or leaking live copies."""
+    from repro.traffic.simulator import Request
+
+    sim = _two_station_sim([10.0, 10.0])
+    req = Request(rid=0, text="q", t_arrival_ms=0.0, budget=2)
+    sim._dispatch(req, 0.0, exclude=frozenset({0, 1}))
+    assert req.live_copies == 0 and not req.done and not req.failed
+    assert sim._heap == []                      # no FINISH/HEDGE scheduled
+    assert all(q.stats.offered == 0 for q in sim.queues)
+    assert req.n_routes == 1                    # the route itself happened
+
+
+def test_hedge_sibling_finishing_after_primary_does_not_double_complete():
+    """The losing hedge copy is in service when the primary wins: its
+    later FINISH must hit the `req.done` early-return — one completion,
+    one feed-forward record, and the wasted work stays on the queue
+    stats (work conservation)."""
+    from repro.traffic.simulator import _ARRIVAL, Request
+
+    # draws: blocker=60 (pins station 0), primary=10, hedge copy=100
+    sim = _two_station_sim([60.0, 10.0, 100.0], hedge_ms=50.0)
+    blocker = Request(rid=0, text="q", t_arrival_ms=0.0, budget=0)
+    req = Request(rid=1, text="q", t_arrival_ms=0.0, budget=2)
+    sim._push(0.0, _ARRIVAL, blocker)
+    sim._push(0.0, _ARRIVAL, req)
+    _drain(sim)
+    assert req.n_hedges == 1 and req.hedged
+    assert req.done and not req.failed
+    assert req.server_idx == 0                  # the primary won at t=70
+    assert req.live_copies == 0 and blocker.live_copies == 0
+    # exactly one completion per request, even though both copies ran
+    assert sim.obs.registry.value("sim_completed_total") == 2.0
+    served = sum(q.stats.served for q in sim.queues)
+    assert served == 3                          # blocker + primary + waste
+    assert sim.queues[1].stats.served == 1      # the hedge ran to the end
+
+
+def test_hedge_sibling_cancelled_in_queue_when_hedge_wins():
+    """The mirror case: the hedge wins while the primary still waits —
+    the queued sibling is cancelled (no double service, no double
+    completion) and the winner's station is recorded."""
+    from repro.traffic.simulator import _ARRIVAL, Request
+
+    # blocker pins station 0 for 500ms; the hedge (draw 20) wins on 1
+    sim = _two_station_sim([500.0, 10.0, 20.0], hedge_ms=50.0)
+    blocker = Request(rid=0, text="q", t_arrival_ms=0.0, budget=0)
+    req = Request(rid=1, text="q", t_arrival_ms=0.0, budget=2)
+    sim._push(0.0, _ARRIVAL, blocker)
+    sim._push(0.0, _ARRIVAL, req)
+    _drain(sim)
+    assert req.done and req.server_idx == 1
+    assert req.live_copies == 0
+    assert sim.queues[0].stats.served == 1      # only the blocker ran there
+    assert sim.obs.registry.value("sim_completed_total") == 2.0
+
+
+def test_hedged_fleet_conserves_work_and_never_double_completes():
+    """End-to-end invariant sweep under heavy hedging: every request
+    resolves exactly once (done xor failed), no copy leaks, and station
+    work = completions + wasted hedge copies."""
+    servers = replica_fleet(3)
+    plat = ideal_platform(servers, seed=0)
+    cfg = RoutingConfig(top_s=3, top_k=3)
+    router = routing.make_router("sonar", servers, cfg)
+    sim = FleetTrafficSim(
+        plat, router,
+        QueueConfig(capacity=1, queue_limit=6, base_service_ms=400.0),
+        hedge_ms=200.0, retry_budget=2, seed=2,
+    )
+    arr = poisson_arrivals(jax.random.PRNGKey(7), 5.0, 40.0)
+    rep = sim.run(arr, QUERY_TEXTS[:4])
+    assert rep.n_hedges > 0
+    reqs = rep.requests
+    assert all(r.done != r.failed for r in reqs), (
+        "every request resolves exactly once"
+    )
+    assert all(r.live_copies == 0 for r in reqs)
+    assert rep.n_completed == sum(r.done for r in reqs)
+    assert rep.n_completed + rep.n_failed == rep.n_offered
+    assert sim.obs.registry.value("sim_completed_total") == rep.n_completed
+    served = sum(q.stats.served for q in sim.queues)
+    assert served >= rep.n_completed            # wasted copies ran too
+    assert served <= rep.n_completed + rep.n_hedges

@@ -150,6 +150,36 @@ def check_geo_routing(payload: dict) -> list:
     return errs
 
 
+def check_session_routing(payload: dict) -> list:
+    errs = []
+    for k, t in (("n_replicas", int), ("queue", dict), ("horizon_s", NUM)):
+        if k not in payload:
+            errs.append(f"missing key '{k}'")
+        else:
+            errs.extend(_check_type(k, payload[k], t))
+    errs.extend(_check_points(payload, {
+        "algo": str, "session_rate": NUM, "n_sessions": int,
+        "task_success_rate": NUM, "task_p50_ms": NUM, "task_p99_ms": NUM,
+        "task_mean_ms": NUM, "tasks_failed": int, "nodes_offered": int,
+        "nodes_completed": int, "nodes_failed": int, "nodes_abandoned": int,
+        "n_hedges": int,
+    }, min_points=2))
+    # conservation: every DAG node offered is completed or failed
+    # (abandoned descendants were never offered; tracked separately)
+    for i, p in enumerate(payload.get("points") or []):
+        if isinstance(p, dict) and all(
+            isinstance(p.get(k), int)
+            for k in ("nodes_offered", "nodes_completed", "nodes_failed")
+        ):
+            if p["nodes_offered"] != p["nodes_completed"] + p["nodes_failed"]:
+                errs.append(
+                    f"points[{i}]: nodes_offered != completed + failed "
+                    f"({p['nodes_offered']} != {p['nodes_completed']} + "
+                    f"{p['nodes_failed']})"
+                )
+    return errs
+
+
 def check_serving_qps(payload: dict) -> list:
     errs = []
     for k, t in (("algo", str), ("n_replicas", int), ("max_batch", int),
@@ -336,6 +366,7 @@ SCHEMAS: dict = {
     "chaos-recovery": check_chaos_recovery,
     "mega-fleet": check_mega_fleet,
     "geo-routing": check_geo_routing,
+    "session-routing": check_session_routing,
     "adaptive-routing": check_adaptive_routing,
     "serving-qps": check_serving_qps,
     "obs-overhead": check_obs_overhead,

@@ -15,6 +15,9 @@ Supported artifact kinds (inferred from the payload shape):
   (the gate must never pass vacuously).
 * ``serving-qps`` — scalar metrics ``knee.sustained_qps`` and
   ``oracle.oracle_qps`` (higher is better).
+* ``session-routing`` — points matched on ``(algo, session_rate)``,
+  metrics ``task_success_rate`` (higher is better) and ``task_p99_ms``
+  (lower is better).
 
 Usage (CI wires this into the bench-smoke job)::
 
@@ -39,6 +42,9 @@ def _kind(payload: dict) -> str:
         return "serving-qps"
     if "points" in payload and "parity" in payload:
         return "mega-fleet"
+    pts = payload.get("points")
+    if pts and isinstance(pts[0], dict) and "session_rate" in pts[0]:
+        return "session-routing"
     raise SystemExit(f"unrecognized artifact shape (keys: {sorted(payload)})")
 
 
@@ -56,15 +62,30 @@ def _serving_qps_metrics(payload: dict) -> dict:
     }
 
 
+# metric names (last key element) where a rise, not a drop, is a regression
+_LOWER_IS_BETTER = {"task_p99_ms"}
+
+
+def _session_routing_metrics(payload: dict) -> dict:
+    out = {}
+    for p in payload["points"]:
+        key = (p["algo"], p["session_rate"])
+        out[key + ("task_success_rate",)] = float(p["task_success_rate"])
+        out[key + ("task_p99_ms",)] = float(p["task_p99_ms"])
+    return out
+
+
 def compare(fresh: dict, baseline: dict, max_regression: float) -> list:
     """Return a list of failure strings (empty = gate green); prints the
     per-metric trend table as a side effect."""
     kind = _kind(fresh)
     if _kind(baseline) != kind:
         return [f"artifact kinds differ: fresh={kind}"]
-    extract = (
-        _mega_fleet_metrics if kind == "mega-fleet" else _serving_qps_metrics
-    )
+    extract = {
+        "mega-fleet": _mega_fleet_metrics,
+        "serving-qps": _serving_qps_metrics,
+        "session-routing": _session_routing_metrics,
+    }[kind]
     f_m, b_m = extract(fresh), extract(baseline)
     matched = sorted(set(f_m) & set(b_m))
     failures = []
@@ -74,13 +95,15 @@ def compare(fresh: dict, baseline: dict, max_regression: float) -> list:
     for key in matched:
         base, new = b_m[key], f_m[key]
         delta = (new - base) / base if base else float("inf")
-        verdict = "ok" if delta >= -max_regression else "REGRESSION"
-        print(f"  {kind} {key}: baseline={base:.1f} fresh={new:.1f} "
+        lower = key[-1] in _LOWER_IS_BETTER
+        bad = delta > max_regression if lower else delta < -max_regression
+        verdict = "REGRESSION" if bad else "ok"
+        print(f"  {kind} {key}: baseline={base:.3f} fresh={new:.3f} "
               f"({delta:+.1%}) {verdict}")
-        if delta < -max_regression:
+        if bad:
             failures.append(
-                f"{kind} {key}: {base:.1f} -> {new:.1f} "
-                f"({delta:+.1%} < -{max_regression:.0%})"
+                f"{kind} {key}: {base:.3f} -> {new:.3f} "
+                f"({delta:+.1%} beyond {max_regression:.0%})"
             )
     for key in sorted(set(f_m) - set(b_m)):
         print(f"  {kind} {key}: new point (no baseline), skipped")
